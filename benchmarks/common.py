@@ -1,0 +1,183 @@
+"""Shared benchmark helpers: cluster/trace regimes + policy runner.
+
+Scaling note (documented per DESIGN.md): the paper simulates 250 servers x
+8 GPUs with 37.5k-150k jobs over two months.  On one CPU core we scale both
+sides down ~25x (10 servers x 8 GPUs, 0.6k-4k jobs, horizon scaled to keep
+the same bursty moderate-load regime: sessions of submissions at ~2 min
+spacing, average load 0.15-0.4, transient congestion during bursts).
+All policies see identical traces and the same Heavy-Edge mapper.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import (
+    ASRPTPolicy,
+    BASELINES,
+    ClusterSpec,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+)
+
+DEFAULT_CLUSTER = dict(
+    num_servers=10, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+)
+# bursty moderate-load regime (see EXPERIMENTS.md §regime)
+SECONDS_PER_JOB = 86.4  # horizon = n_jobs * this  (1.5 days per 1500 jobs)
+
+
+def make_cluster(**overrides) -> ClusterSpec:
+    kw = dict(DEFAULT_CLUSTER)
+    kw.update(overrides)
+    return ClusterSpec(**kw)
+
+
+def make_jobs(
+    n_jobs: int,
+    seed: int = 1,
+    single_gpu_frac: float = 0.7,
+    max_gpus: int = 32,
+    horizon: Optional[float] = None,
+) -> list:
+    cfg = TraceConfig(
+        n_jobs=n_jobs,
+        horizon=horizon or n_jobs * SECONDS_PER_JOB,
+        seed=seed,
+        single_gpu_frac=single_gpu_frac,
+        max_gpus_per_job=max_gpus,
+        mean_iters=400,
+        sigma_iters=1.6,
+        session_spread=120.0,
+    )
+    return generate_trace(cfg)
+
+
+def history_and_window(
+    n_sched: int,
+    seed: int = 1,
+    history_mult: int = 4,
+    cluster: Optional[ClusterSpec] = None,
+    target_load: Optional[float] = None,
+    **trace_kw,
+) -> Tuple[list, list]:
+    """Paper protocol (Sec. V-A.1-c): the predictor trains on the first 80 %
+    of the trace; a consecutive window from the tail is scheduled.
+
+    ``target_load``: normalize the horizon so the average offered load
+    (sum g*n*alpha_min / (G*horizon)) is constant across configurations —
+    the paper's 2000-GPU cluster never saturates even at 0 % single-GPU
+    jobs or 1 Gbps NICs, so load, not job count, must be held fixed when
+    sweeping those knobs on our 80-GPU scale-down.
+    """
+    total = (history_mult + 1) * n_sched
+    kw = dict(horizon=total * SECONDS_PER_JOB, mean_iters=400,
+              sigma_iters=1.6, session_spread=120.0)
+    kw.update(trace_kw)
+    jobs = generate_trace(TraceConfig(n_jobs=total, seed=seed, **kw))
+    if target_load is not None and cluster is not None:
+        from repro.core.heavy_edge import alpha_min_estimate
+
+        work = sum(
+            j.g * j.n_iters * alpha_min_estimate(j, cluster) for j in jobs
+        )
+        kw["horizon"] = work / (cluster.total_gpus * target_load)
+        jobs = generate_trace(TraceConfig(n_jobs=total, seed=seed, **kw))
+    split = len(jobs) - n_sched
+    history, window = jobs[:split], jobs[split:]
+    t0 = window[0].arrival
+    window = [dataclasses.replace(j, arrival=j.arrival - t0) for j in window]
+    return history, window
+
+
+def warm_predictor(kind: str, history: list, seed: int = 0):
+    """Observe the history once, then a single warm fit (no mid-sim refits:
+    the scheduled windows span ~a day, the paper retrains daily).
+
+    Scheduling benches use a 40-tree forest (the paper's 100-tree model is
+    kept for the Fig. 4 prediction-quality measurement; ordering decisions
+    are insensitive to the extra trees and the fit is ~3x faster).
+    """
+    kw = dict(n_estimators=40, n_bins=512) if kind == "rf" else {}
+    pred = make_predictor(kind, seed=seed, **kw)
+    if hasattr(pred, "retrain_every"):
+        pred.retrain_every = 10**9
+    for j in history:
+        pred.observe(j, j.n_iters)
+    if hasattr(pred, "warm_start"):
+        pred.warm_start()
+    return pred
+
+
+def run_policies(
+    jobs,
+    cluster: ClusterSpec,
+    policies: Optional[List[str]] = None,
+    predictor: str = "rf",
+    tau: float = 2.0,
+    include_perfect: bool = False,
+    history: Optional[list] = None,
+) -> Dict[str, dict]:
+    """Run A-SRPT + baselines on the same jobs; returns per-policy metrics."""
+    names = policies or (["A-SRPT"] + list(BASELINES))
+    base_pred = (
+        warm_predictor(predictor, history) if history is not None else None
+    )
+
+    def fresh(kind: str):
+        if kind == "perfect":
+            return make_predictor("perfect")
+        if base_pred is not None:
+            return copy.deepcopy(base_pred)
+        return make_predictor(predictor, seed=0)
+
+    out: Dict[str, dict] = {}
+    for name in names:
+        t0 = time.time()
+        if name == "A-SRPT":
+            pol = ASRPTPolicy(fresh(predictor), tau=tau)
+        elif name == "A-SRPT-Perfect":
+            pol = ASRPTPolicy(make_predictor("perfect"), tau=tau)
+        else:
+            pol = BASELINES[name](fresh(predictor))
+        res = simulate(jobs, cluster, pol)
+        out[name] = {
+            "total_flow": res.total_flow_time,
+            "total_completion": res.total_completion_time,
+            "makespan": res.makespan,
+            "mean_jct": res.mean_jct,
+            "wall_s": time.time() - t0,
+        }
+    if include_perfect and "A-SRPT-Perfect" not in names:
+        t0 = time.time()
+        res = simulate(
+            jobs, cluster, ASRPTPolicy(make_predictor("perfect"), tau=tau)
+        )
+        out["A-SRPT-Perfect"] = {
+            "total_flow": res.total_flow_time,
+            "total_completion": res.total_completion_time,
+            "makespan": res.makespan,
+            "mean_jct": res.mean_jct,
+            "wall_s": time.time() - t0,
+        }
+    return out
+
+
+def improvement_vs_best_baseline(metrics: Dict[str, dict], key="total_flow"):
+    baselines = {
+        k: v[key] for k, v in metrics.items()
+        if k not in ("A-SRPT", "A-SRPT-Perfect")
+    }
+    if not baselines or "A-SRPT" not in metrics:
+        return None
+    best = min(baselines.values())
+    worst = max(baselines.values())
+    ours = metrics["A-SRPT"][key]
+    return {
+        "vs_best": 1.0 - ours / best,
+        "vs_worst": 1.0 - ours / worst,
+    }

@@ -1,0 +1,288 @@
+"""One benchmark per paper figure/table (Figs. 4-9, Table II).
+
+Each function returns a list of CSV-able row dicts; benchmarks/run.py
+aggregates them.  Sizes are the scaled-down regime of common.py; pass
+full=True for larger runs.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (
+    ASRPTPolicy,
+    TraceConfig,
+    build_job_graph,
+    generate_trace,
+    make_predictor,
+    simulate,
+)
+import repro.core.heavy_edge as he
+from repro.core import timing
+from repro.core.ilp import exact_min_cut
+from repro.core.job import ClusterSpec
+from repro.core.profiles import PAPER_MODELS, make_job
+
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: prediction-error distribution of the random-forest model
+# ---------------------------------------------------------------------------
+
+
+def fig4_prediction(full: bool = False) -> List[dict]:
+    n = 12000 if full else 5000
+    jobs = generate_trace(TraceConfig(n_jobs=n, seed=0))
+    split = int(0.8 * len(jobs))
+    pred = make_predictor("rf", seed=0)
+    pred.retrain_every = 10**9
+    # observe the first 80 % in arrival order, then one warm fit
+    for j in jobs[:split]:
+        pred.observe(j, j.n_iters)
+    pred.warm_start()
+    errs = np.array(
+        [abs(pred.predict(j) - j.n_iters) for j in jobs[split:]]
+    )
+    rel = errs / np.array([j.n_iters for j in jobs[split:]])
+    rows = [{
+        "bench": "fig4_prediction",
+        "frac_exact(<=1_iter)": float((errs <= 1).mean()),
+        "frac_within_10pct": float((rel <= 0.10).mean()),
+        "frac_within_50pct": float((rel <= 0.50).mean()),
+        "mean_abs_err_iters": float(errs.mean()),
+        "paper_claim": "~60% predicted exactly (Fig. 4)",
+    }]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: testbed-scale comparison (75 jobs, 14 vGPUs, tau=0)
+# ---------------------------------------------------------------------------
+
+
+def fig5_testbed(full: bool = False) -> List[dict]:
+    cluster = ClusterSpec(
+        num_servers=2, gpus_per_server=7, b_inter=128e9 / 8, b_intra=128e9
+    )  # MIG testbed: PCIe-limited uniform bandwidth
+    seeds = (0, 1, 2)
+    agg: dict = {}
+    for seed in seeds:
+        history, jobs = common.history_and_window(
+            75, seed=seed, history_mult=8, max_gpus_per_job=8,
+            mean_iters=300, session_spread=20.0,
+            horizon=9 * 75 * 30.0,
+        )
+        res = common.run_policies(
+            jobs, cluster, predictor="rf", tau=0.0, include_perfect=True,
+            history=history,
+        )
+        for name, m in res.items():
+            agg.setdefault(name, []).append(m)
+    rows = []
+    for name, ms in agg.items():
+        rows.append({
+            "bench": "fig5_testbed",
+            "policy": name,
+            "total_flow": float(np.mean([m["total_flow"] for m in ms])),
+            "makespan": float(np.mean([m["makespan"] for m in ms])),
+        })
+    ours = next(r for r in rows if r["policy"] == "A-SRPT")
+    perfect = next(r for r in rows if r["policy"] == "A-SRPT-Perfect")
+    ours["gap_vs_perfect"] = ours["total_flow"] / perfect["total_flow"] - 1
+    ours["paper_claim"] = "A-SRPT within ~7% of perfect; up to 44% better than baselines"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: total JCT vs number of jobs
+# ---------------------------------------------------------------------------
+
+
+def fig6_num_jobs(full: bool = False) -> List[dict]:
+    cluster = common.make_cluster()
+    sizes = (1500, 3000, 6000) if full else (600, 1200, 2400)
+    rows = []
+    for n in sizes:
+        history, jobs = common.history_and_window(n, seed=1)
+        res = common.run_policies(jobs, cluster, predictor="rf",
+                                  history=history)
+        imp = common.improvement_vs_best_baseline(res)
+        for name, m in res.items():
+            rows.append({
+                "bench": "fig6_num_jobs", "n_jobs": n, "policy": name,
+                "total_flow": m["total_flow"],
+                "total_completion": m["total_completion"],
+                "wall_s": round(m["wall_s"], 1),
+            })
+        rows[-1]["asrpt_flow_reduction_vs_best"] = round(imp["vs_best"], 3)
+        rows[-1]["asrpt_flow_reduction_vs_worst"] = round(imp["vs_worst"], 3)
+    rows[-1]["paper_claim"] = "31-91% total JCT reduction (Fig. 6)"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: varying percentage of single-GPU jobs
+# ---------------------------------------------------------------------------
+
+
+def fig7_single_gpu(full: bool = False) -> List[dict]:
+    # The paper's own cluster width (250 servers x 8): Theorem 1's
+    # competitive ratio carries a G/(G - g_max) factor, so a faithful
+    # scale-down must keep g_max/G small; the horizon is normalized to a
+    # constant offered load (see common.history_and_window).
+    cluster = common.make_cluster(num_servers=250)
+    n = 800 if full else 400
+    rows = []
+    for frac in (0.8, 0.4, 0.0):
+        history, jobs = common.history_and_window(
+            n, seed=2, single_gpu_frac=frac, max_gpus_per_job=32,
+            cluster=cluster, target_load=0.30,
+        )
+        res = common.run_policies(jobs, cluster, predictor="rf",
+                                  history=history)
+        imp = common.improvement_vs_best_baseline(res)
+        for name, m in res.items():
+            rows.append({
+                "bench": "fig7_single_gpu", "single_gpu_frac": frac,
+                "policy": name, "total_flow": m["total_flow"],
+            })
+        rows[-1]["asrpt_flow_reduction_vs_best"] = round(imp["vs_best"], 3)
+    rows[-1]["paper_claim"] = "16-57% reduction as single-GPU % drops (Fig. 7)"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: varying server NIC bandwidth (0% single-GPU jobs)
+# ---------------------------------------------------------------------------
+
+
+def fig8_bandwidth(full: bool = False) -> List[dict]:
+    n = 800 if full else 400
+    rows = []
+    for gbps in (1, 10, 50):
+        # paper setting: 250 servers x 8 GPUs, 0% single-GPU jobs
+        cluster = common.make_cluster(
+            num_servers=250, b_inter=gbps * 0.125e9
+        )
+        history, jobs = common.history_and_window(
+            n, seed=3, single_gpu_frac=0.0, max_gpus_per_job=32,
+            cluster=cluster, target_load=0.30,
+        )
+        res = common.run_policies(jobs, cluster, predictor="rf",
+                                  history=history)
+        imp = common.improvement_vs_best_baseline(res)
+        for name, m in res.items():
+            rows.append({
+                "bench": "fig8_bandwidth", "nic_gbps": gbps,
+                "policy": name, "total_flow": m["total_flow"],
+            })
+        rows[-1]["asrpt_flow_reduction_vs_best"] = round(imp["vs_best"], 3)
+        rows[-1]["asrpt_flow_reduction_vs_worst"] = round(imp["vs_worst"], 3)
+    rows[-1]["paper_claim"] = "up to 92% reduction at 1 Gbps (Fig. 8)"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9: prediction-model ablation
+# ---------------------------------------------------------------------------
+
+
+def fig9_predictors(full: bool = False) -> List[dict]:
+    cluster = common.make_cluster()
+    n = 1500 if full else 800
+    history, jobs = common.history_and_window(n, seed=4)
+    rows = []
+    flows = {}
+    for kind in ("rf", "median", "mean", "perfect"):
+        t0 = time.time()
+        pred = common.warm_predictor(kind, history, seed=0)
+        pol = ASRPTPolicy(pred, tau=2.0)
+        res = simulate(jobs, cluster, pol)
+        flows[kind] = res.total_flow_time
+        # measure average prediction error for this predictor
+        pred = common.warm_predictor(kind, history, seed=0)
+        err = float(np.mean(
+            [abs(pred.predict(j) - j.n_iters) for j in jobs]
+        ))
+        rows.append({
+            "bench": "fig9_predictors", "predictor": kind,
+            "total_flow": res.total_flow_time,
+            "mean_abs_err": round(err, 1),
+            "wall_s": round(time.time() - t0, 1),
+        })
+    rows[-1]["rf_gap_vs_perfect"] = round(
+        flows["rf"] / flows["perfect"] - 1, 3
+    )
+    rows[-1]["paper_claim"] = "RF ~14% off perfect, beats mean/median (Fig. 9)"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II: Heavy-Edge vs exact ILP (PITT + placement computation time)
+# ---------------------------------------------------------------------------
+
+
+def table2_heavyedge_ilp(full: bool = False) -> List[dict]:
+    cluster = ClusterSpec(
+        num_servers=8, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    rng = np.random.default_rng(0)
+    rows = []
+    cases = {
+        "vgg19": ("vgg19", 5, 20),     # config (4,4): 8 replicas
+        "gpt_175b": ("gpt_175b", 3, 10),  # config (2,)*8: 16 replicas
+    }
+    for label, (model, cfg_idx, n_cases) in cases.items():
+        if not full:
+            n_cases = max(3, n_cases // 3)
+        he_pitt, ilp_pitt, he_t, ilp_t = [], [], [], []
+        for case in range(n_cases):
+            job = make_job(0, model, cfg_idx, n_iters=100)
+            g = build_job_graph(job)
+            # random per-server availability covering g_i
+            caps = []
+            remaining = job.g
+            for m in range(cluster.num_servers):
+                if remaining <= 0:
+                    break
+                c = int(rng.integers(1, cluster.gpus_per_server + 1))
+                c = min(c, remaining)
+                caps.append((m, c))
+                remaining -= c
+            if remaining > 0:
+                caps[-1] = (caps[-1][0], caps[-1][1] + remaining)
+                caps = [(m, min(c, cluster.gpus_per_server)) for m, c in caps]
+                if sum(c for _, c in caps) != job.g:
+                    continue
+            t0 = time.time()
+            assign = he.heavy_edge(g, caps)
+            he_t.append(time.time() - t0)
+            placement = timing.placement_from_assignment(job, assign)
+            he_pitt.append(timing.alpha(job, placement, cluster))
+            t0 = time.time()
+            try:
+                opt_assign, _ = exact_min_cut(g, caps, node_limit=3_000_000)
+                ilp_t.append(time.time() - t0)
+                opt_placement = timing.placement_from_assignment(
+                    job, opt_assign
+                )
+                ilp_pitt.append(timing.alpha(job, opt_placement, cluster))
+            except RuntimeError:
+                ilp_t.append(float("nan"))
+                ilp_pitt.append(float("nan"))
+        rows.append({
+            "bench": "table2_heavyedge_ilp",
+            "model": label,
+            "heavy_edge_pitt_ms": round(1e3 * float(np.mean(he_pitt)), 2),
+            "ilp_pitt_ms": round(1e3 * float(np.nanmean(ilp_pitt)), 2),
+            "heavy_edge_pct_ms": round(1e3 * float(np.mean(he_t)), 3),
+            "ilp_pct_ms": round(1e3 * float(np.nanmean(ilp_t)), 1),
+            "pitt_gap": round(
+                float(np.mean(he_pitt)) / float(np.nanmean(ilp_pitt)) - 1, 4
+            ),
+        })
+    rows[-1]["paper_claim"] = "Heavy-Edge PITT within ~6% of ILP, >>1000x faster (Table II)"
+    return rows

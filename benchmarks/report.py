@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+
+DRY = Path("results/dryrun")
+PERF = Path("results/perf")
+
+MOVE_DOWN = {
+    "memory": "shard the residual stream over `model` (sequence parallelism)"
+              " so activation traffic scales with TP degree",
+    "collective": "replace all-gather-based exchange with all-to-all /"
+                  " overlap collectives with compute (microbatching)",
+    "compute": "raise arithmetic intensity per chip (larger per-device"
+               " batch or fewer, larger matmuls)",
+}
+
+
+def _load(arch, shape, mesh):
+    p = DRY / f"{arch}__{shape}__{mesh}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | HLO GFLOPs/dev | HLO GB/dev |"
+        " coll GB/dev | peak mem GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            for mesh in ("single", "multi"):
+                d = _load(arch, shape, mesh)
+                if not d:
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {d['mesh']} | {d['compile_s']} |"
+                    f" {d['hlo_flops']/1e9:.0f} | {d['hlo_bytes']/1e9:.1f} |"
+                    f" {d['coll_bytes']/1e9:.2f} |"
+                    f" {d['peak_memory_bytes']/2**30:.1f} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck |"
+        " useful/HLO | roofline frac | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        app = applicable_shapes(cfg)
+        for shape in SHAPES:
+            if shape not in app:
+                reason = (
+                    "encoder-only, no decode"
+                    if shape == "decode_32k"
+                    else "quadratic attention at 500k"
+                )
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | SKIPPED | — | — |"
+                    f" {reason} |"
+                )
+                continue
+            d = _load(arch, shape, "single")
+            if not d:
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {d['t_compute']:.2e} |"
+                f" {d['t_memory']:.2e} | {d['t_collective']:.2e} |"
+                f" **{d['bottleneck']}** |"
+                f" {d['useful_flops_ratio']:.3f} |"
+                f" {d['roofline_fraction']:.4f} |"
+                f" {MOVE_DOWN[d['bottleneck']]} |"
+            )
+    return "\n".join(lines)
+
+
+def perf_rows() -> list:
+    rows = []
+    for p in sorted(PERF.glob("*.json")):
+        d = json.loads(p.read_text())
+        rows.append((p.stem, d))
+    return rows
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

@@ -1,0 +1,79 @@
+"""Roofline table assembly from the dry-run artifacts (§Roofline).
+
+Reads results/dryrun/*.json produced by ``python -m repro.launch.dryrun
+--all`` and prints, per (arch x shape) on the single-pod mesh: the three
+roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the
+roofline fraction.  Skipped cells are listed with their reasons.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+
+DRYRUN_DIR = Path("results/dryrun")
+
+SKIP_REASONS = {
+    "long_500k": "full quadratic attention (no sub-quadratic path)",
+    "decode_32k": "encoder-only: no autoregressive decode",
+}
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[dict]:
+    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_rows(mesh: str = "single") -> List[dict]:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        app = applicable_shapes(cfg)
+        for shape in SHAPES:
+            if shape not in app:
+                rows.append({
+                    "bench": "roofline", "arch": arch, "shape": shape,
+                    "mesh": mesh, "status": "SKIP",
+                    "reason": SKIP_REASONS.get(shape, "n/a"),
+                })
+                continue
+            d = load_cell(arch, shape, mesh)
+            if d is None:
+                rows.append({
+                    "bench": "roofline", "arch": arch, "shape": shape,
+                    "mesh": mesh, "status": "MISSING",
+                })
+                continue
+            rows.append({
+                "bench": "roofline", "arch": arch, "shape": shape,
+                "mesh": mesh, "status": "ok" if d.get("ok") else "FAIL",
+                "t_compute_s": f"{d['t_compute']:.3e}",
+                "t_memory_s": f"{d['t_memory']:.3e}",
+                "t_collective_s": f"{d['t_collective']:.3e}",
+                "bottleneck": d["bottleneck"],
+                "useful_flops_ratio": f"{d['useful_flops_ratio']:.3f}",
+                "roofline_fraction": f"{d['roofline_fraction']:.4f}",
+                "peak_mem_GiB_per_dev": f"{d['peak_memory_bytes']/2**30:.1f}",
+                "compile_s": d.get("compile_s"),
+            })
+    return rows
+
+
+def multi_pod_rows() -> List[dict]:
+    """Compile-success proof of the 2x16x16 multi-pod mesh."""
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            d = load_cell(arch, shape, "multi")
+            rows.append({
+                "bench": "multipod_dryrun", "arch": arch, "shape": shape,
+                "status": ("ok" if d and d.get("ok") else
+                           "MISSING" if d is None else "FAIL"),
+                "compile_s": d.get("compile_s") if d else None,
+            })
+    return rows

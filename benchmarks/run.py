@@ -1,0 +1,82 @@
+"""Benchmark driver: one benchmark per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (plus the detailed
+per-row CSV blocks).  ``--full`` enlarges the simulated workloads.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit_rows(rows) -> None:
+    if not rows:
+        return
+    keys: list = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    print()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated bench names (fig4..fig9,table2,roofline)",
+    )
+    args = ap.parse_args()
+
+    from . import paper_figs, roofline
+
+    benches = {
+        "fig4": paper_figs.fig4_prediction,
+        "fig5": paper_figs.fig5_testbed,
+        "fig6": paper_figs.fig6_num_jobs,
+        "fig7": paper_figs.fig7_single_gpu,
+        "fig8": paper_figs.fig8_bandwidth,
+        "fig9": paper_figs.fig9_predictors,
+        "table2": paper_figs.table2_heavyedge_ilp,
+    }
+    selected = (
+        args.only.split(",") if args.only else list(benches) + ["roofline"]
+    )
+
+    summary = []
+    for name in selected:
+        if name == "roofline":
+            t0 = time.time()
+            rows = roofline.roofline_rows("single")
+            rows += roofline.multi_pod_rows()
+            _emit_rows(rows)
+            n_ok = sum(1 for r in rows if r.get("status") == "ok")
+            summary.append((name, (time.time() - t0) * 1e6 / max(len(rows), 1),
+                            f"cells_ok={n_ok}"))
+            continue
+        fn = benches[name]
+        print(f"### {name} ###", flush=True)
+        t0 = time.time()
+        rows = fn(full=args.full)
+        wall = time.time() - t0
+        _emit_rows(rows)
+        derived = ""
+        for r in rows:
+            for k in ("asrpt_flow_reduction_vs_best", "gap_vs_perfect",
+                      "pitt_gap", "frac_exact(<=1_iter)", "rf_gap_vs_perfect"):
+                if k in r and r[k] != "":
+                    derived = f"{k}={r[k]}"
+        summary.append((name, wall * 1e6 / max(len(rows), 1), derived))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

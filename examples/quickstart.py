@@ -1,0 +1,90 @@
+"""Quickstart: the paper's A-SRPT scheduler on a synthetic MLaaS trace.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates a bursty two-day trace, schedules it with A-SRPT (random-forest
+iteration prediction + Heavy-Edge GPU mapping) and the five baselines from
+the paper, and prints the total job completion / flow times.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    ASRPTPolicy,
+    BASELINES,
+    ClusterSpec,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+    trace_stats,
+)
+
+
+def main() -> None:
+    cluster = ClusterSpec(
+        num_servers=10,  # 10 servers x 8 accelerators
+        gpus_per_server=8,
+        b_inter=1.25e9,  # 10 Gbps NIC
+        b_intra=300e9,  # NVLink/ICI-class intra-server
+    )
+    jobs = generate_trace(
+        TraceConfig(
+            n_jobs=400,
+            horizon=0.5 * 24 * 3600.0,
+            seed=0,
+            max_gpus_per_job=32,
+            session_spread=120.0,
+        )
+    )
+    print("trace:", trace_stats(jobs))
+
+    rows = []
+    pol = ASRPTPolicy(make_predictor("rf", seed=0), tau=2.0)
+    res = simulate(jobs, cluster, pol)
+    rows.append(("A-SRPT (ours)", res))
+    for name, mk in BASELINES.items():
+        res = simulate(jobs, cluster, mk(make_predictor("rf", seed=0)))
+        rows.append((name, res))
+
+    print(f"\n{'policy':16s} {'total flow':>14s} {'mean JCT':>10s} {'makespan':>10s}")
+    for name, res in rows:
+        print(
+            f"{name:16s} {res.total_flow_time:14.3e} "
+            f"{res.mean_jct:10.0f} {res.makespan:10.0f}"
+        )
+    print(
+        "\nNOTE: A-SRPT's advantage is regime-dependent (see "
+        "EXPERIMENTS.md §Regime);\nthe mechanism it exploits is isolated "
+        "below."
+    )
+
+    # --- the core mechanism, deterministically --------------------------
+    # Long 8-GPU jobs arrive first; short 1-GPU jobs trickle in afterwards.
+    # Work-conserving baselines backfill the longs onto every free GPU and
+    # the shorts then wait; A-SRPT's virtual machine releases the longs
+    # gradually, keeping headroom.
+    from repro.core.job import JobSpec, StageSpec
+
+    def job(jid, k, iters, arrival, group):
+        return JobSpec(
+            job_id=jid,
+            stages=(StageSpec(p_f=0.33, p_b=0.67, d_in=0, d_out=0,
+                              h=1 * 1024**2, k=k),),
+            n_iters=iters, arrival=arrival, group_id=group,
+        )
+
+    jobs2 = [job(i, 8, 1000, 0.0, 1) for i in range(10)]
+    jobs2 += [job(100 + i, 1, 20, 10.0 + 5 * i, 2) for i in range(100)]
+    print(f"\n{'policy':16s} {'total flow (mechanism demo)':>28s}")
+    for name, pol in [
+        ("A-SRPT (ours)", ASRPTPolicy(make_predictor("perfect"), tau=2.0)),
+        ("WCS-SubTime", BASELINES["WCS-SubTime"](make_predictor("perfect"))),
+    ]:
+        res = simulate(jobs2, cluster, pol)
+        print(f"{name:16s} {res.total_flow_time:28.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: A-SRPT DDLwMP scheduling + multi-pod JAX training framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,25 @@
+"""Core: the paper's contribution — A-SRPT scheduling for DDLwMP jobs."""
+from .job import ClusterSpec, JobSpec, StageSpec, RAR, TAR  # noqa: F401
+from .graph import JobGraph, build_job_graph  # noqa: F401
+from .timing import alpha, alpha_max, beta  # noqa: F401
+from .heavy_edge import (  # noqa: F401
+    alpha_min_estimate,
+    map_job,
+    select_servers,
+)
+from .cluster import ClusterState  # noqa: F401
+from .srpt import VirtualSRPT, srpt_total_completion  # noqa: F401
+from .simulator import Policy, SimResult, Start, simulate  # noqa: F401
+from .asrpt import ASRPTPolicy  # noqa: F401
+from .baselines import BASELINES  # noqa: F401
+from .predictor import (  # noqa: F401
+    GroupStatPredictor,
+    IterationPredictor,
+    PerfectPredictor,
+    RandomForestPredictor,
+    RandomForestRegressor,
+    make_predictor,
+)
+from .trace import TraceConfig, generate_trace, trace_stats  # noqa: F401
+from .profiles import PAPER_MODELS, make_job, job_from_model_shape  # noqa: F401
+from .ilp import exact_min_cut  # noqa: F401

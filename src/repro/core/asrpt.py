@@ -1,0 +1,158 @@
+"""A-SRPT: adaptive shortest-remaining-processing-time-first (paper Alg. 1).
+
+Pipeline of decisions per scheduling event:
+
+1. advance the virtual single machine (instance A1-tilde, preemptive SRPT on
+   predicted scaled work ``(g_i/G) n~_i alpha~_i^min``) to the current time;
+   newly (virtually) completed jobs join ``pending_queue`` in completion
+   order — this is the release order for the real cluster;
+2. re-evaluate *delayed* communication-heavy jobs: start if the achievable
+   per-iteration time improved (``alpha < kappa``), dropped under the
+   COMM_HEAVY ratio, or the delay budget ``tau (g_i/G) n~_i alpha~_i^min``
+   expired;
+3. pop the head of ``pending_queue`` while it fits:
+   - communication-heavy (``alpha_max / alpha~_min >= COMM_HEAVY``): place on
+     the *most*-available servers (consolidation); if still comm-heavy,
+     delay (step 2 takes over);
+   - otherwise: place on the *least*-available servers (fragmentation-aware)
+     and start immediately.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional
+
+from .cluster import ClusterState
+from .heavy_edge import map_job, select_servers
+from .job import ClusterSpec, JobSpec
+from .predictor import IterationPredictor
+from .simulator import AlphaCache, Policy, Start
+from .srpt import VirtualSRPT
+
+COMM_HEAVY_DEFAULT = 1.5
+
+
+class _Delayed:
+    __slots__ = ("job", "kappa", "deadline")
+
+    def __init__(self, job: JobSpec, kappa: float, deadline: float):
+        self.job = job
+        self.kappa = kappa
+        self.deadline = deadline
+
+
+class ASRPTPolicy(Policy):
+    def __init__(
+        self,
+        predictor: IterationPredictor,
+        comm_heavy: float = COMM_HEAVY_DEFAULT,
+        tau: float = 2.0,
+        refine_mapping: bool = False,  # beyond-paper local-search swaps
+    ):
+        self.predictor = predictor
+        self.comm_heavy = comm_heavy
+        self.tau = tau
+        self.refine_mapping = refine_mapping
+        self.vm = VirtualSRPT()
+        self.pending: Deque[JobSpec] = deque()
+        self.delayed: "OrderedDict[int, _Delayed]" = OrderedDict()
+        self._by_id: Dict[int, JobSpec] = {}
+        self._pred_work: Dict[int, float] = {}
+
+    def bind(self, cluster_spec: ClusterSpec) -> None:
+        super().bind(cluster_spec)
+        self.alpha_cache = AlphaCache(cluster_spec)
+
+    # -- event hooks --------------------------------------------------------
+
+    def on_arrival(self, t: float, job: JobSpec) -> None:
+        n_pred = self.predictor.predict(job)
+        _, a_min = self.alpha_cache.bounds(job)
+        g_frac = job.g / self.cluster_spec.total_gpus
+        work = g_frac * n_pred * a_min
+        self._by_id[job.job_id] = job
+        self._pred_work[job.job_id] = work
+        self.vm.arrive(t, job.job_id, work)
+        self._drain_vm(t)
+
+    def on_completion(self, t: float, job: JobSpec) -> None:
+        self.predictor.observe(job, job.n_iters)
+
+    def _drain_vm(self, t: float) -> None:
+        for _ct, jid in self.vm.advance(t):
+            self.pending.append(self._by_id[jid])
+
+    # -- placement helpers ---------------------------------------------------
+
+    def _place(self, job: JobSpec, cluster: ClusterState, consolidate: bool):
+        caps = select_servers(cluster.free, job.g, consolidate=consolidate)
+        return map_job(
+            job, caps, self.cluster_spec, refine=self.refine_mapping
+        )
+
+    # -- main scheduling pass -------------------------------------------------
+
+    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+        self._drain_vm(t)
+        starts: List[Start] = []
+
+        # Step 2: re-evaluate delayed communication-heavy jobs (Alg. 1 l.16-19).
+        for jid in list(self.delayed.keys()):
+            d = self.delayed[jid]
+            if d.job.g > cluster.total_free:
+                continue  # cannot fit yet; keep waiting
+            placement, a = self._place(d.job, cluster, consolidate=True)
+            _, a_min = self.alpha_cache.bounds(d.job)
+            if (
+                a < d.kappa
+                or a / a_min <= self.comm_heavy
+                or t >= d.deadline - 1e-12
+            ):
+                del self.delayed[jid]
+                starts.append(Start(d.job, placement, a))
+                cluster.allocate(jid, placement)  # reserve within this pass
+            # else: stay delayed
+
+        # Step 3: Alg. 1 main loop over the head of pending_queue.
+        while self.pending:
+            job = self.pending[0]
+            if job.g > cluster.total_free:
+                break  # head-of-line blocking (Alg. 1 line 25)
+            self.pending.popleft()
+            a_max, a_min = self.alpha_cache.bounds(job)
+            if a_max / a_min >= self.comm_heavy:
+                placement, a = self._place(job, cluster, consolidate=True)
+                delay_budget = self.tau * self._pred_work[job.job_id]
+                if a / a_min <= self.comm_heavy or delay_budget <= 0.0:
+                    starts.append(Start(job, placement, a))
+                    cluster.allocate(job.job_id, placement)
+                else:
+                    self.delayed[job.job_id] = _Delayed(
+                        job, kappa=a, deadline=t + delay_budget
+                    )
+            else:
+                placement, a = self._place(job, cluster, consolidate=False)
+                starts.append(Start(job, placement, a))
+                cluster.allocate(job.job_id, placement)
+
+        # The simulator re-allocates; undo our in-pass reservations.
+        for s in starts:
+            cluster.release(s.job.job_id)
+        return starts
+
+    def next_wakeup(self, t: float) -> Optional[float]:
+        eps = 1e-9 * max(1.0, abs(t))
+        candidates = []
+        nxt = self.vm.next_completion_time()
+        if nxt is not None:
+            # The vm holds finite work; a completion at/behind t is float-ulp
+            # residue — nudge once so it drains. (Bounded: the residue job
+            # completes on that wake.)
+            candidates.append(max(nxt, t + 1e-6))
+        for d in self.delayed.values():
+            # Past-deadline delayed jobs that still do not fit can only
+            # start after a *real* completion event — never wake for them
+            # (a nudge here would busy-loop at +1e-6 forever).
+            if d.deadline > t + eps:
+                candidates.append(d.deadline)
+        return min(candidates) if candidates else None

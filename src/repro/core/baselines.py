@@ -1,0 +1,111 @@
+"""Baseline schedulers from the paper's evaluation (Sec. V-A.1-d).
+
+* SPJF  — shortest *predicted job* first (MLaaS [6]); strict head-of-line.
+* SPWF  — shortest *predicted workload* (duration x GPUs) first (Tiresias
+          [14] style); strict head-of-line.
+* WCS-Duration / WCS-Workload / WCS-SubTime — work-conserving scheduler [46]:
+  scan the queue in key order and start *every* job that currently fits
+  (backfilling), keyed by predicted duration / predicted workload /
+  submission time respectively.
+
+All baselines use the Heavy-Edge algorithm for GPU mapping (as in the paper)
+with consolidating (most-available-first) server selection.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from .cluster import ClusterState
+from .heavy_edge import map_job, select_servers
+from .job import ClusterSpec, JobSpec
+from .predictor import IterationPredictor
+from .simulator import AlphaCache, Policy, Start
+
+
+class QueuePolicy(Policy):
+    """Priority-queue scheduler parameterized by key and work-conservation."""
+
+    def __init__(
+        self,
+        predictor: IterationPredictor,
+        key: str,
+        work_conserving: bool,
+    ):
+        if key not in ("duration", "workload", "subtime"):
+            raise ValueError(key)
+        self.predictor = predictor
+        self.key_kind = key
+        self.work_conserving = work_conserving
+        self.waiting: List[tuple] = []  # (key, arrival, job_id, job)
+
+    def bind(self, cluster_spec: ClusterSpec) -> None:
+        super().bind(cluster_spec)
+        self.alpha_cache = AlphaCache(cluster_spec)
+
+    def _key(self, job: JobSpec) -> float:
+        if self.key_kind == "subtime":
+            return job.arrival
+        n_pred = self.predictor.predict(job)
+        _, a_min = self.alpha_cache.bounds(job)
+        dur = n_pred * a_min
+        if self.key_kind == "duration":
+            return dur
+        return dur * job.g  # workload
+
+    def on_arrival(self, t: float, job: JobSpec) -> None:
+        # Key is fixed at arrival (prediction with information available now).
+        self.waiting.append((self._key(job), job.arrival, job.job_id, job))
+        self.waiting.sort()
+
+    def on_completion(self, t: float, job: JobSpec) -> None:
+        self.predictor.observe(job, job.n_iters)
+
+    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+        starts: List[Start] = []
+        kept: List[tuple] = []
+        blocked = False
+        for entry in self.waiting:
+            job = entry[3]
+            if not blocked and job.g <= cluster.total_free:
+                caps = select_servers(cluster.free, job.g, consolidate=True)
+                placement, a = map_job(job, caps, self.cluster_spec)
+                starts.append(Start(job, placement, a))
+                cluster.allocate(job.job_id, placement)
+            else:
+                kept.append(entry)
+                if not self.work_conserving:
+                    # Strict head-of-line blocking: nothing behind may pass.
+                    blocked = True
+        self.waiting = kept
+        for s in starts:
+            cluster.release(s.job.job_id)
+        return starts
+
+
+def spjf(predictor: IterationPredictor) -> QueuePolicy:
+    return QueuePolicy(predictor, key="duration", work_conserving=False)
+
+
+def spwf(predictor: IterationPredictor) -> QueuePolicy:
+    return QueuePolicy(predictor, key="workload", work_conserving=False)
+
+
+def wcs_duration(predictor: IterationPredictor) -> QueuePolicy:
+    return QueuePolicy(predictor, key="duration", work_conserving=True)
+
+
+def wcs_workload(predictor: IterationPredictor) -> QueuePolicy:
+    return QueuePolicy(predictor, key="workload", work_conserving=True)
+
+
+def wcs_subtime(predictor: IterationPredictor) -> QueuePolicy:
+    return QueuePolicy(predictor, key="subtime", work_conserving=True)
+
+
+BASELINES: dict[str, Callable[[IterationPredictor], Policy]] = {
+    "SPJF": spjf,
+    "SPWF": spwf,
+    "WCS-Duration": wcs_duration,
+    "WCS-Workload": wcs_workload,
+    "WCS-SubTime": wcs_subtime,
+}

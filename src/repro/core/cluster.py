@@ -1,0 +1,53 @@
+"""Mutable cluster state for the schedulers/simulator."""
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+import numpy as np
+
+from .job import ClusterSpec
+
+
+class ClusterState:
+    """Tracks free GPUs per server and per-job allocations."""
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        self.free: Dict[int, int] = {
+            m: spec.gpus_per_server for m in range(spec.num_servers)
+        }
+        self._job_alloc: Dict[int, Dict[int, int]] = {}
+
+    @property
+    def total_free(self) -> int:
+        return sum(self.free.values())
+
+    def can_fit(self, g_needed: int) -> bool:
+        return self.total_free >= g_needed
+
+    def allocate(self, job_id: int, placement: Mapping[int, np.ndarray]) -> None:
+        per_server = {
+            m: int(np.asarray(x).sum()) for m, x in placement.items()
+        }
+        for m, n in per_server.items():
+            if n > self.free.get(m, 0):
+                raise ValueError(
+                    f"server {m} has {self.free.get(m, 0)} free GPUs, "
+                    f"job {job_id} wants {n}"
+                )
+        for m, n in per_server.items():
+            self.free[m] -= n
+        self._job_alloc[job_id] = per_server
+
+    def release(self, job_id: int) -> None:
+        for m, n in self._job_alloc.pop(job_id).items():
+            self.free[m] += n
+            if self.free[m] > self.spec.gpus_per_server:
+                raise AssertionError(f"server {m} over-freed")
+
+    def mark_server_down(self, server_id: int) -> None:
+        """Fault-tolerance hook: a failed server contributes no capacity."""
+        self.free[server_id] = 0
+
+    def snapshot_free(self) -> Dict[int, int]:
+        return dict(self.free)

@@ -1,0 +1,300 @@
+"""Heavy-Edge GPU mapping (paper Sec. IV-B, Fig. 2).
+
+Given a job graph and a list of servers with available-GPU counts summing to
+``g_i``, partition the vertices (stage replicas) into per-server groups so
+that heavy communication edges stay inside a server.
+
+Greedy procedure (faithful to the paper):
+  1. sort servers by available GPUs, descending;
+  2. for each server ``m`` with capacity ``c``:
+     - if the remaining vertex count equals ``c``: assign all of them;
+     - if ``c == 1``: assign the unassigned vertex with minimum total edge
+       weight (to other unassigned vertices);
+     - else: seed ``node_set`` with the heaviest remaining edge's endpoints,
+       then repeatedly add the unassigned vertex connected to ``node_set`` by
+       the heaviest edge; if none is connected, add an arbitrary
+       (deterministically: smallest-id) unassigned vertex; stop at ``c``.
+
+Ties are broken by vertex order for determinism.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+from .graph import JobGraph, Vertex, build_job_graph
+from .job import ClusterSpec, JobSpec
+from . import timing
+
+
+def heavy_edge(
+    graph: JobGraph, server_caps: Sequence[Tuple[int, int]]
+) -> Dict[Vertex, int]:
+    """Map each vertex to a server id.
+
+    ``server_caps``: (server_id, available_gpus) pairs; capacities must sum
+    to the number of vertices.
+    """
+    total_cap = sum(c for _, c in server_caps)
+    if total_cap != len(graph.vertices):
+        raise ValueError(
+            f"server capacities sum to {total_cap}, "
+            f"job needs {len(graph.vertices)} GPUs"
+        )
+    # Descending capacity; stable on server id for determinism.
+    order = sorted(server_caps, key=lambda mc: (-mc[1], mc[0]))
+
+    unassigned = set(graph.vertices)
+    assignment: Dict[Vertex, int] = {}
+
+    for server_id, cap in order:
+        if cap <= 0:
+            continue
+        if cap >= len(unassigned):
+            for v in sorted(unassigned):
+                assignment[v] = server_id
+            unassigned.clear()
+            break
+        if cap == 1:
+            v = min(
+                sorted(unassigned),
+                key=lambda u: (
+                    sum(
+                        w
+                        for nb, w in graph.neighbors(u).items()
+                        if nb in unassigned
+                    ),
+                    u,
+                ),
+            )
+            assignment[v] = server_id
+            unassigned.discard(v)
+            continue
+
+        node_set: List[Vertex] = []
+        # Seed with the heaviest edge among unassigned vertices.
+        best_w, best_pair = -1.0, None
+        for u in sorted(unassigned):
+            for nb, w in graph.neighbors(u).items():
+                if nb in unassigned and u < nb and w > best_w:
+                    best_w, best_pair = w, (u, nb)
+        if best_pair is None:
+            node_set.append(min(unassigned))
+        else:
+            node_set.extend(best_pair)
+        for v in node_set:
+            unassigned.discard(v)
+
+        while len(node_set) < cap and unassigned:
+            best_w, best_v = -1.0, None
+            for u in node_set:
+                for nb, w in graph.neighbors(u).items():
+                    if nb in unassigned and (
+                        w > best_w or (w == best_w and (best_v is None or nb < best_v))
+                    ):
+                        best_w, best_v = w, nb
+            if best_v is None:  # disconnected: arbitrary (smallest) vertex
+                best_v = min(unassigned)
+            node_set.append(best_v)
+            unassigned.discard(best_v)
+
+        for v in node_set:
+            assignment[v] = server_id
+
+    if unassigned:
+        raise AssertionError("heavy_edge left vertices unassigned")
+    return assignment
+
+
+def refine_assignment(
+    graph: JobGraph,
+    assignment: Dict[Vertex, int],
+    max_passes: int = 3,
+) -> Dict[Vertex, int]:
+    """Beyond-paper local search: best-improvement pairwise swaps.
+
+    The paper's greedy is myopic (it can split an AllReduce ring whose
+    members it seeded apart); a few swap passes repair those cases at
+    O(V^2 * deg) cost — still micro-seconds at job scale.  Kept separate so
+    the faithful baseline remains measurable (see benchmarks/table2).
+    """
+    assign = dict(assignment)
+
+    def delta_swap(u: Vertex, v: Vertex) -> float:
+        su, sv = assign[u], assign[v]
+        d = 0.0
+        for nb, w in graph.neighbors(u).items():
+            if nb == v:
+                continue
+            if assign[nb] == su:
+                d += w  # u leaves its server: edge becomes cut
+            elif assign[nb] == sv:
+                d -= w  # u joins v's server: edge becomes internal
+        for nb, w in graph.neighbors(v).items():
+            if nb == u:
+                continue
+            if assign[nb] == sv:
+                d += w
+            elif assign[nb] == su:
+                d -= w
+        return d
+
+    verts = sorted(graph.vertices)
+    for _ in range(max_passes):
+        best = (0.0, None)
+        for i, u in enumerate(verts):
+            for v in verts[i + 1 :]:
+                if assign[u] == assign[v]:
+                    continue
+                d = delta_swap(u, v)
+                if d < best[0] - 1e-12:
+                    best = (d, (u, v))
+        if best[1] is None:
+            break
+        u, v = best[1]
+        assign[u], assign[v] = assign[v], assign[u]
+    return assign
+
+
+def contiguous_assignment(
+    graph: JobGraph, server_caps: Sequence[Tuple[int, int]]
+) -> Dict[Vertex, int]:
+    """Second seed for the local search: fill servers in (stage, replica)
+    order, which tends to keep AllReduce rings and pipeline neighbours
+    together when capacities align with stage sizes."""
+    order = sorted(server_caps, key=lambda mc: (-mc[1], mc[0]))
+    assign: Dict[Vertex, int] = {}
+    it = iter(sorted(graph.vertices))
+    for server_id, cap in order:
+        for _ in range(cap):
+            assign[next(it)] = server_id
+    return assign
+
+
+def stage_aligned_assignment(
+    graph: JobGraph, server_caps: Sequence[Tuple[int, int]]
+) -> Dict[Vertex, int]:
+    """Third seed: best-fit-decreasing bin packing of *whole stages*.
+
+    Swap-based local search cannot relabel an entire AllReduce ring; packing
+    stages as units (heaviest internal weight first, tightest-fitting server)
+    finds those placements directly.  Spillover vertices fall back to the
+    heaviest-connection rule.
+    """
+    from collections import defaultdict
+
+    stages = defaultdict(list)
+    for v in sorted(graph.vertices):
+        stages[v[0]].append(v)
+
+    def internal_weight(verts):
+        vs = set(verts)
+        return sum(
+            w for (u, v), w in graph.edges.items() if u in vs and v in vs
+        )
+
+    order = sorted(
+        stages.values(), key=lambda vs: (-internal_weight(vs), vs[0])
+    )
+    free = dict(server_caps)
+    assign: Dict[Vertex, int] = {}
+    leftovers: List[Vertex] = []
+    for verts in order:
+        # tightest server that fits the whole stage
+        fits = [m for m, c in free.items() if c >= len(verts)]
+        if fits:
+            m = min(fits, key=lambda m_: (free[m_], m_))
+            for v in verts:
+                assign[v] = m
+            free[m] -= len(verts)
+        else:
+            leftovers.extend(verts)
+    for v in leftovers:
+        # most-connected server with capacity, else any with capacity
+        best_m, best_w = None, -1.0
+        for m, c in free.items():
+            if c <= 0:
+                continue
+            w = sum(
+                wt for nb, wt in graph.neighbors(v).items()
+                if assign.get(nb) == m
+            )
+            if w > best_w:
+                best_w, best_m = w, m
+        assign[v] = best_m
+        free[best_m] -= 1
+    return assign
+
+
+def map_job(
+    job: JobSpec,
+    server_caps: Sequence[Tuple[int, int]],
+    cluster: ClusterSpec,
+    refine: bool = False,
+) -> Tuple[Dict[int, np.ndarray], float]:
+    """Run Heavy-Edge (optionally multi-start + local search).
+
+    ``refine`` (beyond-paper): swap-based local search from three seeds
+    (the paper's greedy, a contiguous fill, and whole-stage bin packing),
+    keeping the placement with the lowest per-iteration time alpha.
+    """
+    graph = build_job_graph(job)
+    assignment = heavy_edge(graph, server_caps)
+    placement = timing.placement_from_assignment(job, assignment)
+    best_alpha = timing.alpha(job, placement, cluster)
+    if refine:
+        seeds = (
+            assignment,
+            contiguous_assignment(graph, server_caps),
+            stage_aligned_assignment(graph, server_caps),
+        )
+        for seed in seeds:
+            cand = refine_assignment(graph, seed)
+            cand_placement = timing.placement_from_assignment(job, cand)
+            a = timing.alpha(job, cand_placement, cluster)
+            if a < best_alpha - 1e-12:
+                best_alpha, placement = a, cand_placement
+    return placement, best_alpha
+
+
+def consolidated_caps(job: JobSpec, cluster: ClusterSpec) -> List[Tuple[int, int]]:
+    """Fewest-servers capacity profile: full servers + one remainder."""
+    g = cluster.gpus_per_server
+    n_full, rem = divmod(job.g, g)
+    caps = [(m, g) for m in range(n_full)]
+    if rem:
+        caps.append((n_full, rem))
+    return caps
+
+
+def alpha_min_estimate(job: JobSpec, cluster: ClusterSpec) -> float:
+    """alpha-tilde_i^min (paper Sec. IV-B): Heavy-Edge on the consolidated
+    (fewest possible servers, fully packed) allocation."""
+    _, a = map_job(job, consolidated_caps(job, cluster), cluster)
+    return a
+
+
+def select_servers(
+    free: Mapping[int, int], g_needed: int, consolidate: bool
+) -> List[Tuple[int, int]]:
+    """Pick servers/GPU counts for a job (paper Alg. 1 lines 9 and 22).
+
+    ``consolidate=True``  -> most-available-first (communication-heavy jobs);
+    ``consolidate=False`` -> least-available-first (fragmentation-aware
+                             placement of non-communication-heavy jobs).
+    Returns (server_id, gpus_taken) or raises if capacity is insufficient.
+    """
+    candidates = [(m, c) for m, c in free.items() if c > 0]
+    if sum(c for _, c in candidates) < g_needed:
+        raise ValueError("not enough free GPUs")
+    candidates.sort(key=lambda mc: (-mc[1], mc[0]) if consolidate else (mc[1], mc[0]))
+    picks: List[Tuple[int, int]] = []
+    remaining = g_needed
+    for m, c in candidates:
+        take = min(c, remaining)
+        picks.append((m, take))
+        remaining -= take
+        if remaining == 0:
+            break
+    return picks

@@ -1,0 +1,112 @@
+"""Job model for DDLwMP (distributed DL with mixed parallelisms) scheduling.
+
+Mirrors the paper's Section III system model:
+
+* a job ``i`` trains a DNN for ``n_i`` iterations, split into ``S_i``
+  pipeline stages; stage ``s`` is replicated over ``k_{i,s}`` accelerators
+  (data parallelism inside the stage), so the job needs
+  ``g_i = sum_s k_{i,s}`` accelerators in total;
+* per-stage profile: forward/backward compute time ``p_f``/``p_b`` (seconds
+  per mini-batch on one replica), per-iteration in/out activation bytes
+  ``d_in``/``d_out`` per replica, and trainable-parameter bytes ``h``.
+
+A single-GPU job is a job with one non-replicated stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+RAR = "rar"  # ring all-reduce
+TAR = "tar"  # (double binary) tree all-reduce
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """Profile of a single pipeline stage (see paper Sec. III-A)."""
+
+    p_f: float  # forward time per mini-batch, seconds
+    p_b: float  # backward time per mini-batch, seconds
+    d_in: float  # incoming activation bytes per iteration per replica
+    d_out: float  # outgoing activation/gradient bytes per iteration per replica
+    h: float  # trainable parameter bytes of this stage
+    k: int = 1  # number of data-parallel replicas (== GPUs for this stage)
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"stage replica count must be >= 1, got {self.k}")
+        for name in ("p_f", "p_b", "d_in", "d_out", "h"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"stage field {name} must be non-negative")
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """A DDLwMP job: model stages + arrival + (true) iteration count.
+
+    ``n_iters`` is the *actual* number of training iterations, unknown to the
+    scheduler until completion; schedulers must rely on a prediction.
+    """
+
+    job_id: int
+    stages: Tuple[StageSpec, ...]
+    n_iters: int
+    arrival: float = 0.0
+    group_id: int = -1  # recurrence group (hash of meta-info); -1 = unseen
+    user_id: int = 0
+    allreduce: str = RAR  # RAR or TAR intra-stage synchronization
+    model_name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.stages:
+            raise ValueError("job must have at least one stage")
+        if self.n_iters < 1:
+            raise ValueError("job must run at least one iteration")
+        if self.allreduce not in (RAR, TAR):
+            raise ValueError(f"unknown allreduce kind {self.allreduce!r}")
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def g(self) -> int:
+        """Total accelerators required: g_i = sum_s k_{i,s}."""
+        return sum(st.k for st in self.stages)
+
+    @property
+    def is_single_gpu(self) -> bool:
+        return self.g == 1
+
+    def with_iters(self, n_iters: int) -> "JobSpec":
+        return dataclasses.replace(self, n_iters=n_iters)
+
+    def replica_vertices(self) -> Sequence[Tuple[int, int]]:
+        """Vertices of the job graph: (stage_index, replica_index)."""
+        return [
+            (s, r) for s, st in enumerate(self.stages) for r in range(st.k)
+        ]
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Homogeneous cluster: M servers x g accelerators (paper Sec. III)."""
+
+    num_servers: int  # M
+    gpus_per_server: int  # g
+    b_inter: float  # NIC (inter-server) bidirectional bandwidth, bytes/s
+    b_intra: float  # intra-server (NVLink/ICI) bandwidth, bytes/s
+
+    def __post_init__(self) -> None:
+        if self.num_servers < 1 or self.gpus_per_server < 1:
+            raise ValueError("cluster must have >= 1 server and >= 1 GPU each")
+        if self.b_inter <= 0 or self.b_intra <= 0:
+            raise ValueError("bandwidths must be positive")
+
+    @property
+    def total_gpus(self) -> int:  # G = M * g
+        return self.num_servers * self.gpus_per_server
+
+
+Placement = dict  # {server_id: np.ndarray[S_i]} -- x_{i,s}^m, see timing.py

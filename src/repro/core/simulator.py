@@ -1,0 +1,175 @@
+"""Event-driven cluster simulator for online non-preemptive scheduling.
+
+The paper's Algorithm 1 iterates unit time-slots; cluster state only changes
+at job arrivals/completions (plus the comm-heavy delay deadlines), so we
+advance event-to-event — the schedule produced is identical while remaining
+tractable for 10^5-job traces.  ``tests/test_asrpt.py`` cross-checks against
+a literal slotted execution on small instances.
+
+Policies observe only online information: arrivals as they happen, true
+iteration counts only at completion (fed to the predictor).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .cluster import ClusterState
+from .job import ClusterSpec, JobSpec
+from . import timing
+
+_COMPLETION, _ARRIVAL, _WAKE = 0, 1, 2
+
+
+@dataclass
+class Start:
+    job: JobSpec
+    placement: Dict[int, np.ndarray]
+    alpha: float
+
+
+@dataclass
+class JobRecord:
+    arrival: float
+    start: float
+    completion: float
+    alpha: float
+    servers: Tuple[int, ...]
+
+
+@dataclass
+class SimResult:
+    records: Dict[int, JobRecord] = field(default_factory=dict)
+
+    @property
+    def total_completion_time(self) -> float:
+        return sum(r.completion for r in self.records.values())
+
+    @property
+    def total_flow_time(self) -> float:
+        return sum(r.completion - r.arrival for r in self.records.values())
+
+    @property
+    def makespan(self) -> float:
+        return max(r.completion for r in self.records.values())
+
+    @property
+    def mean_jct(self) -> float:
+        return self.total_flow_time / max(len(self.records), 1)
+
+
+class Policy:
+    """Scheduling policy interface (see asrpt.py / baselines.py)."""
+
+    def bind(self, cluster_spec: ClusterSpec) -> None:
+        self.cluster_spec = cluster_spec
+
+    def on_arrival(self, t: float, job: JobSpec) -> None:
+        raise NotImplementedError
+
+    def on_completion(self, t: float, job: JobSpec) -> None:
+        pass
+
+    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+        raise NotImplementedError
+
+    def next_wakeup(self, t: float) -> Optional[float]:
+        return None
+
+
+def simulate(
+    jobs: List[JobSpec],
+    cluster_spec: ClusterSpec,
+    policy: Policy,
+) -> SimResult:
+    for job in jobs:
+        if job.g > cluster_spec.total_gpus:
+            raise ValueError(
+                f"job {job.job_id} needs {job.g} GPUs, cluster has "
+                f"{cluster_spec.total_gpus}"
+            )
+    policy.bind(cluster_spec)
+    cluster = ClusterState(cluster_spec)
+    result = SimResult()
+
+    seq = itertools.count()
+    events: List[Tuple[float, int, int, Optional[JobSpec]]] = []
+    for job in jobs:
+        heapq.heappush(events, (job.arrival, _ARRIVAL, next(seq), job))
+
+    n_completed = 0
+    scheduled_wakes: set = set()
+
+    while events:
+        t = events[0][0]
+        # Drain all events at time t (completions sort before arrivals).
+        while events and events[0][0] == t:
+            _, kind, _, job = heapq.heappop(events)
+            if kind == _COMPLETION:
+                assert job is not None
+                cluster.release(job.job_id)
+                policy.on_completion(t, job)
+                n_completed += 1
+            elif kind == _ARRIVAL:
+                assert job is not None
+                policy.on_arrival(t, job)
+            else:  # _WAKE: no state change; just triggers a scheduling pass.
+                scheduled_wakes.discard(t)
+
+        for start in policy.schedule(t, cluster):
+            job = start.job
+            timing.validate_placement(job, start.placement)
+            cluster.allocate(job.job_id, start.placement)
+            completion = t + job.n_iters * start.alpha
+            result.records[job.job_id] = JobRecord(
+                arrival=job.arrival,
+                start=t,
+                completion=completion,
+                alpha=start.alpha,
+                servers=tuple(sorted(timing.servers_touched(start.placement))),
+            )
+            heapq.heappush(
+                events, (completion, _COMPLETION, next(seq), job)
+            )
+
+        wake = policy.next_wakeup(t)
+        if wake is not None and wake > t and wake not in scheduled_wakes:
+            heapq.heappush(events, (wake, _WAKE, next(seq), None))
+            scheduled_wakes.add(wake)
+
+    if n_completed != len(jobs):
+        missing = len(jobs) - n_completed
+        raise RuntimeError(f"simulation ended with {missing} unfinished jobs")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers: per-config alpha bounds cache
+# ---------------------------------------------------------------------------
+
+
+class AlphaCache:
+    """alpha_max / alpha-tilde_min per unique (stages, allreduce) config."""
+
+    def __init__(self, cluster_spec: ClusterSpec):
+        self.spec = cluster_spec
+        self._cache: Dict[tuple, Tuple[float, float]] = {}
+
+    def bounds(self, job: JobSpec) -> Tuple[float, float]:
+        """Returns (alpha_max, alpha_min_tilde)."""
+        key = (job.stages, job.allreduce)
+        hit = self._cache.get(key)
+        if hit is None:
+            from . import heavy_edge as he  # local import to avoid cycle
+
+            a_max = timing.alpha_max(job, self.spec)
+            a_min = he.alpha_min_estimate(job, self.spec)
+            # The consolidated estimate can only be <= the all-spread bound.
+            a_max = max(a_max, a_min)
+            hit = (a_max, a_min)
+            self._cache[key] = hit
+        return hit

@@ -1,0 +1,212 @@
+"""Per-iteration training-time model: paper Eqs. (4)-(7).
+
+A *placement* is ``{server_id: x}`` where ``x`` is an int vector of length
+``S_i`` with ``x[s] = x_{i,s}^m`` = number of GPUs that server ``m``
+contributes to stage ``s``.  Constraint (2): ``sum_m x[s] == k_{i,s}``.
+
+Per-stage, per-server time  beta_{i,s}^m = comp + comm + AllReduce:
+
+* comp (Eq. 4):     ``p_f + p_b``                  if ``x_s^m > 0``
+* comm (Eq. 5):     inter-server traffic over the reserved NIC share
+                    ``(x_s^m / g) * B_inter`` plus co-located traffic over
+                    ``B_intra``;
+* AllReduce (Eq. 6): ring/tree all-reduce moves ``2 (k-1)/k * h`` bytes per
+  replica; bottleneck bandwidth is the stage's reserved NIC share when the
+  replicas span servers, else ``B_intra``.  (The published Eq. (6) is
+  typographically ambiguous about the ``1/k`` factor; we keep the NCCL
+  ``2(k-1)/k`` data-size model consistently, as in the graph edge weights.)
+
+alpha_i (Eq. 7) = max over (server, stage) of beta — the bottleneck stage of
+the fully-pipelined (asynchronous) execution.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence
+
+import numpy as np
+
+from .job import ClusterSpec, JobSpec
+
+
+def _stage_comm_time(
+    job: JobSpec,
+    x_m: np.ndarray,
+    s: int,
+    cluster: ClusterSpec,
+    nic_share: float | None = None,
+) -> float:
+    """Eq. (5): inter-stage communication time of stage ``s`` on one server.
+
+    ``x_m`` is this server's GPU vector; ``nic_share`` optionally overrides
+    the reserved NIC bandwidth (used for the alpha_max bound).
+    """
+    st = job.stages[s]
+    x_s = int(x_m[s])
+    if x_s == 0:
+        return 0.0
+    g = cluster.gpus_per_server
+    if nic_share is None:
+        nic_share = (x_s / g) * cluster.b_inter
+
+    inter_bytes = 0.0  # bytes crossing the NIC, per replica-pair fractioning
+    intra_bytes = 0.0
+    if s > 0:
+        k_prev = job.stages[s - 1].k
+        x_prev = int(x_m[s - 1])
+        frac_remote = (k_prev - x_prev) / k_prev
+        inter_bytes += 2.0 * st.d_in * frac_remote
+        intra_bytes += 2.0 * st.d_in * (x_prev / k_prev)
+    if s < job.num_stages - 1:
+        k_next = job.stages[s + 1].k
+        x_next = int(x_m[s + 1])
+        frac_remote = (k_next - x_next) / k_next
+        inter_bytes += 2.0 * st.d_out * frac_remote
+        intra_bytes += 2.0 * st.d_out * (x_next / k_next)
+
+    t = 0.0
+    if inter_bytes > 0.0:
+        # numerator carries x_s replicas' traffic; reserved share scales with
+        # x_s too, so the ratio equals inter_bytes * g / B_inter (Eq. 5).
+        t += inter_bytes * x_s / nic_share
+    if intra_bytes > 0.0:
+        t += intra_bytes / cluster.b_intra
+    return t
+
+
+def _stage_allreduce_time(
+    job: JobSpec,
+    x_m: np.ndarray,
+    s: int,
+    cluster: ClusterSpec,
+    nic_share: float | None = None,
+) -> float:
+    """Eq. (6): intra-stage parameter synchronization time on one server."""
+    st = job.stages[s]
+    x_s = int(x_m[s])
+    if x_s == 0 or st.k < 2 or st.h <= 0.0:
+        return 0.0
+    data = 2.0 * (st.k - 1) / st.k * st.h  # bytes per replica (RAR == TAR)
+    if x_s == st.k:  # all replicas co-located: intra-server only
+        return data / cluster.b_intra
+    g = cluster.gpus_per_server
+    if nic_share is None:
+        nic_share = (x_s / g) * cluster.b_inter
+    return data * x_s / nic_share
+
+
+def beta(
+    job: JobSpec,
+    x_m: np.ndarray,
+    s: int,
+    cluster: ClusterSpec,
+) -> float:
+    """beta_{i,s}^m: per-iteration time of stage ``s`` on one server."""
+    if int(x_m[s]) == 0:
+        return 0.0
+    st = job.stages[s]
+    comp = st.p_f + st.p_b  # Eq. (4)
+    return (
+        comp
+        + _stage_comm_time(job, x_m, s, cluster)
+        + _stage_allreduce_time(job, x_m, s, cluster)
+    )
+
+
+def alpha(
+    job: JobSpec,
+    placement: Mapping[int, np.ndarray],
+    cluster: ClusterSpec,
+) -> float:
+    """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m."""
+    best = 0.0
+    for x_m in placement.values():
+        x_m = np.asarray(x_m)
+        for s in range(job.num_stages):
+            if x_m[s] > 0:
+                b = beta(job, x_m, s, cluster)
+                if b > best:
+                    best = b
+    return best
+
+
+def validate_placement(
+    job: JobSpec, placement: Mapping[int, np.ndarray]
+) -> None:
+    """Check constraint (2): every stage fully allocated."""
+    total = np.zeros(job.num_stages, dtype=np.int64)
+    for x_m in placement.values():
+        x = np.asarray(x_m)
+        if np.any(x < 0):
+            raise ValueError("negative GPU allocation")
+        total += x
+    expected = np.array([st.k for st in job.stages])
+    if not np.array_equal(total, expected):
+        raise ValueError(
+            f"placement allocates {total.tolist()} GPUs per stage, "
+            f"job requires {expected.tolist()}"
+        )
+
+
+def alpha_max(job: JobSpec, cluster: ClusterSpec) -> float:
+    """Worst-case per-iteration time (paper Sec. III-B).
+
+    The job is hypothetically spread over ``g_i`` servers, one replica each,
+    with NIC share fixed at ``(1/g) * B_inter``.
+    """
+    g = cluster.gpus_per_server
+    nic_share = cluster.b_inter / g
+    worst = 0.0
+    for s, st in enumerate(job.stages):
+        x_m = np.zeros(job.num_stages, dtype=np.int64)
+        x_m[s] = 1  # lone replica of stage s on its own server
+        comp = st.p_f + st.p_b
+        comm = _stage_comm_time(job, x_m, s, cluster, nic_share=nic_share)
+        ar = _stage_allreduce_time(job, x_m, s, cluster, nic_share=nic_share)
+        worst = max(worst, comp + comm + ar)
+    return worst
+
+
+def placement_from_assignment(
+    job: JobSpec, assignment: Mapping[tuple, int]
+) -> Dict[int, np.ndarray]:
+    """Convert a vertex->server assignment into x_{i,s}^m vectors."""
+    placement: Dict[int, np.ndarray] = {}
+    for (s, _r), m in assignment.items():
+        if m not in placement:
+            placement[m] = np.zeros(job.num_stages, dtype=np.int64)
+        placement[m][s] += 1
+    return placement
+
+
+def servers_touched(placement: Mapping[int, np.ndarray]) -> Sequence[int]:
+    return [m for m, x in placement.items() if np.asarray(x).sum() > 0]
+
+
+def alpha_sync(
+    job: JobSpec,
+    placement: Mapping[int, np.ndarray],
+    cluster: ClusterSpec,
+    n_microbatches: int = 4,
+) -> float:
+    """Synchronous (GPipe-style) per-iteration time variant (paper Sec.
+    III-B remark, following the analytic model of [20]).
+
+    With m micro-batches and S stages, the pipeline fills/drains:
+        T = (m + S - 1)/m * beta_bottleneck(comp+comm) + AllReduce
+    where AllReduce is paid once per iteration at the sync barrier.
+    """
+    S = job.num_stages
+    bottleneck = 0.0
+    ar = 0.0
+    for x_m in placement.values():
+        x_m = np.asarray(x_m)
+        for s in range(S):
+            if x_m[s] == 0:
+                continue
+            st = job.stages[s]
+            comp = st.p_f + st.p_b
+            comm = _stage_comm_time(job, x_m, s, cluster)
+            bottleneck = max(bottleneck, comp + comm)
+            ar = max(ar, _stage_allreduce_time(job, x_m, s, cluster))
+    m = max(1, n_microbatches)
+    return (m + S - 1) / m * bottleneck + ar

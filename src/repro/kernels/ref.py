@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, Sq, H, K]
+    k: jnp.ndarray,  # [B, T, G, K]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # [Sq]
+    kv_pos: jnp.ndarray,  # [T]
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, Sq, H, K = q.shape
+    G = k.shape[2]
+    qg = q.reshape(B, Sq, G, H // G, K).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bsghk,btgk->bghst", qg, kf) * (K**-0.5)
+    ok = kv_pos[None, :] >= 0
+    if causal:
+        ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bghst,btgk->bsghk", p, vf)
+    return o.reshape(B, Sq, H, K).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # [B, S, H, P]
+    dt: jnp.ndarray,  # [B, S, H] (softplus applied)
+    A: jnp.ndarray,  # [H] negative
+    Bm: jnp.ndarray,  # [B, S, N]
+    Cm: jnp.ndarray,  # [B, S, N]
+    init_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (exact) SSD recurrence — O(S) scan, the ground truth."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    )
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # [B,H,P],[B,H],[B,N],[B,N]
+        decay = jnp.exp(dt_t * A)  # [B,H]
+        h = decay[:, :, None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhnp", dt_t, B_t, x_t
+        )
+        y = jnp.einsum("bn,bhnp->bhp", C_t, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    hF, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hF  # [B,S,H,P], [B,H,N,P]
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )

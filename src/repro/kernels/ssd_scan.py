@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+TPU-native structure: the grid is ``(batch*heads, n_chunks)`` with the
+chunk axis declared "arbitrary" (sequential) — TPU executes the last grid
+dimension in order, so the inter-chunk SSM state lives in a VMEM scratch
+buffer that persists across chunk iterations (the standard Pallas carry
+idiom).  Per chunk the kernel computes, entirely in VMEM:
+
+  1. the intra-chunk quadratic term  (C B^T ⊙ decay) x  — MXU matmuls on
+     [Q, N] x [N, Q] and [Q, Q] x [Q, P] tiles (Q = chunk = 128 aligned);
+  2. the contribution of the carried state  C (exp(cum) h);
+  3. the state update  h <- exp(cum_Q) h + (decay_to_end * dt * B)^T x.
+
+One (batch, head) pair per grid row keeps the working set
+(Q x max(N, P, Q) fp32 tiles + the [N, P] state) well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [Q, P]
+    dt_ref,  # [Q, 1]
+    a_ref,  # [1, 1]
+    b_ref,  # [Q, N]
+    c_ref,  # [Q, N]
+    y_ref,  # [Q, P] out
+    state_ref,  # [N, P] out (final state; written every chunk)
+    h_scratch,  # [N, P] f32 VMEM scratch (persists across chunk steps)
+    *,
+    n_chunks: int,
+):
+    ci = pl.program_id(1)
+    Q, P = x_ref.shape
+    N = b_ref.shape[1]
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[...].astype(jnp.float32)  # [Q,P]
+    dt = dt_ref[...].astype(jnp.float32)  # [Q,1]
+    A = a_ref[0, 0].astype(jnp.float32)
+    Bm = b_ref[...].astype(jnp.float32)  # [Q,N]
+    Cm = c_ref[...].astype(jnp.float32)
+
+    dA = dt * A  # [Q,1]
+    cum = jnp.cumsum(dA, axis=0)  # [Q,1]
+
+    # (1) intra-chunk: W[i,j] = (C_i.B_j) exp(cum_i - cum_j) dt_j, j <= i
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q,Q]
+    diff = cum - cum[:, 0][None, :]  # [Q(i),Q(j)]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = iota_j <= iota_i
+    W = jnp.where(tri, CB * jnp.exp(diff) * dt[:, 0][None, :], 0.0)
+    y = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q,P]
+
+    # (2) contribution of the carried state
+    h = h_scratch[...]  # [N,P]
+    Cdec = Cm * jnp.exp(cum)  # [Q,N]
+    y += jax.lax.dot_general(
+        Cdec, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # (3) state update: h <- exp(cum_Q) h + sum_j exp(cum_Q-cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[-1, 0] - cum)  # [Q,1]
+    Bw = Bm * (decay_to_end * dt)  # [Q,N]
+    new_h = jnp.exp(cum[-1, 0]) * h + jax.lax.dot_general(
+        Bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [N,P]
+    h_scratch[...] = new_h
+
+    y_ref[...] = y.astype(y_ref.dtype)
+    state_ref[...] = new_h.astype(state_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # [B, S, H, P]
+    dt: jnp.ndarray,  # [B, S, H]
+    A: jnp.ndarray,  # [H]
+    Bm: jnp.ndarray,  # [B, S, N]
+    Cm: jnp.ndarray,  # [B, S, N]
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, "pad sequence to a chunk multiple (ops.py does)"
+    nc = S // chunk
+
+    # Layout: fold (B, H) into grid axis 0; chunk axis is sequential.
+    xr = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtr = dt.transpose(0, 2, 1).reshape(B * H, S, 1)
+    ar = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H, 1, 1)
+    br = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    cr = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    grid = (B * H, nc)
+
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, 1, 1), lambda h, c: (h, 0, 0)),
+            pl.BlockSpec((None, chunk, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, P), lambda h, c: (h, c, 0)),
+            # final state: every chunk writes the same [N,P] block; the
+            # last (sequential) write wins.
+            pl.BlockSpec((None, N, P), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(xr, dtr, ar, br, cr)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    state = state.reshape(B, H, N, P)
+    return y, state

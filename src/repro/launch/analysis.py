@@ -1,0 +1,152 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e-class, per assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes of the *per-device*
+(SPMD-partitioned) module; collective bytes are not in cost_analysis, so we
+parse the HLO text and sum result-shape bytes of every collective op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one result tensor, e.g. ``bf16[8,128]{1,0}`` or scalar ``f32[]``
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from (S)HLO text."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            # match ``= <result shapes> <op>(``  — avoids fused ops and the
+            # "-start/-done" duplication (count only the -start or plain op).
+            marker = f" {op}("
+            marker_start = f" {op}-start("
+            if marker in line or marker_start in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                result = lhs[1].split(op, 1)[0]
+                for dtype, dims in _SHAPE_RE.findall(result):
+                    out[op] += _shape_bytes(dtype, dims)
+                break
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0  # 6*N*D or 2*N*D (useful flops, whole step)
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs summed over devices)."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput vs peak, if the dominant term binds."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.n_devices / t) / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def model_flops_for(cfg, cell, n_active_params: int) -> float:
+    """Useful-FLOPs floor: 6*N*tokens (train) / 2*N*tokens (inference)."""
+    if cell.kind == "train":
+        return 6.0 * n_active_params * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active_params * cell.global_batch * cell.seq_len
+    # decode: one token per sequence per step
+    return 2.0 * n_active_params * cell.global_batch

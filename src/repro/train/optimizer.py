@@ -1,0 +1,145 @@
+"""AdamW + schedules, from scratch (optax unavailable offline).
+
+Optimizer state (m, v) is fp32 and inherits each parameter's sharding —
+with the FSDP ('data'-axis) parameter sharding in parallel/sharding.py this
+is ZeRO-style optimizer-state sharding for free.
+
+Also: global-norm gradient clipping, cosine LR schedule with warmup, and
+optional int8 gradient compression with error feedback for the slow
+cross-pod (DCN) axis (a distributed-optimization feature; see
+``compress_decompress`` and train_step.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # i32 scalar
+    m: Params  # fp32, same tree as params
+    v: Params  # fp32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * cfg.lr_peak * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Params,
+    grads: Params,
+    state: AdamWState,
+) -> Tuple[Params, AdamWState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+# --------------------------------------------------------------------------
+# int8 gradient compression with error feedback (for the DCN/pod axis)
+# --------------------------------------------------------------------------
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress_with_feedback(
+    grads: Params, error: Params
+) -> Tuple[Params, Params]:
+    """Quantize grads+error to int8 and back; return (grads_hat, new_error).
+
+    Used on the pod (DCN) axis: compressing the cross-pod gradient exchange
+    by 4x (int8 vs fp32) with error feedback keeps convergence unbiased.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = compress(target)
+        ghat = decompress(q, s)
+        return ghat.astype(g.dtype), target - ghat
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    ghat = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return ghat, new_e
+
+
+def zeros_like_error(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,50 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only launch/dryrun.py forces 512 placeholder devices."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec
+from repro.core.job import JobSpec, StageSpec
+
+
+@pytest.fixture
+def cluster() -> ClusterSpec:
+    # paper's simulation settings: 8-GPU servers, 10 Gbps NIC, 300 GB/s intra
+    return ClusterSpec(
+        num_servers=10, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+def make_simple_job(
+    job_id=0,
+    replicas=(2, 2),
+    p=0.1,
+    act_mb=4.0,
+    h_mb=64.0,
+    n_iters=10,
+    arrival=0.0,
+    allreduce="rar",
+    group_id=-1,
+):
+    MB = 1024.0**2
+    stages = []
+    S = len(replicas)
+    for s, k in enumerate(replicas):
+        stages.append(
+            StageSpec(
+                p_f=p / 3,
+                p_b=2 * p / 3,
+                d_in=(replicas[s - 1] * act_mb * MB / k) if s > 0 else 0.0,
+                d_out=act_mb * MB if s < S - 1 else 0.0,
+                h=h_mb * MB,
+                k=k,
+            )
+        )
+    return JobSpec(
+        job_id=job_id,
+        stages=tuple(stages),
+        n_iters=n_iters,
+        arrival=arrival,
+        allreduce=allreduce,
+        group_id=group_id,
+    )

@@ -1,0 +1,80 @@
+"""Loop-aware HLO cost analyzer vs unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _scan_matmuls(L, D=256, B=64):
+    def f(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h.sum()
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    return jax.jit(f).lower(ws, x).compile(), 2 * B * D * D * L
+
+
+@pytest.mark.parametrize("L", [1, 4, 16])
+def test_scan_flops_scale_with_trip_count(L):
+    compiled, expected = _scan_matmuls(L)
+    mc = hlo_cost.analyze(compiled.as_text())
+    assert expected <= mc.flops <= expected * 1.1
+
+
+def test_matches_unrolled():
+    D, B, L = 128, 32, 6
+
+    def f(ws, x, unroll):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws, unroll=unroll)
+        return h.sum()
+
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    c_loop = jax.jit(lambda w, y: f(w, y, 1)).lower(ws, x).compile()
+    c_flat = jax.jit(lambda w, y: f(w, y, True)).lower(ws, x).compile()
+    m_loop = hlo_cost.analyze(c_loop.as_text())
+    m_flat = hlo_cost.analyze(c_flat.as_text())
+    assert m_loop.flops == pytest.approx(m_flat.flops, rel=0.05)
+
+
+def test_nested_scans():
+    D = 128
+
+    def g(ws, x):
+        def outer(h, w):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+            h2, _ = jax.lax.scan(inner, h, None, length=4)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h.sum()
+
+    ws = jax.ShapeDtypeStruct((3, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, D), jnp.float32)
+    c = jax.jit(g).lower(ws, x).compile()
+    mc = hlo_cost.analyze(c.as_text())
+    expected = 2 * 32 * D * D * 12  # 3 outer x 4 inner
+    assert expected <= mc.flops <= expected * 1.15
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    mc = hlo_cost.analyze(c.as_text())
+    expected = 2 * 4 * 64 * 32 * 16
+    assert mc.flops == pytest.approx(expected, rel=0.2)
+
+
+def test_collectives_counted_per_iteration():
+    import numpy as np
+    if len(jax.devices()) < 2:
+        pytest.skip("needs multiple host devices")

@@ -1,0 +1,108 @@
+"""Exact min-cut placement (B&B) vs Heavy-Edge (Table II relationship)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.heavy_edge as he
+from repro.core import build_job_graph
+from repro.core.graph import JobGraph
+from repro.core.ilp import exact_min_cut
+
+from conftest import make_simple_job
+
+
+@st.composite
+def random_graph_and_caps(draw):
+    n = draw(st.integers(2, 8))
+    vertices = [(0, i) for i in range(n)]
+    edges = {}
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()):
+                edges[((0, i), (0, j))] = draw(st.floats(0.1, 100.0))
+    n_parts = draw(st.integers(1, min(3, n)))
+    # random sizes summing to n
+    sizes = [1] * n_parts
+    for _ in range(n - n_parts):
+        sizes[draw(st.integers(0, n_parts - 1))] += 1
+    caps = [(m, s) for m, s in enumerate(sizes)]
+    return JobGraph(vertices, edges), caps
+
+
+class TestExactMinCut:
+    @settings(max_examples=50, deadline=None)
+    @given(random_graph_and_caps())
+    def test_not_worse_than_heavy_edge(self, gc):
+        graph, caps = gc
+        opt_assign, opt_cut = exact_min_cut(graph, caps)
+        heur = he.heavy_edge(graph, caps)
+        assert opt_cut <= graph.cut_weight(heur) + 1e-9
+        # optimum assignment is itself feasible
+        assert graph.cut_weight(opt_assign) == pytest.approx(opt_cut)
+        from collections import Counter
+
+        counts = Counter(opt_assign.values())
+        for m, c in caps:
+            assert counts.get(m, 0) == c
+
+    def test_two_cliques(self):
+        """Two heavy cliques + weak bridge: optimum cuts the bridge."""
+        vertices = [(0, i) for i in range(4)]
+        edges = {
+            ((0, 0), (0, 1)): 100.0,
+            ((0, 2), (0, 3)): 100.0,
+            ((0, 1), (0, 2)): 1.0,
+        }
+        g = JobGraph(vertices, edges)
+        assign, cut = exact_min_cut(g, [(0, 2), (1, 2)])
+        assert cut == pytest.approx(1.0)
+        assert assign[(0, 0)] == assign[(0, 1)]
+        assert assign[(0, 2)] == assign[(0, 3)]
+
+    def test_heavy_edge_near_optimal_pitt(self):
+        """Paper Table II compares per-iteration training time (PITT), not
+        raw cut weight: Heavy-Edge's PITT is within a few % of the ILP
+        placement's PITT on pipeline jobs."""
+        from repro.core import ClusterSpec, timing
+
+        cluster = ClusterSpec(
+            num_servers=8, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+        )
+        rng = np.random.default_rng(0)
+        ratios = []
+        for trial in range(10):
+            replicas = tuple(
+                int(rng.integers(1, 4)) for _ in range(int(rng.integers(1, 4)))
+            )
+            job = make_simple_job(
+                replicas=replicas,
+                act_mb=float(rng.uniform(1, 32)),
+                h_mb=float(rng.uniform(16, 512)),
+            )
+            g = build_job_graph(job)
+            total = job.g
+            n_full, rem = divmod(total, 4)
+            caps = [(m, 4) for m in range(n_full)]
+            if rem:
+                caps.append((n_full, rem))
+            opt_assign, _ = exact_min_cut(g, caps)
+            a_opt = timing.alpha(
+                job, timing.placement_from_assignment(job, opt_assign), cluster
+            )
+            a_he = timing.alpha(
+                job,
+                timing.placement_from_assignment(
+                    job, he.heavy_edge(g, caps)
+                ),
+                cluster,
+            )
+            _, a_ref = he.map_job(job, caps, cluster, refine=True)
+            ratios.append((a_he / a_opt, a_ref / a_opt))
+        greedy = [r[0] for r in ratios]
+        refined = [r[1] for r in ratios]
+        # paper's greedy: near-optimal on most instances but unbounded in
+        # the worst case (NP-complete problem); the beyond-paper local
+        # search closes those gaps.
+        assert np.median(greedy) < 1.05
+        assert np.mean(refined) < 1.05
+        assert max(refined) <= max(greedy) + 1e-9

@@ -1,0 +1,88 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(B, Sq, T, H, G, K, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, K)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, G, K)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, G, K)), dtype)
+    qpos = jnp.arange(T - Sq, T, dtype=jnp.int32)
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    return q, k, v, qpos, kpos
+
+
+SHAPE_SWEEP = [
+    # (B, Sq, T, H, G, K)
+    (1, 128, 128, 4, 4, 128),   # MHA
+    (2, 256, 256, 8, 2, 128),   # GQA 4:1
+    (1, 128, 128, 4, 1, 128),   # MQA
+    (1, 128, 384, 4, 2, 128),   # cache longer than queries
+    (2, 128, 128, 4, 2, 64),    # small head dim
+    (1, 512, 512, 2, 2, 128),   # longer seq
+]
+
+
+@pytest.mark.parametrize("shape", SHAPE_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(shape, dtype):
+    B, Sq, T, H, G, K = shape
+    q, k, v, qpos, kpos = _mk(B, Sq, T, H, G, K, dtype)
+    out = ops.flash_attention(q, k, v, qpos, kpos, True, None)
+    want = ref.flash_attention_ref(q, k, v, qpos, kpos, True, None)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("window", [32, 96, 128])
+def test_sliding_window(window):
+    q, k, v, qpos, kpos = _mk(1, 256, 256, 4, 2, 128, jnp.float32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, True, window)
+    want = ref.flash_attention_ref(q, k, v, qpos, kpos, True, window)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_non_causal_encoder():
+    q, k, v, qpos, kpos = _mk(2, 128, 128, 4, 4, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, False, None)
+    want = ref.flash_attention_ref(q, k, v, qpos, kpos, False, None)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_masked_empty_slots():
+    """Ring-buffer slots with pos=-1 must be ignored."""
+    q, k, v, qpos, kpos = _mk(1, 128, 256, 4, 2, 128, jnp.float32)
+    kpos = kpos.at[200:].set(-1)
+    out = ops.flash_attention(q, k, v, qpos, kpos, True, None)
+    want = ref.flash_attention_ref(q, k, v, qpos, kpos, True, None)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_gradients_match_ref():
+    q, k, v, qpos, kpos = _mk(1, 128, 128, 4, 2, 128, jnp.float32)
+
+    def f(fn):
+        def loss(q, k, v):
+            return (fn(q, k, v, qpos, kpos, True, None) ** 2).sum()
+        return jax.grad(loss, argnums=(0, 1, 2))
+
+    g_ker = f(ops.flash_attention)(q, k, v)
+    g_ref = f(ref.flash_attention_ref)(q, k, v)
+    for a, b in zip(g_ker, g_ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4
+        )

@@ -1,0 +1,23 @@
+"""Fused RMSNorm Pallas kernel vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize(
+    "shape", [(4, 64), (2, 300, 512), (1, 7, 128), (3, 1000)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    scale = jnp.asarray(rng.normal(size=shape[-1:]), jnp.float32)
+    out = ops.rmsnorm(x, scale)
+    want = ref.rmsnorm_ref(x, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )

@@ -1,0 +1,93 @@
+"""AdamW from scratch: convergence, clipping, schedule, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress,
+    compress_decompress_with_feedback,
+    cosine_lr,
+    decompress,
+    global_norm,
+    zeros_like_error,
+)
+
+
+def test_converges_on_quadratic():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_clip_bounds_update():
+    cfg = AdamWConfig(clip_norm=1.0, lr_peak=1.0, warmup_steps=0,
+                      total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    huge = {"w": jnp.array([1e6, 1e6, 1e6])}
+    _, _, metrics = adamw_update(cfg, params, huge, state)
+    assert float(metrics["grad_norm"]) > 1e6  # raw norm reported
+    # post-clip effective grad has norm 1 -> m bounded
+    # (indirect: update magnitude is bounded by lr)
+
+
+def test_cosine_schedule_endpoints():
+    cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    assert float(cosine_lr(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(cosine_lr(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(cosine_lr(cfg, jnp.asarray(100))) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=0, total_steps=10,
+                      weight_decay=1.0)
+    params = {"mat": jnp.ones((2, 2)), "scale": jnp.ones((4,))}
+    state = adamw_init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = adamw_update(cfg, params, zeros, state)
+    assert float(jnp.max(jnp.abs(new["mat"]))) < 1.0  # decayed
+    np.testing.assert_allclose(np.asarray(new["scale"]), 1.0)  # exempt
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+        q, s = compress(g)
+        back = decompress(q, s)
+        assert float(jnp.max(jnp.abs(back - g))) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_is_unbiased_over_time(self):
+        """Accumulated compressed sum ~= accumulated true sum."""
+        rng = np.random.default_rng(1)
+        grads_seq = [
+            {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+            for _ in range(50)
+        ]
+        err = zeros_like_error(grads_seq[0])
+        acc_hat = jnp.zeros(64)
+        acc_true = jnp.zeros(64)
+        for g in grads_seq:
+            ghat, err = compress_decompress_with_feedback(g, err)
+            acc_hat = acc_hat + ghat["w"]
+            acc_true = acc_true + g["w"]
+        # residual bounded by one quantization step, not O(T) drift
+        resid = float(jnp.max(jnp.abs(acc_hat - acc_true)))
+        per_step = float(jnp.max(jnp.abs(grads_seq[0]["w"]))) / 127
+        assert resid < per_step * 4
+
+
+def test_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(tree)) == pytest.approx(5.0)

@@ -1,0 +1,100 @@
+"""Random-forest iteration predictor (from scratch) + simpler baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictor import (
+    GroupStatPredictor,
+    PerfectPredictor,
+    RandomForestPredictor,
+    RandomForestRegressor,
+)
+from conftest import make_simple_job
+
+
+class TestRandomForestRegressor:
+    def test_fits_piecewise_constant(self):
+        rng = np.random.default_rng(0)
+        X = rng.integers(0, 50, size=(2000, 2)).astype(float)
+        y = (X[:, 0] * 13 + X[:, 1] * 3) % 97.0
+        rf = RandomForestRegressor(n_estimators=30, max_depth=14, seed=0)
+        rf.fit(X, y)
+        pred = rf.predict(X)
+        mae = np.abs(pred - y).mean()
+        assert mae < np.abs(y - y.mean()).mean() * 0.5
+
+    def test_deterministic_given_seed(self):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(500, 3))
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+        p1 = RandomForestRegressor(n_estimators=10, seed=7).fit(X, y).predict(X)
+        p2 = RandomForestRegressor(n_estimators=10, seed=7).fit(X, y).predict(X)
+        np.testing.assert_array_equal(p1, p2)
+
+    def test_reduces_variance_vs_single_tree(self):
+        rng = np.random.default_rng(2)
+        X = rng.normal(size=(800, 2))
+        y = X[:, 0] ** 2 + rng.normal(scale=0.3, size=800)
+        Xt = rng.normal(size=(200, 2))
+        yt = Xt[:, 0] ** 2
+        single = RandomForestRegressor(n_estimators=1, seed=0).fit(X, y)
+        forest = RandomForestRegressor(n_estimators=50, seed=0).fit(X, y)
+        err1 = np.mean((single.predict(Xt) - yt) ** 2)
+        err50 = np.mean((forest.predict(Xt) - yt) ** 2)
+        assert err50 <= err1
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 200))
+    def test_predict_shape(self, n):
+        rng = np.random.default_rng(n)
+        X = rng.normal(size=(max(n, 40), 2))
+        y = rng.normal(size=max(n, 40))
+        rf = RandomForestRegressor(n_estimators=3, seed=0).fit(X, y)
+        assert rf.predict(X[:n]).shape == (n,)
+
+
+def _observe_group(pred, gid, iters):
+    for i, n in enumerate(iters):
+        job = make_simple_job(job_id=i, group_id=gid, n_iters=n)
+        pred.observe(job, n)
+
+
+class TestIterationPredictors:
+    def test_unseen_predicts_zero(self):
+        for p in (
+            GroupStatPredictor("mean"),
+            GroupStatPredictor("median"),
+            RandomForestPredictor(),
+        ):
+            job = make_simple_job(group_id=42)
+            assert p.predict(job) == 0.0
+
+    def test_group_stats(self):
+        p = GroupStatPredictor("mean")
+        _observe_group(p, 5, [100, 200, 300])
+        assert p.predict(make_simple_job(group_id=5)) == pytest.approx(200)
+        p2 = GroupStatPredictor("median")
+        _observe_group(p2, 5, [100, 110, 500])
+        assert p2.predict(make_simple_job(group_id=5)) == pytest.approx(110)
+
+    def test_perfect(self):
+        p = PerfectPredictor()
+        assert p.predict(make_simple_job(n_iters=123)) == 123
+
+    def test_rf_predictor_learns_groups(self):
+        rng = np.random.default_rng(0)
+        p = RandomForestPredictor(retrain_every=64, seed=0)
+        group_means = {g: float(rng.integers(50, 500)) for g in range(20)}
+        # stream of observations
+        for i in range(600):
+            g = int(rng.integers(0, 20))
+            n = max(1, int(group_means[g] * rng.uniform(0.9, 1.1)))
+            job = make_simple_job(job_id=i, group_id=g, n_iters=n)
+            p.predict(job)
+            p.observe(job, n)
+        errs, mean_errs = [], []
+        mean_pred = GroupStatPredictor("mean")
+        for g, mu in group_means.items():
+            job = make_simple_job(group_id=g, n_iters=int(mu))
+            errs.append(abs(p.predict(job) - mu))
+        assert np.mean(errs) < 0.2 * np.mean(list(group_means.values()))

@@ -1,0 +1,85 @@
+"""Virtual single-machine SRPT: optimality + bookkeeping properties."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.srpt import VirtualSRPT, srpt_total_completion
+
+
+def brute_force_nonpreemptive(jobs):
+    """Best total completion over all non-preemptive orderings."""
+    best = float("inf")
+    for perm in itertools.permutations(jobs):
+        t, total = 0.0, 0.0
+        for jid, r, w in perm:
+            t = max(t, r) + w
+            total += t
+        best = min(best, total)
+    return best
+
+
+jobs_strategy = st.lists(
+    st.tuples(
+        st.floats(0.0, 20.0),  # arrival
+        st.floats(0.01, 10.0),  # work
+    ),
+    min_size=1,
+    max_size=6,
+)
+
+
+class TestSRPTOptimality:
+    @settings(max_examples=80, deadline=None)
+    @given(jobs_strategy)
+    def test_beats_all_nonpreemptive_orders(self, raw):
+        jobs = [(i, r, w) for i, (r, w) in enumerate(raw)]
+        total, _ = srpt_total_completion(jobs)
+        assert total <= brute_force_nonpreemptive(jobs) + 1e-6
+
+    @settings(max_examples=60, deadline=None)
+    @given(jobs_strategy)
+    def test_completion_bounds(self, raw):
+        jobs = [(i, r, w) for i, (r, w) in enumerate(raw)]
+        _, completions = srpt_total_completion(jobs)
+        total_work = sum(w for _, _, w in jobs)
+        for jid, r, w in jobs:
+            c = completions[jid]
+            assert c >= r + w - 1e-9  # can't finish before work done
+            assert c <= max(r_ for _, r_, _ in jobs) + total_work + 1e-9
+
+    def test_preemption_helps(self):
+        # long job at t=0, short at t=1: SRPT preempts
+        total, comp = srpt_total_completion([(0, 0.0, 10.0), (1, 1.0, 1.0)])
+        assert comp[1] == pytest.approx(2.0)  # short done at 2
+        assert comp[0] == pytest.approx(11.0)
+        # non-preemptive best: 10 + 11 = 21 > 13
+        assert total == pytest.approx(13.0)
+
+
+class TestVirtualMachine:
+    def test_zero_work_completes_instantly(self):
+        vm = VirtualSRPT()
+        vm.arrive(5.0, 1, 0.0)
+        done = vm.advance(5.0)
+        assert done == [(5.0, 1)]
+
+    def test_incremental_matches_offline(self):
+        jobs = [(0, 0.0, 3.0), (1, 1.0, 1.0), (2, 1.5, 0.5)]
+        _, offline = srpt_total_completion(jobs)
+        vm = VirtualSRPT()
+        seen = {}
+        events = sorted(jobs, key=lambda j: j[1])
+        for jid, r, w in events:
+            vm.arrive(r, jid, w)
+        for t in [1.0, 2.0, 3.0, 10.0]:
+            for ct, jid in vm.advance(t):
+                seen[jid] = ct
+        assert seen == pytest.approx(offline)
+
+    def test_next_completion_time(self):
+        vm = VirtualSRPT()
+        vm.arrive(0.0, 0, 2.0)
+        assert vm.next_completion_time() == pytest.approx(2.0)
+        vm.arrive(1.0, 1, 0.5)  # preempts
+        assert vm.next_completion_time() == pytest.approx(1.5)

@@ -1,0 +1,54 @@
+"""Synthetic MLaaS-like trace generator statistics."""
+import numpy as np
+import pytest
+
+from repro.core import TraceConfig, generate_trace, trace_stats
+
+
+def test_matches_published_statistics():
+    cfg = TraceConfig(n_jobs=4000, seed=0)
+    jobs = generate_trace(cfg)
+    stats = trace_stats(jobs)
+    # MLaaS [6]: ~65% of jobs recur >= 5 times; > 70% single-GPU
+    assert stats["frac_recurrent_ge5"] >= 0.60
+    assert abs(stats["frac_single_gpu"] - cfg.single_gpu_frac) < 0.1
+    assert stats["n_jobs"] == pytest.approx(4000, abs=5)
+
+
+def test_sorted_arrivals_and_ids():
+    jobs = generate_trace(TraceConfig(n_jobs=500, seed=1))
+    arr = [j.arrival for j in jobs]
+    assert arr == sorted(arr)
+    assert len({j.job_id for j in jobs}) == len(jobs)
+    assert all(0 <= j.arrival <= TraceConfig().horizon for j in jobs)
+
+
+def test_deterministic():
+    a = generate_trace(TraceConfig(n_jobs=300, seed=9))
+    b = generate_trace(TraceConfig(n_jobs=300, seed=9))
+    assert [(j.arrival, j.n_iters, j.g) for j in a] == [
+        (j.arrival, j.n_iters, j.g) for j in b
+    ]
+
+
+def test_max_gpus_clamp():
+    jobs = generate_trace(
+        TraceConfig(n_jobs=800, seed=2, max_gpus_per_job=8)
+    )
+    assert max(j.g for j in jobs) <= 8
+
+
+def test_recurrent_group_iters_similar():
+    """Recurring jobs in a group have correlated iteration counts —
+    the property that makes prediction possible at all."""
+    jobs = generate_trace(TraceConfig(n_jobs=2000, seed=3))
+    from collections import defaultdict
+
+    groups = defaultdict(list)
+    for j in jobs:
+        groups[j.group_id].append(j.n_iters)
+    big = [v for v in groups.values() if len(v) >= 8]
+    assert big
+    # within-group median absolute deviation is small vs global spread
+    within = np.mean([np.std(v) / (np.mean(v) + 1e-9) for v in big])
+    assert within < 0.6
