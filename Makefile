@@ -1,0 +1,20 @@
+# Developer entry points.  The container pins jax; `hypothesis` is an
+# optional dev dependency — property tests fall back to seeded sampling
+# when it is absent (tests/_hypothesis_fallback.py).
+
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test smoke bench-sched
+
+test:
+	python -m pytest -x -q
+
+# Tier-1 + the headline scheduling figure: catches both correctness and
+# perf regressions in the scheduling engine.
+smoke: test
+	python -m benchmarks.run --only fig6
+
+# Trace-scale scheduling benchmark (5k/20k jobs; 100k with FULL=1).
+bench-sched:
+	python -m benchmarks.run --only sched_scale $(if $(FULL),--full,)

@@ -29,11 +29,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma-separated bench names (fig4..fig9,table2,roofline)",
+        help="comma-separated bench names "
+             "(fig4..fig9,table2,sched_scale,roofline)",
     )
     args = ap.parse_args()
 
-    from . import paper_figs, roofline
+    from . import paper_figs, roofline, sched_scale
 
     benches = {
         "fig4": paper_figs.fig4_prediction,
@@ -43,6 +44,7 @@ def main() -> None:
         "fig8": paper_figs.fig8_bandwidth,
         "fig9": paper_figs.fig9_predictors,
         "table2": paper_figs.table2_heavyedge_ilp,
+        "sched_scale": sched_scale.sched_scale,
     }
     selected = (
         args.only.split(",") if args.only else list(benches) + ["roofline"]
@@ -68,7 +70,8 @@ def main() -> None:
         derived = ""
         for r in rows:
             for k in ("asrpt_flow_reduction_vs_best", "gap_vs_perfect",
-                      "pitt_gap", "frac_exact(<=1_iter)", "rf_gap_vs_perfect"):
+                      "pitt_gap", "frac_exact(<=1_iter)", "rf_gap_vs_perfect",
+                      "cache_speedup_20k"):
                 if k in r and r[k] != "":
                     derived = f"{k}={r[k]}"
         summary.append((name, wall * 1e6 / max(len(rows), 1), derived))

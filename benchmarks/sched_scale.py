@@ -1,0 +1,122 @@
+"""Trace-scale scheduling benchmark: A-SRPT + baselines at 5k-100k jobs.
+
+Regime ("placement stress at paper scale"): 64 servers x 8 GPUs (half the
+paper's 2000-GPU simulation cluster), 80 % multi-GPU jobs up to 64 GPUs,
+horizon scaled with the job count to keep the bursty moderate-load regime,
+and A-SRPT running the refined (multi-start local-search) Heavy-Edge
+mapping — the quality mode whose per-placement cost the placement cache is
+designed to amortize.
+
+Reported per row: wall seconds, events processed, events/sec, peak
+pending-queue depth (policy-held jobs), total flow time.  At 20k jobs the
+A-SRPT row is additionally run with ``placement_cache=False`` — the
+exhaustive re-evaluation engine — and the cached/uncached events-per-sec
+ratio is reported as ``cache_speedup_20k`` (the two engines produce
+bit-identical schedules; tests/test_sched_cache.py holds that equivalence
+under property testing).
+
+The 100k-job sweep runs A-SRPT always; the five baselines join at 100k
+only under ``--full`` (they are each ~minutes at that scale).
+
+This is a *throughput* benchmark: the regime deliberately saturates the
+cluster (peak queue depths in the thousands), where strict head-of-line
+policies trade flow time for order fidelity.  Scheduling-quality
+comparisons against the paper belong to fig6/fig7/fig8.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (
+    ASRPTPolicy,
+    BASELINES,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+)
+
+from .common import make_cluster
+
+NUM_SERVERS = 64
+SINGLE_GPU_FRAC = 0.2
+MAX_GPUS_PER_JOB = 64
+SECONDS_PER_JOB = 12.0  # horizon = n_jobs * this
+SIZES = (5_000, 20_000, 100_000)
+COMPARE_AT = 20_000  # cached vs uncached measurement point
+
+
+def _trace(n_jobs: int, seed: int = 1) -> list:
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=n_jobs * SECONDS_PER_JOB,
+            seed=seed,
+            single_gpu_frac=SINGLE_GPU_FRAC,
+            max_gpus_per_job=MAX_GPUS_PER_JOB,
+            mean_iters=400,
+            sigma_iters=1.6,
+            session_spread=120.0,
+        )
+    )
+
+
+def _asrpt(placement_cache: bool = True) -> ASRPTPolicy:
+    return ASRPTPolicy(
+        make_predictor("mean"),
+        tau=2.0,
+        refine_mapping=True,
+        placement_cache=placement_cache,
+    )
+
+
+def _row(n_jobs: int, policy_name: str, res) -> Dict:
+    return {
+        "n_jobs": n_jobs,
+        "policy": policy_name,
+        "wall_s": round(res.wall_s, 3),
+        "events": res.n_events,
+        "events_per_sec": round(res.events_per_sec, 1),
+        "peak_queue_depth": res.peak_queue_depth,
+        "total_flow": f"{res.total_flow_time:.4e}",
+    }
+
+
+def sched_scale(full: bool = False) -> List[Dict]:
+    cluster = make_cluster(num_servers=NUM_SERVERS)
+    rows: List[Dict] = []
+    for n in SIZES:
+        jobs = _trace(n)
+        res_c = simulate(jobs, cluster, _asrpt(), validate=False)
+
+        if n == COMPARE_AT:
+            # Best-of-3 per engine (symmetric), back to back: the cached
+            # run is short enough that a single sample swings tens of
+            # percent with host noise, and the ratio is the headline
+            # number.
+            for _ in range(2):
+                r2 = simulate(jobs, cluster, _asrpt(), validate=False)
+                if r2.wall_s < res_c.wall_s:
+                    res_c = r2
+            rows.append(_row(n, "A-SRPT", res_c))
+            res_u = min(
+                (
+                    simulate(jobs, cluster, _asrpt(False), validate=False)
+                    for _ in range(3)
+                ),
+                key=lambda r: r.wall_s,
+            )
+            row = _row(n, "A-SRPT (uncached)", res_u)
+            row["cache_speedup_20k"] = round(
+                res_c.events_per_sec / res_u.events_per_sec, 2
+            )
+            rows.append(row)
+        else:
+            rows.append(_row(n, "A-SRPT", res_c))
+
+        if n < 100_000 or full:
+            for name in BASELINES:
+                pol = BASELINES[name](make_predictor("mean"))
+                res = simulate(jobs, cluster, pol, validate=False)
+                rows.append(_row(n, name, res))
+    return rows

@@ -1,7 +1,15 @@
-"""Mutable cluster state for the schedulers/simulator."""
+"""Mutable cluster state for the schedulers/simulator.
+
+Change-tracking for incremental schedulers (see asrpt.py): every mutation
+bumps ``epoch``.  While ``epoch`` is unchanged a policy may reuse any
+decision that is a pure function of the free-capacity state; nothing
+weaker is sound — in particular "only releases can improve a placement"
+does NOT hold, because Heavy-Edge is greedy and shrinking capacities can
+reshuffle the selected capacity vector into one the greedy maps better.
+"""
 from __future__ import annotations
 
-from typing import Dict, Mapping
+from typing import Dict, Mapping, Optional
 
 import numpy as np
 
@@ -17,37 +25,67 @@ class ClusterState:
             m: spec.gpus_per_server for m in range(spec.num_servers)
         }
         self._job_alloc: Dict[int, Dict[int, int]] = {}
+        self._total_free: int = spec.num_servers * spec.gpus_per_server
+        self.epoch: int = 0
 
     @property
     def total_free(self) -> int:
-        return sum(self.free.values())
+        return self._total_free
 
     def can_fit(self, g_needed: int) -> bool:
-        return self.total_free >= g_needed
+        return self._total_free >= g_needed
 
-    def allocate(self, job_id: int, placement: Mapping[int, np.ndarray]) -> None:
-        per_server = {
-            m: int(np.asarray(x).sum()) for m, x in placement.items()
-        }
+    def allocate(
+        self,
+        job_id: int,
+        placement: Mapping[int, np.ndarray],
+        counts: Optional[Mapping[int, int]] = None,
+    ) -> None:
+        """Reserve GPUs for ``placement``.
+
+        ``counts`` optionally supplies the per-server GPU totals (callers
+        that selected capacities already know them); otherwise they are
+        summed from the placement vectors.
+        """
+        free = self.free
+        if counts is not None:
+            per_server = dict(counts)
+        else:
+            per_server = {
+                m: int(x.sum()) if isinstance(x, np.ndarray)
+                else int(np.asarray(x).sum())
+                for m, x in placement.items()
+            }
         for m, n in per_server.items():
-            if n > self.free.get(m, 0):
+            if n > free.get(m, 0):
                 raise ValueError(
-                    f"server {m} has {self.free.get(m, 0)} free GPUs, "
+                    f"server {m} has {free.get(m, 0)} free GPUs, "
                     f"job {job_id} wants {n}"
                 )
+        total = 0
         for m, n in per_server.items():
-            self.free[m] -= n
+            free[m] -= n
+            total += n
+        self._total_free -= total
         self._job_alloc[job_id] = per_server
+        self.epoch += 1
 
     def release(self, job_id: int) -> None:
+        cap = self.spec.gpus_per_server
+        total = 0
         for m, n in self._job_alloc.pop(job_id).items():
             self.free[m] += n
-            if self.free[m] > self.spec.gpus_per_server:
+            total += n
+            if self.free[m] > cap:
                 raise AssertionError(f"server {m} over-freed")
+        self._total_free += total
+        self.epoch += 1
 
     def mark_server_down(self, server_id: int) -> None:
         """Fault-tolerance hook: a failed server contributes no capacity."""
+        self._total_free -= self.free[server_id]
         self.free[server_id] = 0
+        self.epoch += 1
 
     def snapshot_free(self) -> Dict[int, int]:
         return dict(self.free)

@@ -15,11 +15,23 @@ A single-GPU job is a job with one non-replicated stage.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 RAR = "rar"  # ring all-reduce
 TAR = "tar"  # (double binary) tree all-reduce
+
+# process-wide intern table for JobSpec.config_key (see below)
+_CONFIG_IDS: dict = {}
+
+
+def _intern_config(key: tuple) -> int:
+    cid = _CONFIG_IDS.get(key)
+    if cid is None:
+        cid = len(_CONFIG_IDS)
+        _CONFIG_IDS[key] = cid
+    return cid
 
 
 @dataclass(frozen=True)
@@ -70,10 +82,26 @@ class JobSpec:
     def num_stages(self) -> int:
         return len(self.stages)
 
-    @property
+    @functools.cached_property
     def g(self) -> int:
-        """Total accelerators required: g_i = sum_s k_{i,s}."""
+        """Total accelerators required: g_i = sum_s k_{i,s}.
+
+        cached_property writes to the instance ``__dict__`` directly, which
+        is allowed on frozen dataclasses — ``g`` is read on every capacity
+        check in the scheduling hot path.
+        """
         return sum(st.k for st in self.stages)
+
+    @functools.cached_property
+    def config_key(self) -> int:
+        """Small interned id of the *structural* config (stages, allreduce).
+
+        Jobs with equal config ids map identically onto equal server
+        capacities; caches key on this id instead of re-hashing the whole
+        stage tuple on every probe (recurring MLaaS jobs share configs, so
+        the intern table stays small).
+        """
+        return _intern_config((self.stages, self.allreduce))
 
     @property
     def is_single_gpu(self) -> bool:

@@ -6,6 +6,20 @@ advance event-to-event — the schedule produced is identical while remaining
 tractable for 10^5-job traces.  ``tests/test_asrpt.py`` cross-checks against
 a literal slotted execution on small instances.
 
+Hot-path design (trace scale):
+
+* policies *own* their allocations: ``schedule`` allocates on the live
+  ``ClusterState`` and the simulator only releases on completion.  (The old
+  protocol had each pass allocate, undo, and the simulator re-allocate —
+  three O(placement) dict walks per start, and the undo releases defeated
+  the release-epoch change tracking policies use to skip recomputation.)
+* wake-ups are epoch-tagged: at most one *live* wake event exists at a
+  time; superseded wakes stay in the heap but are recognised as stale by
+  their epoch and skipped without a scheduling pass.  The old
+  ``scheduled_wakes`` set grew without bound on long traces.
+* all events at the same timestamp are drained before a single scheduling
+  pass runs.
+
 Policies observe only online information: arrivals as they happen, true
 iteration counts only at completion (fed to the predictor).
 """
@@ -14,7 +28,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -44,6 +58,11 @@ class JobRecord:
 @dataclass
 class SimResult:
     records: Dict[int, JobRecord] = field(default_factory=dict)
+    # engine statistics (filled by ``simulate``; benchmarks/sched_scale.py)
+    n_events: int = 0
+    n_sched_passes: int = 0
+    peak_queue_depth: int = 0
+    wall_s: float = 0.0
 
     @property
     def total_completion_time(self) -> float:
@@ -61,9 +80,17 @@ class SimResult:
     def mean_jct(self) -> float:
         return self.total_flow_time / max(len(self.records), 1)
 
+    @property
+    def events_per_sec(self) -> float:
+        return self.n_events / self.wall_s if self.wall_s > 0 else float("nan")
+
 
 class Policy:
-    """Scheduling policy interface (see asrpt.py / baselines.py)."""
+    """Scheduling policy interface (see asrpt.py / baselines.py).
+
+    ``schedule`` must ``cluster.allocate`` every returned start — the
+    allocation is kept (the simulator releases it at the job's completion).
+    """
 
     def bind(self, cluster_spec: ClusterSpec) -> None:
         self.cluster_spec = cluster_spec
@@ -80,12 +107,24 @@ class Policy:
     def next_wakeup(self, t: float) -> Optional[float]:
         return None
 
+    def queue_depth(self) -> int:
+        """Jobs held by the policy (pending + delayed); for engine stats."""
+        return 0
+
 
 def simulate(
     jobs: List[JobSpec],
     cluster_spec: ClusterSpec,
     policy: Policy,
+    validate: bool = True,
 ) -> SimResult:
+    """Run ``policy`` over ``jobs``; returns per-job records + engine stats.
+
+    ``validate=False`` skips the per-start placement re-validation (safety
+    net for policy bugs) — benchmarks use it; tests keep it on.
+    """
+    import time as _time
+
     for job in jobs:
         if job.g > cluster_spec.total_gpus:
             raise ValueError(
@@ -95,55 +134,88 @@ def simulate(
     policy.bind(cluster_spec)
     cluster = ClusterState(cluster_spec)
     result = SimResult()
+    records = result.records
 
+    wall0 = _time.perf_counter()
     seq = itertools.count()
-    events: List[Tuple[float, int, int, Optional[JobSpec]]] = []
-    for job in jobs:
-        heapq.heappush(events, (job.arrival, _ARRIVAL, next(seq), job))
+    # (time, kind, seq-or-epoch, job-or-None); kind breaks time ties
+    # (completions before arrivals before wakes), seq keeps sorts stable.
+    events: List[Tuple[float, int, int, Optional[JobSpec]]] = [
+        (job.arrival, _ARRIVAL, next(seq), job) for job in jobs
+    ]
+    heapq.heapify(events)
 
     n_completed = 0
-    scheduled_wakes: set = set()
+    n_events = 0
+    peak_depth = 0
+    n_passes = 0
+    # Single live wake: stale wake events carry an older epoch and are
+    # dropped on pop without triggering a scheduling pass.
+    wake_epoch = 0
+    wake_time: Optional[float] = None
 
+    heappop, heappush = heapq.heappop, heapq.heappush
+    schedule = policy.schedule
+    queue_depth = policy.queue_depth
+    next_wakeup = policy.next_wakeup
+    on_arrival = policy.on_arrival
+    on_completion = policy.on_completion
+    release = cluster.release
     while events:
         t = events[0][0]
-        # Drain all events at time t (completions sort before arrivals).
+        live = False  # any non-stale event at this timestamp?
         while events and events[0][0] == t:
-            _, kind, _, job = heapq.heappop(events)
+            _, kind, tag, job = heappop(events)
+            n_events += 1
             if kind == _COMPLETION:
-                assert job is not None
-                cluster.release(job.job_id)
-                policy.on_completion(t, job)
+                release(job.job_id)
+                on_completion(t, job)
                 n_completed += 1
+                live = True
             elif kind == _ARRIVAL:
-                assert job is not None
-                policy.on_arrival(t, job)
+                on_arrival(t, job)
+                live = True
             else:  # _WAKE: no state change; just triggers a scheduling pass.
-                scheduled_wakes.discard(t)
+                if tag == wake_epoch:
+                    wake_time = None
+                    live = True
+                # else: superseded wake — ignore.
+        if not live:
+            continue
 
-        for start in policy.schedule(t, cluster):
+        for start in schedule(t, cluster):
             job = start.job
-            timing.validate_placement(job, start.placement)
-            cluster.allocate(job.job_id, start.placement)
+            if validate:
+                timing.validate_placement(job, start.placement)
             completion = t + job.n_iters * start.alpha
-            result.records[job.job_id] = JobRecord(
+            records[job.job_id] = JobRecord(
                 arrival=job.arrival,
                 start=t,
                 completion=completion,
                 alpha=start.alpha,
-                servers=tuple(sorted(timing.servers_touched(start.placement))),
+                # placements never carry empty per-server vectors, so the
+                # touched servers are exactly the placement keys
+                servers=tuple(sorted(start.placement)),
             )
-            heapq.heappush(
-                events, (completion, _COMPLETION, next(seq), job)
-            )
+            heappush(events, (completion, _COMPLETION, next(seq), job))
+        n_passes += 1
+        depth = queue_depth()
+        if depth > peak_depth:
+            peak_depth = depth
 
-        wake = policy.next_wakeup(t)
-        if wake is not None and wake > t and wake not in scheduled_wakes:
-            heapq.heappush(events, (wake, _WAKE, next(seq), None))
-            scheduled_wakes.add(wake)
+        wake = next_wakeup(t)
+        if wake is not None and wake > t and wake != wake_time:
+            wake_epoch += 1
+            wake_time = wake
+            heappush(events, (wake, _WAKE, wake_epoch, None))
 
     if n_completed != len(jobs):
         missing = len(jobs) - n_completed
         raise RuntimeError(f"simulation ended with {missing} unfinished jobs")
+    result.n_events = n_events
+    result.n_sched_passes = n_passes
+    result.peak_queue_depth = peak_depth
+    result.wall_s = _time.perf_counter() - wall0
     return result
 
 
@@ -157,11 +229,11 @@ class AlphaCache:
 
     def __init__(self, cluster_spec: ClusterSpec):
         self.spec = cluster_spec
-        self._cache: Dict[tuple, Tuple[float, float]] = {}
+        self._cache: Dict[int, Tuple[float, float]] = {}
 
     def bounds(self, job: JobSpec) -> Tuple[float, float]:
         """Returns (alpha_max, alpha_min_tilde)."""
-        key = (job.stages, job.allreduce)
+        key = job.config_key
         hit = self._cache.get(key)
         if hit is None:
             from . import heavy_edge as he  # local import to avoid cycle

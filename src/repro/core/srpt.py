@@ -73,6 +73,11 @@ class VirtualSRPT:
         return self._now + self._heap[0][0]
 
     @property
+    def is_idle(self) -> bool:
+        """No queued work and no unreleased completions: advance is a no-op."""
+        return not self._heap and not self._unreleased
+
+    @property
     def now(self) -> float:
         return self._now
 

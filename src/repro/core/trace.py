@@ -48,79 +48,138 @@ class TraceConfig:
 
 
 def generate_trace(cfg: TraceConfig) -> List[JobSpec]:
+    """Generate the trace with NumPy-vectorized draws.
+
+    All random quantities are drawn as arrays (group sizes in chunks; one
+    flat array per per-group / per-job attribute, with segmented cumsums
+    for the intra-session spacings), so generating 10^5+ jobs takes
+    seconds — the only per-job Python work left is ``make_job``.
+    """
     rng = np.random.default_rng(cfg.seed)
 
     # --- groups with Zipf-ish sizes until we cover n_jobs -----------------
-    group_sizes: List[int] = []
-    while sum(group_sizes) < cfg.n_jobs:
-        size = int(min(rng.zipf(cfg.recur_zipf_a), 200))
-        group_sizes.append(size)
-    # trim overshoot
-    overshoot = sum(group_sizes) - cfg.n_jobs
+    sizes_np = np.empty(0, dtype=np.int64)
+    while int(sizes_np.sum()) < cfg.n_jobs:
+        chunk = np.minimum(
+            rng.zipf(cfg.recur_zipf_a, size=max(256, cfg.n_jobs // 8)), 200
+        )
+        sizes_np = np.concatenate([sizes_np, chunk])
+    # cut at the first group crossing n_jobs, trim its overshoot
+    cum = np.cumsum(sizes_np)
+    n_groups = int(np.searchsorted(cum, cfg.n_jobs)) + 1
+    sizes_np = sizes_np[:n_groups].copy()
+    overshoot = int(cum[n_groups - 1]) - cfg.n_jobs
     if overshoot > 0:
-        group_sizes[-1] -= overshoot
-        if group_sizes[-1] <= 0:
-            group_sizes.pop()
+        sizes_np[-1] -= overshoot
+        if sizes_np[-1] <= 0:
+            sizes_np = sizes_np[:-1]
+    sizes = sizes_np.tolist()
+    G = len(sizes)
+    N = int(sizes_np.sum())
+    starts = np.concatenate([[0], np.cumsum(sizes_np)[:-1]])
+    group_of = np.repeat(np.arange(G), sizes_np)
 
+    # --- group-level attributes (vectorized) ------------------------------
     model_names = list(PAPER_MODELS)
+    single = rng.random(G) < cfg.single_gpu_frac
+    single_model_idx = rng.integers(0, len(SINGLE_GPU_MODELS), size=G)
+    multi_model_idx = rng.integers(0, len(model_names), size=G)
+    config_u = rng.random(G)  # uniform pick within the valid config list
+    user_ids = rng.integers(0, cfg.n_users, size=G)
+    rar = rng.random(G) < 0.5
+    group_means = np.exp(
+        rng.normal(np.log(cfg.mean_iters), cfg.sigma_iters, size=G)
+    )
+    constant_group = rng.random(G) < cfg.constant_group_frac
+
+    # valid multi-GPU config indices per model (respecting the clamp)
+    multi_configs: dict = {}
+    for name in model_names:
+        profile = PAPER_MODELS[name]
+        multi = [i for i, c in enumerate(profile.configs) if sum(c) > 1]
+        if cfg.max_gpus_per_job is not None:
+            ok = [
+                i
+                for i in multi
+                if sum(profile.configs[i]) <= cfg.max_gpus_per_job
+            ]
+            multi_configs[name] = ok if ok else [0]
+        else:
+            multi_configs[name] = multi
+
+    # --- arrivals ----------------------------------------------------------
+    # Bursty, diurnal: a group's submissions cluster into a "session"
+    # (hyper-parameter exploration burst) anchored at a business-hours
+    # start; the rest spread over the horizon.  Sessions are *clamped* to
+    # the horizon — wrapping them (mod horizon) would let a group's later
+    # submissions arrive before its anchor, breaking the "recurring jobs
+    # are observed before being predicted" premise.
+    day = 24 * 3600.0
+    n_day = max(1, int(cfg.horizon // day))
+    anchors = (
+        rng.integers(0, n_day, size=G) * day + rng.uniform(8, 20, size=G) * 3600.0
+    )
+    # The business-hours draw can land past a sub-day horizon (and the last
+    # day's evening can overhang a multi-day one); fold the anchor back so
+    # every session *starts* inside the horizon and only its tail truncates.
+    anchors %= cfg.horizon
+    in_session = rng.random(N) < cfg.burst_frac
+    n_sess_total = int(in_session.sum())
+    gaps = rng.exponential(cfg.session_spread, size=n_sess_total)
+    # segmented cumsum of the session gaps (grouped by each job's group)
+    sess_group = group_of[in_session]
+    gap_cum = np.cumsum(gaps)
+    seg_start = np.concatenate(
+        [[0], np.searchsorted(sess_group, np.arange(1, G))]
+    )
+    base = np.zeros(G)
+    has_sess = seg_start < n_sess_total
+    first = seg_start[has_sess]
+    base[has_sess] = gap_cum[first] - gaps[first]
+    sess_times = anchors[sess_group] + (gap_cum - base[sess_group])
+    arrivals = np.empty(N)
+    arrivals[in_session] = np.minimum(sess_times, cfg.horizon)
+    arrivals[~in_session] = rng.uniform(0, cfg.horizon, size=N - n_sess_total)
+
+    # --- iteration counts ---------------------------------------------------
+    factors = np.where(
+        constant_group[group_of],
+        1.0,
+        rng.uniform(0.85, 1.15, size=N),  # exploration variation
+    )
+    killed = rng.random(N) < cfg.early_kill_frac
+    factors = np.where(
+        killed, factors * rng.uniform(0.05, 0.5, size=N), factors
+    )
+    n_iters = np.maximum(
+        1, np.round(group_means[group_of] * factors)
+    ).astype(np.int64)
+
+    # --- materialize JobSpecs ----------------------------------------------
     jobs: List[JobSpec] = []
     job_id = 0
-    for gid, size in enumerate(group_sizes):
-        single = rng.random() < cfg.single_gpu_frac
-        if single:
-            model = str(rng.choice(SINGLE_GPU_MODELS))
+    for gid in range(G):
+        size = sizes[gid]
+        lo = int(starts[gid])
+        if single[gid]:
+            model = SINGLE_GPU_MODELS[int(single_model_idx[gid])]
             config_idx = 0  # config (1,) is first for single-GPU models
         else:
-            model = str(rng.choice(model_names))
-            profile = PAPER_MODELS[model]
-            multi = [
-                i for i, c in enumerate(profile.configs) if sum(c) > 1
-            ]
-            config_idx = int(rng.choice(multi))
-            if cfg.max_gpus_per_job is not None:
-                ok = [
-                    i
-                    for i in multi
-                    if sum(profile.configs[i]) <= cfg.max_gpus_per_job
-                ]
-                config_idx = int(rng.choice(ok)) if ok else 0
-        user_id = int(rng.integers(0, cfg.n_users))
-        allreduce = RAR if rng.random() < 0.5 else TAR
-        group_mean = float(
-            np.exp(rng.normal(np.log(cfg.mean_iters), cfg.sigma_iters))
-        )
-
-        # Bursty, diurnal arrivals.  A group's submissions cluster into a
-        # "session" (hyper-parameter exploration burst) anchored at a
-        # business-hours start; the rest spread over the horizon.
-        day = 24 * 3600.0
-        n_day = max(1, int(cfg.horizon // day))
-        anchor_day = rng.integers(0, n_day)
-        anchor = anchor_day * day + rng.uniform(8, 20) * 3600.0
-        in_session = rng.random(size) < cfg.burst_frac
-        n_sess = int(in_session.sum())
-        sess = anchor + np.cumsum(
-            rng.exponential(cfg.session_spread, size=n_sess)
-        )
-        rest = rng.uniform(0, cfg.horizon, size=size - n_sess)
-        arrivals = np.sort(np.concatenate([sess, rest]) % cfg.horizon)
-
-        constant_group = rng.random() < cfg.constant_group_frac
-        for arr in arrivals:
-            if constant_group:
-                n = group_mean  # identical re-submissions
-            else:
-                n = group_mean * rng.uniform(0.85, 1.15)  # exploration
-            if rng.random() < cfg.early_kill_frac:
-                n *= rng.uniform(0.05, 0.5)  # early termination
-            n_iters = max(1, int(round(n)))
+            model = model_names[int(multi_model_idx[gid])]
+            ok = multi_configs[model]
+            config_idx = ok[int(config_u[gid] * len(ok))]
+        user_id = int(user_ids[gid])
+        allreduce = RAR if rar[gid] else TAR
+        order = np.argsort(arrivals[lo : lo + size], kind="stable")
+        for k in order:
+            i = lo + int(k)
             jobs.append(
                 make_job(
                     job_id=job_id,
                     model=model,
                     config_idx=config_idx,
-                    n_iters=n_iters,
-                    arrival=float(arr),
+                    n_iters=int(n_iters[i]),
+                    arrival=float(arrivals[i]),
                     group_id=gid,
                     user_id=user_id,
                     allreduce=allreduce,

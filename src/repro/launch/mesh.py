@@ -10,20 +10,33 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the installed JAX has it (>= 0.4.38-ish);
+    older releases default every axis to Auto, so omitting is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def _make_mesh(shape, axes):
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+    # legacy mesh API (pre jax.make_mesh)
+    import numpy as np
+
+    devices = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_devices: int | None = None, model: int = 2):
     """Small mesh over however many (host) devices exist — used by tests."""
     n = n_devices or len(jax.devices())
     model = min(model, n)
-    return jax.make_mesh(
-        (n // model, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((n // model, model), ("data", "model"))

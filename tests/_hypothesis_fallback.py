@@ -1,0 +1,130 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must collect (and pass) on a bare environment; property
+tests then run as seeded random sampling instead of coverage-guided
+search.  Only the API surface the tests actually use is implemented:
+
+    given, settings(max_examples=, deadline=, derandomize=),
+    strategies.{integers, floats, booleans, lists, tuples, sampled_from,
+    composite}
+
+Each strategy is an object with ``example(rng)``; ``@given`` runs the
+test body for ``max_examples`` seeded draws (seed derived from the test
+name, so failures reproduce run-to-run).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, fn: Callable[[random.Random], Any]):
+        self._fn = fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._fn(rng)
+
+    # hypothesis allows strategy.map(...)
+    def map(self, f: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: f(self._fn(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int = -(2**31), max_value: int = 2**31) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq: Sequence[Any]) -> Strategy:
+        items = list(seq)
+        return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def lists(
+        elements: Strategy,
+        min_size: int = 0,
+        max_size: int = 10,
+        unique: bool = False,
+    ) -> Strategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            out: List[Any] = []
+            attempts = 0
+            while len(out) < n and attempts < 100 * max(n, 1):
+                x = elements.example(rng)
+                attempts += 1
+                if unique and x in out:
+                    continue
+                out.append(x)
+            return out
+
+        return Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+    @staticmethod
+    def composite(fn: Callable[..., Any]) -> Callable[..., Strategy]:
+        @functools.wraps(fn)
+        def build(*args: Any, **kwargs: Any) -> Strategy:
+            def draw_example(rng: random.Random) -> Any:
+                def draw(strategy: Strategy) -> Any:
+                    return strategy.example(rng)
+
+                return fn(draw, *args, **kwargs)
+
+            return Strategy(draw_example)
+
+        return build
+
+
+st = _Strategies()
+strategies = st
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the wrapped test for ``given`` to pick up."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_pos: Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            # @settings may wrap either this runner (outermost) or fn.
+            n = getattr(
+                runner,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strategies_pos)
+                fn(*args, *drawn, **kwargs)
+
+        # pytest follows __wrapped__ to the original signature and would
+        # treat the drawn parameters as fixtures; hide it so pytest sees
+        # the bare (*args, **kwargs) runner instead.
+        del runner.__wrapped__
+        return runner
+
+    return deco

@@ -1,7 +1,10 @@
 """A-SRPT + baselines: scheduling invariants and end-to-end behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     ASRPTPolicy,

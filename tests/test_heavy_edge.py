@@ -1,7 +1,10 @@
 """Heavy-Edge GPU mapping: Fig. 2 reproduction + hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
 
 import repro.core.heavy_edge as he
 from repro.core import ClusterSpec, build_job_graph

@@ -1,7 +1,10 @@
 """Exact min-cut placement (B&B) vs Heavy-Edge (Table II relationship)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
 
 import repro.core.heavy_edge as he
 from repro.core import build_job_graph

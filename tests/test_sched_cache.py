@@ -1,0 +1,178 @@
+"""Placement cache: cached A-SRPT must be *bit-identical* to uncached.
+
+The incremental engine (settled-epoch gate, caps-equality skip, canonical
+memoized Heavy-Edge mapping) is only allowed to skip work whose outcome is
+provably unchanged — so the full SimResult (per-job start, completion,
+alpha, servers) must match the exhaustive re-evaluation engine exactly,
+not approximately.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ASRPTPolicy,
+    ClusterSpec,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+)
+from repro.core.heavy_edge import PlacementCache
+from repro.core.cluster import ClusterState
+
+import numpy as np
+
+from conftest import make_simple_job
+
+
+def _simulate_pair(jobs, cluster, refine=False, tau=2.0, predictor="mean"):
+    results = []
+    for cache in (True, False):
+        pol = ASRPTPolicy(
+            make_predictor(predictor),
+            tau=tau,
+            refine_mapping=refine,
+            placement_cache=cache,
+        )
+        results.append(simulate(jobs, cluster, pol))
+    return results
+
+
+def assert_identical(ra, rb):
+    assert set(ra.records) == set(rb.records)
+    for jid, a in ra.records.items():
+        b = rb.records[jid]
+        assert a.start == b.start, jid
+        assert a.completion == b.completion, jid
+        assert a.alpha == b.alpha, jid
+        assert a.servers == b.servers, jid
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cached_equals_uncached_random_traces(seed):
+    cluster = ClusterSpec(
+        num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    jobs = generate_trace(
+        TraceConfig(
+            n_jobs=40,
+            horizon=2400.0,
+            seed=seed,
+            max_gpus_per_job=16,
+            mean_iters=60,
+            session_spread=30.0,
+        )
+    )
+    ra, rb = _simulate_pair(jobs, cluster)
+    assert_identical(ra, rb)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cached_equals_uncached_refined_mapping(seed):
+    """The refined (local-search) mapping mode must cache identically too."""
+    cluster = ClusterSpec(
+        num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    jobs = generate_trace(
+        TraceConfig(
+            n_jobs=30,
+            horizon=1800.0,
+            seed=seed,
+            max_gpus_per_job=16,
+            mean_iters=60,
+            session_spread=30.0,
+        )
+    )
+    ra, rb = _simulate_pair(jobs, cluster, refine=True)
+    assert_identical(ra, rb)
+
+
+def test_cached_equals_uncached_comm_heavy_delays():
+    """Delayed comm-heavy jobs exercise the step-2 skip logic directly."""
+    cluster = ClusterSpec(
+        num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    jobs = []
+    jid = 0
+    for i in range(6):  # fragmenting fillers
+        jobs.append(
+            make_simple_job(
+                job_id=jid, replicas=(1,), p=1.0, h_mb=0.1,
+                n_iters=40 + 13 * i, arrival=0.3 * i,
+            )
+        )
+        jid += 1
+    for i in range(4):  # comm-heavy jobs that face fragmented capacity
+        jobs.append(
+            make_simple_job(
+                job_id=jid, replicas=(8,), p=0.05, h_mb=2048.0,
+                n_iters=10, arrival=1.0 + 0.5 * i, group_id=1,
+            )
+        )
+        jid += 1
+    ra, rb = _simulate_pair(jobs, cluster, tau=5.0, predictor="perfect")
+    assert_identical(ra, rb)
+
+
+# ---------------------------------------------------------------------------
+# PlacementCache unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_placement_cache_canonical_relabeling():
+    """Same capacity shape on different servers: one miss, relabeled hits."""
+    cluster = ClusterSpec(
+        num_servers=8, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    job = make_simple_job(job_id=0, replicas=(4, 4), h_mb=64.0)
+    cache = PlacementCache(cluster)
+    p1, a1 = cache.map_job(job, [(0, 8)])
+    p2, a2 = cache.map_job(job, [(5, 8)])
+    assert cache.misses == 1 and cache.hits == 1
+    assert a1 == a2
+    assert set(p1) == {0} and set(p2) == {5}
+    assert np.array_equal(p1[0], p2[5])
+    # split shape is a distinct key
+    p3, a3 = cache.map_job(job, [(2, 4), (6, 4)])
+    assert cache.misses == 2
+    assert set(p3) == {2, 6}
+
+
+def test_placement_cache_matches_direct_map_job():
+    from repro.core.heavy_edge import map_job
+
+    cluster = ClusterSpec(
+        num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    job = make_simple_job(job_id=0, replicas=(2, 2), h_mb=64.0)
+    caps = [(1, 2), (3, 2)]
+    cache = PlacementCache(cluster)
+    placement_c, alpha_c = cache.map_job(job, caps)
+    placement_d, alpha_d = map_job(job, caps, cluster)
+    assert alpha_c == pytest.approx(alpha_d)
+    # canonical relabeling preserves the per-server stage vectors
+    assert {m: tuple(v) for m, v in placement_c.items()} == {
+        m: tuple(v) for m, v in placement_d.items()
+    }
+
+
+def test_cluster_epoch_tracking():
+    spec = ClusterSpec(
+        num_servers=2, gpus_per_server=4, b_inter=1e9, b_intra=1e10
+    )
+    cs = ClusterState(spec)
+    e0 = cs.epoch
+    cs.allocate(1, {0: np.array([2])})
+    assert cs.epoch == e0 + 1
+    assert cs.total_free == 6
+    cs.release(1)
+    assert cs.epoch == e0 + 2
+    assert cs.total_free == 8
+    cs.mark_server_down(0)
+    assert cs.total_free == 4 and cs.epoch == e0 + 3

@@ -2,7 +2,10 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.srpt import VirtualSRPT, srpt_total_completion
 
