@@ -5,16 +5,42 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test smoke bench-sched
+.PHONY: test lint smoke bench-sched bench-hetero bench-budget ci
 
 test:
 	python -m pytest -x -q
 
+# Correctness-focused ruff rules (see [tool.ruff] in pyproject.toml); CI
+# installs ruff, locally we skip with a note when it's absent.  A lint
+# *failure* still fails the target.
+lint:
+	@if python -c "import ruff" 2>/dev/null; then \
+		python -m ruff check .; \
+	else \
+		echo "ruff not installed; skipping lint (CI runs it)"; \
+	fi
+
 # Tier-1 + the headline scheduling figure: catches both correctness and
-# perf regressions in the scheduling engine.
+# perf regressions in the scheduling engine.  Each step runs a bare
+# command, so any failure propagates as a nonzero make exit.
 smoke: test
 	python -m benchmarks.run --only fig6
 
 # Trace-scale scheduling benchmark (5k/20k jobs; 100k with FULL=1).
 bench-sched:
 	python -m benchmarks.run --only sched_scale $(if $(FULL),--full,)
+
+# Mixed-generation cluster + fault-injection recovery variant.
+bench-hetero:
+	python -m benchmarks.sched_scale --hetero $(if $(FULL),--full,)
+
+# CI budget mode: emits BENCH_sched.json and fail-soft-checks it against
+# the committed baseline (refresh with: make bench-budget && cp
+# BENCH_sched.json benchmarks/BENCH_sched_baseline.json).
+bench-budget:
+	python -m benchmarks.sched_scale --budget \
+		--json BENCH_sched.json \
+		--check benchmarks/BENCH_sched_baseline.json
+
+# What CI runs: lint + tier-1 + budget benchmark.
+ci: lint test bench-budget

@@ -12,7 +12,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import (
     ASRPTPolicy,

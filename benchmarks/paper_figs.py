@@ -23,7 +23,7 @@ import repro.core.heavy_edge as he
 from repro.core import timing
 from repro.core.ilp import exact_min_cut
 from repro.core.job import ClusterSpec
-from repro.core.profiles import PAPER_MODELS, make_job
+from repro.core.profiles import make_job
 
 from . import common
 

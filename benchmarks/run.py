@@ -6,7 +6,6 @@ per-row CSV blocks).  ``--full`` enlarges the simulated workloads.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -30,7 +29,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="comma-separated bench names "
-             "(fig4..fig9,table2,sched_scale,roofline)",
+             "(fig4..fig9,table2,sched_scale,sched_hetero,roofline)",
     )
     args = ap.parse_args()
 
@@ -45,6 +44,7 @@ def main() -> None:
         "fig9": paper_figs.fig9_predictors,
         "table2": paper_figs.table2_heavyedge_ilp,
         "sched_scale": sched_scale.sched_scale,
+        "sched_hetero": sched_scale.sched_scale_hetero,
     }
     selected = (
         args.only.split(",") if args.only else list(benches) + ["roofline"]
@@ -71,7 +71,7 @@ def main() -> None:
         for r in rows:
             for k in ("asrpt_flow_reduction_vs_best", "gap_vs_perfect",
                       "pitt_gap", "frac_exact(<=1_iter)", "rf_gap_vs_perfect",
-                      "cache_speedup_20k"):
+                      "cache_speedup_20k", "flow_vs_clean"):
                 if k in r and r[k] != "":
                     derived = f"{k}={r[k]}"
         summary.append((name, wall * 1e6 / max(len(rows), 1), derived))

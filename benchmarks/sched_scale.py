@@ -22,14 +22,31 @@ This is a *throughput* benchmark: the regime deliberately saturates the
 cluster (peak queue depths in the thousands), where strict head-of-line
 policies trade flow time for order fidelity.  Scheduling-quality
 comparisons against the paper belong to fig6/fig7/fig8.
+
+Variants:
+
+* ``sched_scale_hetero`` — the same regime on a mixed-generation cluster
+  (three server classes: 100 GbE 8-GPU, 10 GbE 8-GPU, 10 GbE 4-GPU), run
+  twice per size: clean, and with a fault injection downing four big-GPU
+  (100 GbE 8x) servers a quarter into the horizon.  The fault row reports
+  ``flow_vs_clean`` — degraded-cluster recovery flow time relative to the
+  clean run.
+* ``--budget`` / ``sched_scale_budget`` — a CI-sized subset (one size,
+  single sample) whose events/sec per policy is written to
+  ``BENCH_sched.json`` for trend tracking; ``--check`` compares against a
+  committed baseline and *warns* (never fails) past the threshold, since
+  shared CI runners swing tens of percent.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import (
     ASRPTPolicy,
     BASELINES,
+    ClusterSpec,
+    ServerClass,
     TraceConfig,
     generate_trace,
     make_predictor,
@@ -44,6 +61,22 @@ MAX_GPUS_PER_JOB = 64
 SECONDS_PER_JOB = 12.0  # horizon = n_jobs * this
 SIZES = (5_000, 20_000, 100_000)
 COMPARE_AT = 20_000  # cached vs uncached measurement point
+
+# Mixed-generation variant: same total server count, three classes.  The
+# first class is the "big GPU" generation the fault injection targets.
+HETERO_CLASSES = (
+    ServerClass(count=24, gpus_per_server=8, b_inter=12.5e9, name="gen-a"),
+    ServerClass(count=24, gpus_per_server=8, b_inter=1.25e9, name="gen-b"),
+    ServerClass(
+        count=16, gpus_per_server=4, b_inter=1.25e9, b_intra=50e9,
+        name="gen-c",
+    ),
+)
+HETERO_SIZES = (20_000, 100_000)
+FAULT_SERVERS = (0, 1, 2, 3)  # four gen-a servers
+FAULT_AT_FRAC = 0.25  # of the trace horizon
+
+BUDGET_SIZE = 5_000  # --budget: one size, single sample per policy
 
 
 def _trace(n_jobs: int, seed: int = 1) -> list:
@@ -120,3 +153,172 @@ def sched_scale(full: bool = False) -> List[Dict]:
                 res = simulate(jobs, cluster, pol, validate=False)
                 rows.append(_row(n, name, res))
     return rows
+
+
+def _hetero_cluster() -> ClusterSpec:
+    return ClusterSpec.heterogeneous(HETERO_CLASSES, b_intra=300e9)
+
+
+def sched_scale_hetero(full: bool = False) -> List[Dict]:
+    """Mixed-generation cluster + degraded-cluster recovery flow time."""
+    cluster = _hetero_cluster()
+    sizes = HETERO_SIZES if full else HETERO_SIZES[:1]
+    rows: List[Dict] = []
+    for n in sizes:
+        jobs = _trace(n)
+        horizon = n * SECONDS_PER_JOB
+        clean = simulate(jobs, cluster, _asrpt(), validate=False)
+        row = _row(n, "A-SRPT (hetero)", clean)
+        rows.append(row)
+        faults = [(FAULT_AT_FRAC * horizon, m) for m in FAULT_SERVERS]
+        degraded = simulate(
+            jobs, cluster, _asrpt(), validate=False, faults=faults
+        )
+        drow = _row(n, "A-SRPT (hetero, 4 gen-a down)", degraded)
+        drow["flow_vs_clean"] = round(
+            degraded.total_flow_time / clean.total_flow_time, 3
+        )
+        rows.append(drow)
+        if n <= 20_000:
+            for name in ("SPJF", "WCS-SubTime"):
+                pol = BASELINES[name](make_predictor("mean"))
+                res = simulate(jobs, cluster, pol, validate=False)
+                rows.append(_row(n, f"{name} (hetero)", res))
+    return rows
+
+
+def sched_scale_budget() -> List[Dict]:
+    """CI budget mode: one 5k-job size, every policy, single sample each.
+
+    Small enough for a shared runner (~1 min), large enough that
+    events/sec is dominated by the scheduling engine rather than setup.
+    """
+    n = BUDGET_SIZE
+    jobs = _trace(n)
+    cluster = make_cluster(num_servers=NUM_SERVERS)
+    rows = [_row(n, "A-SRPT", simulate(jobs, cluster, _asrpt(), validate=False))]
+    for name in BASELINES:
+        pol = BASELINES[name](make_predictor("mean"))
+        rows.append(_row(n, name, simulate(jobs, cluster, pol, validate=False)))
+    het = _hetero_cluster()
+    horizon = n * SECONDS_PER_JOB
+    faults = [(FAULT_AT_FRAC * horizon, m) for m in FAULT_SERVERS]
+    res = simulate(jobs, het, _asrpt(), validate=False, faults=faults)
+    rows.append(_row(n, "A-SRPT (hetero, 4 gen-a down)", res))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# BENCH_sched.json emission + fail-soft regression check (CI trend tracking)
+# ---------------------------------------------------------------------------
+
+
+def rows_to_bench_json(rows: Sequence[Dict]) -> Dict:
+    """events/sec per policy (the trended metric) + the full row dump."""
+    return {
+        "schema": 1,
+        "bench": "sched_scale_budget",
+        "events_per_sec": {
+            r["policy"]: r["events_per_sec"] for r in rows
+        },
+        "rows": list(rows),
+    }
+
+
+def check_regression(
+    current: Dict, baseline: Dict, threshold: float = 0.30
+) -> Tuple[List[str], List[str]]:
+    """Compare per-policy events/sec against the committed baseline.
+
+    Returns (warnings, notes).  A policy slower than ``baseline * (1 -
+    threshold)`` warns; missing/new policies and faster runs are notes.
+    Fail-soft by design: callers print, they don't exit nonzero.
+    """
+    warnings: List[str] = []
+    notes: List[str] = []
+    base = baseline.get("events_per_sec", {})
+    cur = current.get("events_per_sec", {})
+    for policy, ref in sorted(base.items()):
+        now = cur.get(policy)
+        if now is None:
+            warnings.append(f"{policy}: missing from current run")
+            continue
+        if ref <= 0:
+            continue
+        ratio = now / ref
+        if ratio < 1.0 - threshold:
+            warnings.append(
+                f"{policy}: {now:.0f} events/s is {1 - ratio:.0%} below "
+                f"baseline {ref:.0f}"
+            )
+        else:
+            notes.append(f"{policy}: {now:.0f} vs baseline {ref:.0f} events/s")
+    for policy in sorted(set(cur) - set(base)):
+        notes.append(f"{policy}: new policy (no baseline)")
+    return warnings, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--budget", action="store_true",
+        help="CI budget mode (5k jobs, single sample per policy)",
+    )
+    ap.add_argument(
+        "--hetero", action="store_true",
+        help="mixed-generation cluster + fault-injection variant",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write BENCH_sched.json-style output to PATH (--budget only: "
+             "the trend file keys events/sec by policy name, which is only "
+             "unique for the single-size budget run)",
+    )
+    ap.add_argument(
+        "--check", metavar="BASELINE", default=None,
+        help="fail-soft events/sec comparison vs a baseline JSON "
+             "(--budget only)",
+    )
+    args = ap.parse_args(argv)
+
+    if (args.json or args.check) and not args.budget:
+        ap.error("--json/--check track the budget-mode series; add --budget")
+    if args.budget:
+        if args.full:
+            ap.error("--budget is fixed-size; drop --full (or use "
+                     "--hetero/--full for the big sweeps)")
+        rows = sched_scale_budget()
+    elif args.hetero:
+        rows = sched_scale_hetero(full=args.full)
+    else:
+        rows = sched_scale(full=args.full)
+
+    for r in rows:
+        print(json.dumps(r))
+    bench = rows_to_bench_json(rows) if (args.json or args.check) else None
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(bench, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    if args.check:
+        try:
+            with open(args.check) as fh:
+                baseline = json.load(fh)
+        except FileNotFoundError:
+            print(f"::warning::no baseline at {args.check}; skipping check")
+            return 0
+        warnings, notes = check_regression(bench, baseline)
+        for line in notes:
+            print(f"[bench] {line}")
+        for line in warnings:
+            # GitHub Actions annotation; fail-soft (shared runners are noisy)
+            print(f"::warning::sched_scale regression: {line}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -78,6 +78,26 @@ def main() -> None:
     print("\nelastic mesh planning after losing 2 of 16 hosts (model=16):")
     print("  new (data, model) =", plan_elastic_mesh(14 * 16, 16))
 
+    # Simulator-level fault injection on a mixed-generation cluster: the
+    # big-GPU class loses a server at t=600s; capacity held by running
+    # jobs is forfeited as they finish (never returns to `free`).
+    from repro.core import mixed_cluster_spec
+
+    print("\nsimulator-level fault injection (mixed-generation cluster):")
+    het = mixed_cluster_spec(num_servers=6, seed=0, n_classes=2)
+    res2 = simulate(
+        jobs,
+        het,
+        FaultAwareASRPT(make_predictor("rf", seed=0), tau=2.0,
+                        fail_at=float("inf")),  # policy side stays quiet
+        faults=[(600.0, 0)],
+    )
+    after2 = [r for r in res2.records.values() if r.start >= 600.0]
+    touched2 = sum(1 for r in after2 if 0 in r.servers)
+    print(f"  classes: {[(c.name, c.count, c.gpus_per_server) for c in het.server_classes]}")
+    print(f"  jobs started after failure: {len(after2)}; on dead server: {touched2}")
+    assert touched2 == 0
+
 
 if __name__ == "__main__":
     main()

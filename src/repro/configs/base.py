@@ -13,7 +13,7 @@ plus the four input-shape cells.  ``family`` selects the block structure:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -1,5 +1,12 @@
 """Core: the paper's contribution — A-SRPT scheduling for DDLwMP jobs."""
-from .job import ClusterSpec, JobSpec, StageSpec, RAR, TAR  # noqa: F401
+from .job import (  # noqa: F401
+    ClusterSpec,
+    JobSpec,
+    RAR,
+    ServerClass,
+    StageSpec,
+    TAR,
+)
 from .graph import JobGraph, build_job_graph  # noqa: F401
 from .timing import alpha, alpha_max, beta  # noqa: F401
 from .heavy_edge import (  # noqa: F401
@@ -20,6 +27,11 @@ from .predictor import (  # noqa: F401
     RandomForestRegressor,
     make_predictor,
 )
-from .trace import TraceConfig, generate_trace, trace_stats  # noqa: F401
+from .trace import (  # noqa: F401
+    TraceConfig,
+    generate_trace,
+    mixed_cluster_spec,
+    trace_stats,
+)
 from .profiles import PAPER_MODELS, make_job, job_from_model_shape  # noqa: F401
 from .ilp import exact_min_cut  # noqa: F401

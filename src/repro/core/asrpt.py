@@ -170,7 +170,10 @@ class ASRPTPolicy(Policy):
                     if d.eval_epoch == cluster.epoch:
                         continue
                     caps = tuple(
-                        select_servers(cluster.free, d.job.g, consolidate=True)
+                        select_servers(
+                            cluster.free, d.job.g,
+                            consolidate=True, spec=self.cluster_spec,
+                        )
                     )
                     d.eval_epoch = cluster.epoch
                     if caps == d.eval_caps:
@@ -178,7 +181,10 @@ class ASRPTPolicy(Policy):
                     d.eval_caps = caps
                 else:
                     caps = tuple(
-                        select_servers(cluster.free, d.job.g, consolidate=True)
+                        select_servers(
+                            cluster.free, d.job.g,
+                            consolidate=True, spec=self.cluster_spec,
+                        )
                     )
                 placement, a = self._map(d.job, caps)
                 _, a_min = self.alpha_cache.bounds(d.job)
@@ -197,7 +203,10 @@ class ASRPTPolicy(Policy):
             a_max, a_min = self.alpha_cache.bounds(job)
             if a_max / a_min >= self.comm_heavy:
                 caps = tuple(
-                    select_servers(cluster.free, job.g, consolidate=True)
+                    select_servers(
+                        cluster.free, job.g,
+                        consolidate=True, spec=self.cluster_spec,
+                    )
                 )
                 placement, a = self._map(job, caps)
                 delay_budget = self.tau * self._pred_work[job.job_id]
@@ -214,7 +223,10 @@ class ASRPTPolicy(Policy):
                     self.delayed[job.job_id] = d
                     heapq.heappush(self._dheap, (d.deadline, job.job_id))
             else:
-                caps = select_servers(cluster.free, job.g, consolidate=False)
+                caps = select_servers(
+                    cluster.free, job.g,
+                    consolidate=False, spec=self.cluster_spec,
+                )
                 placement, a = self._map(job, caps)
                 starts.append(Start(job, placement, a))
                 cluster.allocate(job.job_id, placement, counts=dict(caps))

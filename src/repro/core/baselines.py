@@ -14,7 +14,8 @@ with consolidating (most-available-first) server selection.
 from __future__ import annotations
 
 import bisect
-from typing import Callable, List, Optional
+import heapq
+from typing import Callable, Dict, List
 
 from .cluster import ClusterState
 from .heavy_edge import PlacementCache, select_servers
@@ -26,11 +27,21 @@ from .simulator import AlphaCache, Policy, Start
 class QueuePolicy(Policy):
     """Priority-queue scheduler parameterized by key and work-conservation.
 
-    The queue is kept sorted in *descending* priority-key order so the next
-    job to consider sits at the end of the list: arrivals insert with
-    ``bisect.insort`` (no per-event re-sort) and the strict head-of-line
-    policies pop starts from the end without rebuilding the list — both
-    were O(queue) per event and dominated trace-scale runs.
+    Strict head-of-line mode keeps one queue sorted in *descending*
+    priority-key order so the next job to consider sits at the end of the
+    list: arrivals insert with ``bisect.insort`` (no per-event re-sort) and
+    starts pop from the end without rebuilding the list.
+
+    Work-conserving mode additionally *capacity-indexes* the ready queue:
+    jobs are bucketed by GPU demand ``g`` (a handful of distinct values —
+    the profile configs — regardless of queue length), each bucket sorted
+    the same way.  A scheduling pass merges the bucket heads through a
+    small heap, visiting jobs in global key order but touching only
+    buckets that still fit in the free capacity — a bucket whose demand
+    exceeds the remaining free GPUs drops out of the pass wholesale
+    instead of being re-scanned job by job.  Free capacity only shrinks
+    within a pass, so the started set and start order are identical to the
+    former full-queue backfilling scan.
     """
 
     def __init__(
@@ -46,7 +57,11 @@ class QueuePolicy(Policy):
         self.work_conserving = work_conserving
         # (-key, -arrival, -job_id, job): ascending sort puts the smallest
         # (key, arrival, job_id) — the next job to schedule — at the end.
+        # Strict head-of-line uses the flat list; work-conserving buckets
+        # the same tuples by job.g.
         self.waiting: List[tuple] = []
+        self.waiting_by_g: Dict[int, List[tuple]] = {}
+        self._n_waiting = 0
 
     def bind(self, cluster_spec: ClusterSpec) -> None:
         super().bind(cluster_spec)
@@ -65,49 +80,73 @@ class QueuePolicy(Policy):
 
     def on_arrival(self, t: float, job: JobSpec) -> None:
         # Key is fixed at arrival (prediction with information available now).
-        bisect.insort(
-            self.waiting, (-self._key(job), -job.arrival, -job.job_id, job)
-        )
+        entry = (-self._key(job), -job.arrival, -job.job_id, job)
+        if self.work_conserving:
+            bucket = self.waiting_by_g.get(job.g)
+            if bucket is None:
+                bucket = self.waiting_by_g[job.g] = []
+            bisect.insort(bucket, entry)
+            self._n_waiting += 1
+        else:
+            bisect.insort(self.waiting, entry)
 
     def on_completion(self, t: float, job: JobSpec) -> None:
         self.predictor.observe(job, job.n_iters)
 
     def _start(self, job: JobSpec, cluster: ClusterState, starts) -> None:
-        caps = select_servers(cluster.free, job.g, consolidate=True)
+        caps = select_servers(
+            cluster.free, job.g, consolidate=True, spec=self.cluster_spec
+        )
         placement, a = self._pcache.map_job(job, caps)
         starts.append(Start(job, placement, a))
         cluster.allocate(job.job_id, placement, counts=dict(caps))
 
     def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
         starts: List[Start] = []
-        waiting = self.waiting
-        if not waiting or cluster.total_free == 0:
+        free = cluster.total_free
+        if free == 0:
             return starts
 
         if not self.work_conserving:
+            waiting = self.waiting
             # Strict head-of-line: start from the head until one doesn't fit.
             while waiting and waiting[-1][3].g <= cluster.total_free:
                 self._start(waiting.pop()[3], cluster, starts)
             return starts
 
-        # Work-conserving: scan the whole queue in key order, starting
-        # everything that fits (backfilling); stop once no GPU is free.
-        started_idx = []
-        for i in range(len(waiting) - 1, -1, -1):
+        if self._n_waiting == 0:
+            return starts
+        # Work-conserving backfill over the capacity-indexed queue: merge
+        # the per-demand bucket heads in key order; a popped head whose
+        # demand no longer fits retires its whole bucket for this pass
+        # (free never grows mid-pass).
+        by_g = self.waiting_by_g
+        # bucket tails hold the *smallest* (key, arrival, job_id) — negate
+        # the stored (-key, ...) tuples back for the min-heap merge
+        heads = [
+            ((-b[-1][0], -b[-1][1], -b[-1][2]), g)
+            for g, b in by_g.items()
+            if b and g <= free
+        ]
+        heapq.heapify(heads)
+        while heads:
+            _, g = heapq.heappop(heads)
             free = cluster.total_free
             if free == 0:
                 break
-            job = waiting[i][3]
-            if job.g <= free:
-                self._start(job, cluster, starts)
-                started_idx.append(i)
-        if started_idx:
-            for i in started_idx:  # descending, so positions stay valid
-                del waiting[i]
+            if g > free:
+                continue  # whole bucket too big for the rest of the pass
+            bucket = by_g[g]
+            entry = bucket.pop()
+            self._n_waiting -= 1
+            self._start(entry[3], cluster, starts)
+            if bucket:
+                nxt = bucket[-1]
+                heapq.heappush(heads, ((-nxt[0], -nxt[1], -nxt[2]), g))
         return starts
 
     def queue_depth(self) -> int:
-        return len(self.waiting)
+        return self._n_waiting if self.work_conserving else len(self.waiting)
 
 
 def spjf(predictor: IterationPredictor) -> QueuePolicy:

@@ -21,11 +21,19 @@ class ClusterState:
 
     def __init__(self, spec: ClusterSpec):
         self.spec = spec
-        self.free: Dict[int, int] = {
-            m: spec.gpus_per_server for m in range(spec.num_servers)
-        }
+        if spec.is_heterogeneous:
+            # per-server capacity follows the server's class
+            self._cap: Dict[int, int] = {
+                m: spec.server_gpus(m) for m in range(spec.num_servers)
+            }
+        else:
+            self._cap = {
+                m: spec.gpus_per_server for m in range(spec.num_servers)
+            }
+        self.free: Dict[int, int] = dict(self._cap)
         self._job_alloc: Dict[int, Dict[int, int]] = {}
-        self._total_free: int = spec.num_servers * spec.gpus_per_server
+        self._total_free: int = spec.total_gpus
+        self._down: set = set()
         self.epoch: int = 0
 
     @property
@@ -71,21 +79,40 @@ class ClusterState:
         self.epoch += 1
 
     def release(self, job_id: int) -> None:
-        cap = self.spec.gpus_per_server
+        cap = self._cap
+        down = self._down
         total = 0
         for m, n in self._job_alloc.pop(job_id).items():
+            if m in down:
+                continue  # capacity on a failed server never returns
             self.free[m] += n
             total += n
-            if self.free[m] > cap:
+            if self.free[m] > cap[m]:
                 raise AssertionError(f"server {m} over-freed")
         self._total_free += total
         self.epoch += 1
 
     def mark_server_down(self, server_id: int) -> None:
-        """Fault-tolerance hook: a failed server contributes no capacity."""
+        """Fault-tolerance hook: a failed server contributes no capacity.
+
+        Free GPUs are removed immediately; GPUs still held by running jobs
+        are forfeited as those jobs release (they never rejoin ``free``).
+        """
+        if server_id not in self.free:
+            raise ValueError(
+                f"unknown server {server_id} "
+                f"(cluster has {self.spec.num_servers})"
+            )
+        if server_id in self._down:
+            return
+        self._down.add(server_id)
         self._total_free -= self.free[server_id]
         self.free[server_id] = 0
         self.epoch += 1
+
+    @property
+    def downed_servers(self) -> frozenset:
+        return frozenset(self._down)
 
     def snapshot_free(self) -> Dict[int, int]:
         return dict(self.free)

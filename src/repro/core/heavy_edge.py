@@ -24,7 +24,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import JobGraph, Vertex, build_job_graph
-from .job import ClusterSpec, JobSpec
+from .job import ClusterSpec, JobSpec, ServerGeom
 from . import timing
 
 
@@ -111,6 +111,7 @@ def refine_assignment(
     graph: JobGraph,
     assignment: Dict[Vertex, int],
     max_passes: int = 3,
+    geoms: Optional[Mapping[int, ServerGeom]] = None,
 ) -> Dict[Vertex, int]:
     """Beyond-paper local search: best-improvement pairwise swaps.
 
@@ -125,6 +126,22 @@ def refine_assignment(
     (the ``2 W[u,v]`` corrects for the u-v edge itself, which stays cut).
     Kept separate from the faithful greedy so the paper baseline remains
     measurable (see benchmarks/table2).
+
+    ``geoms`` (heterogeneous clusters) switches the objective from the raw
+    cut weight to the *bandwidth-weighted* cut: an edge crossing servers
+    ``a, b`` costs ``w * (r_a + r_b)`` with ``r_k`` the inverse NIC
+    bandwidth of ``k`` — cutting an AllReduce onto a slow-NIC server is
+    penalized more than onto a fast one.  The weighted objective
+    decomposes per vertex (``C = sum_x r[s_x] * cut_x``), so the swap
+    delta stays a single vectorized expression:
+
+        delta(u, v) =   r_u * (2 D[s_u,u] - 2 D[s_u,v] + 2 W[u,v] + T_v - T_u)
+                      + r_v * (2 D[s_v,v] - 2 D[s_v,u] + 2 W[u,v] + T_u - T_v)
+
+    with ``T_x`` the total incident weight of ``x``.  When every server's
+    bandwidth is equal this reduces to exactly ``2 r`` times the
+    homogeneous delta, so the unweighted formula is kept verbatim on that
+    path (identical swap sequences — no behavior change).
     """
     verts = sorted(graph.vertices)
     n = len(verts)
@@ -142,15 +159,32 @@ def refine_assignment(
     s = np.array([server_index[assignment[v]] for v in verts])
     arange = np.arange(n)
 
+    r_server = None
+    if geoms is not None:
+        inv = np.array([1.0 / geoms[m][1] for m in servers])
+        if not np.all(inv == inv[0]):
+            # scale-free normalization keeps the improvement threshold in
+            # the same (byte-weight) units as the unweighted objective
+            r_server = inv * (len(inv) / inv.sum())
+    tot = W.sum(axis=1) if r_server is not None else None
+
     for _ in range(max_passes):
         ind = np.zeros((len(servers), n))
         ind[s, arange] = 1.0
         D = ind @ W  # D[k, u]: weight from vertex u into server k
         Ds = D[s]  # Ds[j, u] = D[s_j, u]
         d_own = Ds[arange, arange]
-        delta = (
-            (d_own[:, None] - Ds.T) + (d_own[None, :] - Ds) + 2.0 * W
-        )
+        if r_server is None:
+            delta = (
+                (d_own[:, None] - Ds.T) + (d_own[None, :] - Ds) + 2.0 * W
+            )
+        else:
+            rv = r_server[s]
+            base = (
+                2.0 * d_own[:, None] - 2.0 * Ds + 2.0 * W
+                + tot[None, :] - tot[:, None]
+            )
+            delta = rv[:, None] * base + rv[None, :] * base.T
         # only ordered pairs on different servers are candidate swaps
         invalid = (s[:, None] == s[None, :]) | (arange[:, None] >= arange[None, :])
         delta[invalid] = np.inf
@@ -243,6 +277,7 @@ def map_job(
     cluster: ClusterSpec,
     refine: bool = False,
     graph: Optional[JobGraph] = None,
+    geoms: Optional[Mapping[int, ServerGeom]] = None,
 ) -> Tuple[Dict[int, np.ndarray], float]:
     """Run Heavy-Edge (optionally multi-start + local search).
 
@@ -251,12 +286,19 @@ def map_job(
     keeping the placement with the lowest per-iteration time alpha.
     ``graph``: pre-built communication graph (it depends only on the job
     config, so callers mapping recurring jobs can share one).
+    ``geoms``: per-server geometry override for the alpha evaluation
+    (required when ``server_caps`` uses rank labels on a heterogeneous
+    cluster; see ``map_job_canonical``).
     """
     if graph is None:
         graph = build_job_graph(job)
+    if geoms is None and cluster.is_heterogeneous:
+        # caller passed physical ids on a mixed cluster: resolve their
+        # geometry here so refine + alpha see the per-class bandwidths
+        geoms = {m: cluster.server_geom(m) for m, _c in server_caps}
     assignment = heavy_edge(graph, server_caps)
     placement = timing.placement_from_assignment(job, assignment)
-    best_alpha = timing.alpha(job, placement, cluster)
+    best_alpha = timing.alpha(job, placement, cluster, geoms=geoms)
     if refine:
         seeds = (
             assignment,
@@ -264,12 +306,23 @@ def map_job(
             stage_aligned_assignment(graph, server_caps),
         )
         for seed in seeds:
-            cand = refine_assignment(graph, seed)
+            cand = refine_assignment(graph, seed, geoms=geoms)
             cand_placement = timing.placement_from_assignment(job, cand)
-            a = timing.alpha(job, cand_placement, cluster)
+            a = timing.alpha(job, cand_placement, cluster, geoms=geoms)
             if a < best_alpha - 1e-12:
                 best_alpha, placement = a, cand_placement
     return placement, best_alpha
+
+
+def _rank_geoms(
+    cluster: ClusterSpec, server_caps: Sequence[Tuple[int, int]]
+) -> Optional[Dict[int, ServerGeom]]:
+    """Rank -> geometry of the physical server holding that rank (het only)."""
+    if not cluster.is_heterogeneous:
+        return None
+    return {
+        i: cluster.server_geom(m) for i, (m, _c) in enumerate(server_caps)
+    }
 
 
 def map_job_canonical(
@@ -280,26 +333,31 @@ def map_job_canonical(
 ) -> Tuple[Dict[int, np.ndarray], float]:
     """``map_job`` on rank-relabeled servers, mapped back to the caller's ids.
 
-    The cluster is homogeneous, so the mapping problem depends on server
+    Within one server *class* the mapping problem depends on server
     *capacities*, never on physical server ids: running the algorithm on
     caps relabeled 0..k-1 (in the caller's order) and substituting the real
     ids afterwards yields an equally-good placement, and makes the result a
-    pure function of the capacity sequence — which is what lets
+    pure function of the (capacity, class) sequence — which is what lets
     ``PlacementCache`` share one computation across every server subset
-    with the same shape.  (For the paper's greedy the relabeling is an
-    exact no-op: ``select_servers`` emits caps sorted by capacity with ids
+    with the same shape.  On heterogeneous clusters each rank carries its
+    physical server's class geometry into the alpha evaluation, so the
+    relabeling is a *within-class* permutation: rank i may stand for any
+    server of the same class with the same free capacity, never for one of
+    a different class.  (For the paper's greedy the relabeling is an exact
+    no-op: ``select_servers`` emits caps sorted by capacity with ids
     ascending within ties, so rank order coincides with every id tiebreak
     the greedy performs.  The ``refine`` seeds may break capacity ties
     differently than physical ids would — quality is identical by
     symmetry.)
     """
     ranked = [(i, c) for i, (_m, c) in enumerate(server_caps)]
-    placement, a = map_job(job, ranked, cluster, refine=refine)
+    geoms = _rank_geoms(cluster, server_caps)
+    placement, a = map_job(job, ranked, cluster, refine=refine, geoms=geoms)
     return {server_caps[i][0]: x for i, x in placement.items()}, a
 
 
 class PlacementCache:
-    """Memoized Heavy-Edge mapping: (job config, capacity sequence) -> result.
+    """Memoized Heavy-Edge mapping: (job config, capacity shape) -> result.
 
     Two jobs with identical stage profiles and allreduce kind map
     identically onto identical server capacity shapes — MLaaS traces are
@@ -309,10 +367,18 @@ class PlacementCache:
     and relabels to the caller's server ids per call; the numpy stage
     vectors are shared between hits and must be treated as immutable.
     LRU-bounded.
+
+    On heterogeneous clusters the key carries each slot's server *class*
+    alongside its capacity, and each rank is evaluated with its class
+    geometry — so a cached entry is only ever relabeled within a class
+    (equal GPUs-per-server and bandwidths), never onto a class whose
+    per-server capacity or comm cost differs.  Homogeneous specs keep the
+    PR-1 capacity-shape key verbatim (one class, no behavior change).
     """
 
     __slots__ = (
-        "cluster", "refine", "maxsize", "hits", "misses", "_lru", "_graphs"
+        "cluster", "refine", "maxsize", "hits", "misses", "_lru", "_graphs",
+        "_het",
     )
 
     def __init__(
@@ -328,6 +394,7 @@ class PlacementCache:
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self._het = cluster.is_heterogeneous
         self._lru: "OrderedDict[tuple, Tuple[Dict[int, np.ndarray], float]]" = (
             OrderedDict()
         )
@@ -337,7 +404,11 @@ class PlacementCache:
         self, job: JobSpec, server_caps: Sequence[Tuple[int, int]]
     ) -> Tuple[Dict[int, np.ndarray], float]:
         ids, shape = zip(*server_caps)
-        key = (job.config_key, shape)
+        if self._het:
+            class_of = self.cluster.class_of
+            key = (job.config_key, shape, tuple(class_of(m) for m in ids))
+        else:
+            key = (job.config_key, shape)
         lru = self._lru
         hit = lru.get(key)
         if hit is not None:
@@ -356,6 +427,7 @@ class PlacementCache:
                 self.cluster,
                 refine=self.refine,
                 graph=graph,
+                geoms=_rank_geoms(self.cluster, server_caps),
             )
             # every cap in the vector is fully used, so ranks 0..k-1 are
             # all present; store the stage vectors in rank order
@@ -368,30 +440,73 @@ class PlacementCache:
 
 
 def consolidated_caps(job: JobSpec, cluster: ClusterSpec) -> List[Tuple[int, int]]:
-    """Fewest-servers capacity profile: full servers + one remainder."""
-    g = cluster.gpus_per_server
-    n_full, rem = divmod(job.g, g)
-    caps = [(m, g) for m in range(n_full)]
-    if rem:
-        caps.append((n_full, rem))
-    return caps
+    """Fewest-servers capacity profile: full servers + one remainder.
+
+    Heterogeneous clusters pack biggest-then-fastest-NIC servers first —
+    the same most-available-first order ``select_servers`` produces on an
+    empty cluster with the bandwidth tiebreak.
+    """
+    if not cluster.is_heterogeneous:
+        g = cluster.gpus_per_server
+        n_full, rem = divmod(job.g, g)
+        caps = [(m, g) for m in range(n_full)]
+        if rem:
+            caps.append((n_full, rem))
+        return caps
+    starts: List[int] = []
+    acc = 0
+    for sc in cluster.server_classes:
+        starts.append(acc)
+        acc += sc.count
+    order = sorted(
+        range(len(cluster.server_classes)),
+        key=lambda c: (
+            -cluster.server_classes[c].gpus_per_server,
+            -cluster.server_classes[c].b_inter,
+            starts[c],
+        ),
+    )
+    caps: List[Tuple[int, int]] = []
+    remaining = job.g
+    for c in order:
+        sc = cluster.server_classes[c]
+        for m in range(starts[c], starts[c] + sc.count):
+            take = sc.gpus_per_server if sc.gpus_per_server < remaining \
+                else remaining
+            caps.append((m, take))
+            remaining -= take
+            if remaining == 0:
+                return caps
+    raise ValueError(
+        f"job {job.job_id} needs {job.g} GPUs, cluster has "
+        f"{cluster.total_gpus}"
+    )
 
 
 def alpha_min_estimate(job: JobSpec, cluster: ClusterSpec) -> float:
     """alpha-tilde_i^min (paper Sec. IV-B): Heavy-Edge on the consolidated
-    (fewest possible servers, fully packed) allocation."""
+    (fewest possible servers, fully packed) allocation.  ``map_job``
+    resolves the per-server geometry itself on heterogeneous clusters."""
     _, a = map_job(job, consolidated_caps(job, cluster), cluster)
     return a
 
 
 def select_servers(
-    free: Mapping[int, int], g_needed: int, consolidate: bool
+    free: Mapping[int, int],
+    g_needed: int,
+    consolidate: bool,
+    spec: Optional[ClusterSpec] = None,
 ) -> List[Tuple[int, int]]:
     """Pick servers/GPU counts for a job (paper Alg. 1 lines 9 and 22).
 
     ``consolidate=True``  -> most-available-first (communication-heavy jobs);
     ``consolidate=False`` -> least-available-first (fragmentation-aware
                              placement of non-communication-heavy jobs).
+    ``spec`` (heterogeneous clusters only) breaks free-count ties by NIC
+    bandwidth: consolidating jobs prefer the fastest NICs among
+    equally-free servers, fragmentation-aware placement prefers the
+    slowest — keeping fast-NIC capacity free for the jobs that need it.
+    Homogeneous specs are unaffected (one class, id tiebreak as before).
     Returns (server_id, gpus_taken) or raises if capacity is insufficient.
     """
     # Counting sort by capacity: free-GPU counts are bounded by the server
@@ -412,11 +527,18 @@ def select_servers(
                 max_c = c
     if total < g_needed:
         raise ValueError("not enough free GPUs")
+    het = spec is not None and spec.is_heterogeneous
     order = range(max_c, 0, -1) if consolidate else range(1, max_c + 1)
     picks: List[Tuple[int, int]] = []
     remaining = g_needed
+    if het:
+        desc_rank, asc_rank = spec.bw_order_ranks
+        rank = desc_rank if consolidate else asc_rank
     for c in order:
-        for m in buckets.get(c, ()):
+        bucket = buckets.get(c, ())
+        if het and len(bucket) > 1:
+            bucket = sorted(bucket, key=rank.__getitem__)
+        for m in bucket:
             take = c if c < remaining else remaining
             picks.append((m, take))
             remaining -= take

@@ -11,9 +11,8 @@ splitting, bootstrap aggregation, and feature subsampling.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from .job import JobSpec, StageSpec, RAR, TAR
+from .job import JobSpec, StageSpec, RAR
 
 MB = 1024.0**2
 GB = 1024.0**3

@@ -28,7 +28,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,7 +36,9 @@ from .cluster import ClusterState
 from .job import ClusterSpec, JobSpec
 from . import timing
 
-_COMPLETION, _ARRIVAL, _WAKE = 0, 1, 2
+# Completions free capacity and faults remove it before arrivals/wakes at
+# the same timestamp trigger the scheduling pass.
+_COMPLETION, _FAULT, _ARRIVAL, _WAKE = 0, 1, 2, 3
 
 
 @dataclass
@@ -117,11 +119,19 @@ def simulate(
     cluster_spec: ClusterSpec,
     policy: Policy,
     validate: bool = True,
+    faults: Optional[Sequence[Tuple[float, int]]] = None,
 ) -> SimResult:
     """Run ``policy`` over ``jobs``; returns per-job records + engine stats.
 
     ``validate=False`` skips the per-start placement re-validation (safety
     net for policy bugs) — benchmarks use it; tests keep it on.
+
+    ``faults``: (time, server_id) failure injections — the server is marked
+    down at that time (free capacity vanishes immediately; GPUs held by
+    running jobs are forfeited on release, see ClusterState).  The epoch
+    bump wakes incremental policies out of their settled state.  Jobs
+    whose GPU demand exceeds the *degraded* cluster capacity can never
+    start; the end-of-run unfinished-jobs check reports them.
     """
     import time as _time
 
@@ -138,11 +148,15 @@ def simulate(
 
     wall0 = _time.perf_counter()
     seq = itertools.count()
-    # (time, kind, seq-or-epoch, job-or-None); kind breaks time ties
-    # (completions before arrivals before wakes), seq keeps sorts stable.
-    events: List[Tuple[float, int, int, Optional[JobSpec]]] = [
+    # (time, kind, seq-or-epoch, payload); kind breaks time ties
+    # (completions/faults before arrivals before wakes), seq keeps sorts
+    # stable.  Payload: the JobSpec for completions/arrivals, the server id
+    # for faults, None for wakes.
+    events: List[Tuple[float, int, int, object]] = [
         (job.arrival, _ARRIVAL, next(seq), job) for job in jobs
     ]
+    for fault_t, server_id in faults or ():
+        events.append((fault_t, _FAULT, next(seq), server_id))
     heapq.heapify(events)
 
     n_completed = 0
@@ -165,15 +179,18 @@ def simulate(
         t = events[0][0]
         live = False  # any non-stale event at this timestamp?
         while events and events[0][0] == t:
-            _, kind, tag, job = heappop(events)
+            _, kind, tag, payload = heappop(events)
             n_events += 1
             if kind == _COMPLETION:
-                release(job.job_id)
-                on_completion(t, job)
+                release(payload.job_id)
+                on_completion(t, payload)
                 n_completed += 1
                 live = True
             elif kind == _ARRIVAL:
-                on_arrival(t, job)
+                on_arrival(t, payload)
+                live = True
+            elif kind == _FAULT:
+                cluster.mark_server_down(payload)
                 live = True
             else:  # _WAKE: no state change; just triggers a scheduling pass.
                 if tag == wake_epoch:

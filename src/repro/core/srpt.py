@@ -3,6 +3,10 @@
 The paper maps the cluster problem onto a hypothetical single machine where
 job ``i`` has work ``(g_i / G) * n_i * alpha_i_min`` (instance A1) or, with
 predicted iterations, ``(g_i / G) * n_tilde_i * alpha_i_min`` (A1-tilde).
+On heterogeneous clusters ``G`` is the class-weighted total GPU count and
+``alpha_i_min`` the Heavy-Edge estimate on the biggest/fastest-NIC servers
+(see heavy_edge.consolidated_caps) — the virtual machine itself stays a
+unit-speed single machine.
 Preemptive SRPT is optimal for total completion time on one machine; the
 *virtual completion order* then drives the real scheduler.
 

@@ -21,11 +21,16 @@ the fully-pipelined (asynchronous) execution.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
-from .job import ClusterSpec, JobSpec
+from .job import ClusterSpec, JobSpec, ServerGeom
+
+# ``geom``: (gpus_per_server, b_inter, b_intra) of the server whose stage
+# vector is being timed.  ``None`` means the cluster-wide (homogeneous)
+# values — the fast path every pre-heterogeneity formula reduces to.
+Geoms = Mapping[int, ServerGeom]  # server id (or rank) -> geometry
 
 
 def _stage_comm_time(
@@ -34,19 +39,27 @@ def _stage_comm_time(
     s: int,
     cluster: ClusterSpec,
     nic_share: float | None = None,
+    geom: Optional[ServerGeom] = None,
 ) -> float:
     """Eq. (5): inter-stage communication time of stage ``s`` on one server.
 
     ``x_m`` is this server's GPU vector; ``nic_share`` optionally overrides
-    the reserved NIC bandwidth (used for the alpha_max bound).
+    the reserved NIC bandwidth (used for the alpha_max bound); ``geom``
+    supplies this server's (gpus, b_inter, b_intra) on heterogeneous
+    clusters.
     """
     st = job.stages[s]
     x_s = int(x_m[s])
     if x_s == 0:
         return 0.0
-    g = cluster.gpus_per_server
+    if geom is None:
+        g, b_inter, b_intra = (
+            cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
+        )
+    else:
+        g, b_inter, b_intra = geom
     if nic_share is None:
-        nic_share = (x_s / g) * cluster.b_inter
+        nic_share = (x_s / g) * b_inter
 
     inter_bytes = 0.0  # bytes crossing the NIC, per replica-pair fractioning
     intra_bytes = 0.0
@@ -69,7 +82,7 @@ def _stage_comm_time(
         # x_s too, so the ratio equals inter_bytes * g / B_inter (Eq. 5).
         t += inter_bytes * x_s / nic_share
     if intra_bytes > 0.0:
-        t += intra_bytes / cluster.b_intra
+        t += intra_bytes / b_intra
     return t
 
 
@@ -79,18 +92,24 @@ def _stage_allreduce_time(
     s: int,
     cluster: ClusterSpec,
     nic_share: float | None = None,
+    geom: Optional[ServerGeom] = None,
 ) -> float:
     """Eq. (6): intra-stage parameter synchronization time on one server."""
     st = job.stages[s]
     x_s = int(x_m[s])
     if x_s == 0 or st.k < 2 or st.h <= 0.0:
         return 0.0
+    if geom is None:
+        g, b_inter, b_intra = (
+            cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
+        )
+    else:
+        g, b_inter, b_intra = geom
     data = 2.0 * (st.k - 1) / st.k * st.h  # bytes per replica (RAR == TAR)
     if x_s == st.k:  # all replicas co-located: intra-server only
-        return data / cluster.b_intra
-    g = cluster.gpus_per_server
+        return data / b_intra
     if nic_share is None:
-        nic_share = (x_s / g) * cluster.b_inter
+        nic_share = (x_s / g) * b_inter
     return data * x_s / nic_share
 
 
@@ -99,16 +118,21 @@ def beta(
     x_m: np.ndarray,
     s: int,
     cluster: ClusterSpec,
+    geom: Optional[ServerGeom] = None,
 ) -> float:
-    """beta_{i,s}^m: per-iteration time of stage ``s`` on one server."""
+    """beta_{i,s}^m: per-iteration time of stage ``s`` on one server.
+
+    ``geom`` identifies the server's class geometry on heterogeneous
+    clusters (``None`` = the homogeneous cluster-wide values).
+    """
     if int(x_m[s]) == 0:
         return 0.0
     st = job.stages[s]
     comp = st.p_f + st.p_b  # Eq. (4)
     return (
         comp
-        + _stage_comm_time(job, x_m, s, cluster)
-        + _stage_allreduce_time(job, x_m, s, cluster)
+        + _stage_comm_time(job, x_m, s, cluster, geom=geom)
+        + _stage_allreduce_time(job, x_m, s, cluster, geom=geom)
     )
 
 
@@ -116,14 +140,27 @@ def alpha(
     job: JobSpec,
     placement: Mapping[int, np.ndarray],
     cluster: ClusterSpec,
+    geoms: Optional[Geoms] = None,
 ) -> float:
-    """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m."""
+    """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m.
+
+    ``geoms`` overrides the per-server geometry lookup (used by the
+    canonical rank-relabeled mapping, whose placement keys are ranks, not
+    physical server ids).  Without it, heterogeneous specs resolve each
+    placement key through ``cluster.server_geom``; homogeneous specs take
+    the unchanged fast path.
+    """
+    het = geoms is not None or cluster.is_heterogeneous
     best = 0.0
-    for x_m in placement.values():
+    for m, x_m in placement.items():
         x_m = np.asarray(x_m)
+        if het:
+            geom = geoms[m] if geoms is not None else cluster.server_geom(m)
+        else:
+            geom = None
         for s in range(job.num_stages):
             if x_m[s] > 0:
-                b = beta(job, x_m, s, cluster)
+                b = beta(job, x_m, s, cluster, geom=geom)
                 if b > best:
                     best = b
     return best
@@ -151,10 +188,18 @@ def alpha_max(job: JobSpec, cluster: ClusterSpec) -> float:
     """Worst-case per-iteration time (paper Sec. III-B).
 
     The job is hypothetically spread over ``g_i`` servers, one replica each,
-    with NIC share fixed at ``(1/g) * B_inter``.
+    with NIC share fixed at ``(1/g) * B_inter``.  On a heterogeneous
+    cluster the bound takes the worst reserved share over the server
+    classes (slowest NIC relative to its per-server GPU count), keeping
+    alpha_max an upper bound for every feasible placement.
     """
-    g = cluster.gpus_per_server
-    nic_share = cluster.b_inter / g
+    if cluster.is_heterogeneous:
+        nic_share = min(
+            b_inter / g for g, b_inter, _b_intra in
+            (cluster.class_geom(c) for c in range(len(cluster.server_classes)))
+        )
+    else:
+        nic_share = cluster.b_inter / cluster.gpus_per_server
     worst = 0.0
     for s, st in enumerate(job.stages):
         x_m = np.zeros(job.num_stages, dtype=np.int64)
@@ -196,17 +241,19 @@ def alpha_sync(
     where AllReduce is paid once per iteration at the sync barrier.
     """
     S = job.num_stages
+    het = cluster.is_heterogeneous
     bottleneck = 0.0
     ar = 0.0
-    for x_m in placement.values():
+    for m, x_m in placement.items():
         x_m = np.asarray(x_m)
+        geom = cluster.server_geom(m) if het else None
         for s in range(S):
             if x_m[s] == 0:
                 continue
             st = job.stages[s]
             comp = st.p_f + st.p_b
-            comm = _stage_comm_time(job, x_m, s, cluster)
+            comm = _stage_comm_time(job, x_m, s, cluster, geom=geom)
             bottleneck = max(bottleneck, comp + comm)
-            ar = max(ar, _stage_allreduce_time(job, x_m, s, cluster))
+            ar = max(ar, _stage_allreduce_time(job, x_m, s, cluster, geom=geom))
     m = max(1, n_microbatches)
     return (m + S - 1) / m * bottleneck + ar

@@ -19,8 +19,57 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .job import JobSpec, RAR, TAR
+from .job import ClusterSpec, JobSpec, RAR, ServerClass, TAR
 from .profiles import PAPER_MODELS, SINGLE_GPU_MODELS, make_job
+
+# Mixed-generation server SKUs (gpus/server, NIC B/s, intra B/s): production
+# GPU clusters run several accelerator generations side by side (Hu et al.,
+# arXiv 2109.01313).  Ordered newest -> oldest; bandwidths follow the
+# paper's 10 GbE / NVLink magnitudes with a 100 GbE NIC on the newest SKU
+# and a half-width 4-GPU node for the oldest.
+GPU_GENERATIONS: tuple = (
+    ("gen-a", 8, 12.5e9, 300e9),
+    ("gen-b", 8, 1.25e9, 150e9),
+    ("gen-c", 4, 1.25e9, 50e9),
+)
+
+
+def mixed_cluster_spec(
+    num_servers: int = 16,
+    seed: int = 0,
+    n_classes: int = 2,
+    b_intra: float = 300e9,
+) -> ClusterSpec:
+    """Sample a mixed-generation cluster (companion to ``generate_trace``).
+
+    Draws ``n_classes`` generations from ``GPU_GENERATIONS`` (newest first)
+    and splits ``num_servers`` among them with every class non-empty, so a
+    trace seed pins both the workload and the cluster it runs on.
+    """
+    if not 1 <= n_classes <= len(GPU_GENERATIONS):
+        raise ValueError(
+            f"n_classes must be in [1, {len(GPU_GENERATIONS)}]"
+        )
+    if num_servers < n_classes:
+        raise ValueError("need at least one server per class")
+    rng = np.random.default_rng(seed)
+    # one server guaranteed per class; the rest multinomially split
+    extra = rng.multinomial(
+        num_servers - n_classes, np.full(n_classes, 1.0 / n_classes)
+    )
+    classes = [
+        ServerClass(
+            count=1 + int(extra[i]),
+            gpus_per_server=gpus,
+            b_inter=b_inter,
+            b_intra=bi,
+            name=name,
+        )
+        for i, (name, gpus, b_inter, bi) in enumerate(
+            GPU_GENERATIONS[:n_classes]
+        )
+    ]
+    return ClusterSpec.heterogeneous(classes, b_intra=b_intra)
 
 
 @dataclass

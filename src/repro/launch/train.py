@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from ..train import checkpoint
 from ..train.data import DataLoader
 from ..train.fault_tolerance import StragglerDetector
 from ..train.optimizer import AdamWConfig
-from ..train.train_step import TrainState, init_train_state, make_train_step
+from ..train.train_step import init_train_state, make_train_step
 
 
 def train_loop(

@@ -13,7 +13,6 @@ Batch dicts per family (see ``input_specs`` in launch/dryrun.py):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

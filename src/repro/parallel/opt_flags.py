@@ -10,8 +10,6 @@ at trace time.  Flags:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 _FLAGS = {
     "sp": False,
     "mamba_heads": False,

@@ -16,7 +16,7 @@ Every rule degrades to replication when a dim isn't divisible — so every
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

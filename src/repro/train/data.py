@@ -10,7 +10,7 @@ Token streams are generated with a counter-based hash (Philox via
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -1,8 +1,5 @@
 """Checkpoint: atomic roundtrip, async writer, pruning, exact resume."""
-import shutil
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

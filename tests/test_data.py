@@ -1,6 +1,5 @@
 """Synthetic data pipeline: determinism, shift, shards, cursor."""
 import numpy as np
-import pytest
 
 from repro.configs import reduced_config
 from repro.train.data import DataLoader, make_batch

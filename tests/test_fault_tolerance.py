@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 from repro.core import ClusterSpec, make_predictor, simulate, ASRPTPolicy
-from repro.core.cluster import ClusterState
 from repro.train.fault_tolerance import (
     HeartbeatMonitor,
     StragglerDetector,

@@ -8,7 +8,6 @@ except ImportError:  # property tests fall back to seeded sampling
 
 import repro.core.heavy_edge as he
 from repro.core import ClusterSpec, build_job_graph
-from repro.core.graph import JobGraph
 from repro.core.job import JobSpec, StageSpec
 from repro.core import timing
 

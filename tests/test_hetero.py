@@ -1,0 +1,429 @@
+"""Heterogeneous clusters: per-class placement cache, fault injection,
+and the capacity-indexed work-conserving ready queue.
+
+The contract mirrors tests/test_sched_cache.py: everything the incremental
+engine skips or relabels must be provably unchanged, so cached A-SRPT on a
+mixed-generation cluster must be *bit-identical* to exhaustive
+re-evaluation, per-class relabeling must never move a placement onto a
+server class it wasn't computed for, and the homogeneous path must be
+byte-for-byte the PR-1 behavior (a single-class spec reproduces the flat
+spec exactly).
+"""
+import bisect
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ASRPTPolicy,
+    ClusterSpec,
+    ServerClass,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    mixed_cluster_spec,
+    simulate,
+)
+from repro.core.baselines import QueuePolicy
+from repro.core.cluster import ClusterState
+from repro.core.heavy_edge import (
+    PlacementCache,
+    alpha_min_estimate,
+    consolidated_caps,
+    select_servers,
+)
+
+from conftest import make_simple_job
+
+from test_sched_cache import _simulate_pair, assert_identical
+
+
+def _small_trace(seed, n_jobs=40, max_g=16):
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=60.0 * n_jobs,
+            seed=seed,
+            max_gpus_per_job=max_g,
+            mean_iters=60,
+            session_spread=30.0,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec model
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_spec_layout():
+    spec = ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=2, gpus_per_server=8, b_inter=12.5e9, name="a"),
+            ServerClass(count=3, gpus_per_server=4, b_inter=1.25e9, name="b"),
+        ],
+        b_intra=300e9,
+    )
+    assert spec.num_servers == 5
+    assert spec.gpus_per_server == 8  # max over classes
+    assert spec.b_inter == 1.25e9  # min over classes
+    assert spec.total_gpus == 2 * 8 + 3 * 4
+    assert [spec.class_of(m) for m in range(5)] == [0, 0, 1, 1, 1]
+    assert [spec.server_gpus(m) for m in range(5)] == [8, 8, 4, 4, 4]
+    assert spec.server_geom(0) == (8, 12.5e9, 300e9)
+    assert spec.server_geom(4) == (4, 1.25e9, 300e9)
+
+
+def test_heterogeneous_spec_validation():
+    cls = ServerClass(count=2, gpus_per_server=8, b_inter=1e9)
+    with pytest.raises(ValueError):  # counts must sum to num_servers
+        ClusterSpec(
+            num_servers=3, gpus_per_server=8, b_inter=1e9, b_intra=1e10,
+            server_classes=(cls,),
+        )
+    with pytest.raises(ValueError):  # gpus_per_server must be the class max
+        ClusterSpec(
+            num_servers=2, gpus_per_server=4, b_inter=1e9, b_intra=1e10,
+            server_classes=(cls,),
+        )
+    with pytest.raises(ValueError):  # b_inter must be the class min
+        ClusterSpec(
+            num_servers=2, gpus_per_server=8, b_inter=2e9, b_intra=1e10,
+            server_classes=(cls,),
+        )
+
+
+def test_mixed_cluster_spec_generator():
+    for seed in range(8):
+        spec = mixed_cluster_spec(num_servers=9, seed=seed, n_classes=3)
+        assert spec.is_heterogeneous
+        assert sum(c.count for c in spec.server_classes) == 9
+        assert all(c.count >= 1 for c in spec.server_classes)
+        assert spec.gpus_per_server == max(
+            c.gpus_per_server for c in spec.server_classes
+        )
+
+
+def test_cluster_state_tracks_per_server_capacity():
+    spec = ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=1, gpus_per_server=8, b_inter=12.5e9),
+            ServerClass(count=2, gpus_per_server=4, b_inter=1.25e9),
+        ],
+        b_intra=300e9,
+    )
+    cs = ClusterState(spec)
+    assert cs.free == {0: 8, 1: 4, 2: 4}
+    assert cs.total_free == 16
+    with pytest.raises(ValueError):  # small server can't hold 5 GPUs
+        cs.allocate(1, {1: np.array([5])})
+    cs.allocate(1, {0: np.array([8])})
+    cs.release(1)
+    assert cs.free[0] == 8
+
+
+def test_release_after_fault_forfeits_capacity():
+    spec = ClusterSpec(
+        num_servers=2, gpus_per_server=4, b_inter=1e9, b_intra=1e10
+    )
+    cs = ClusterState(spec)
+    cs.allocate(7, {0: np.array([3]), 1: np.array([1])})
+    cs.mark_server_down(0)
+    assert cs.total_free == 3  # server 1's remaining GPUs only
+    cs.release(7)
+    # server 0's three GPUs are forfeited, server 1's one returns
+    assert cs.free[0] == 0
+    assert cs.free[1] == 4
+    assert cs.total_free == 4
+    assert cs.downed_servers == {0}
+
+
+# ---------------------------------------------------------------------------
+# Per-class placement cache
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cached_equals_uncached_hetero(seed):
+    """Bit-identical cached vs exhaustive A-SRPT on mixed-generation specs."""
+    spec = mixed_cluster_spec(num_servers=6, seed=seed, n_classes=3)
+    jobs = _small_trace(seed)
+    ra, rb = _simulate_pair(jobs, spec)
+    assert_identical(ra, rb)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cached_equals_uncached_hetero_refined(seed):
+    spec = mixed_cluster_spec(num_servers=5, seed=seed, n_classes=2)
+    jobs = _small_trace(seed, n_jobs=30)
+    ra, rb = _simulate_pair(jobs, spec, refine=True)
+    assert_identical(ra, rb)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cache_relabeling_respects_class_capacity(seed):
+    """A relabeled hit never lands on a server whose class can't hold it.
+
+    Random free-capacity states on a mixed spec; every placement the cache
+    returns must fit each server's *own* class capacity (a cross-class
+    relabel would overflow the small class or mis-price its bandwidth).
+    """
+    rng = np.random.default_rng(seed)
+    spec = mixed_cluster_spec(num_servers=7, seed=seed, n_classes=3)
+    cache = PlacementCache(spec)
+    job8 = make_simple_job(job_id=0, replicas=(4, 4), h_mb=64.0)
+    job6 = make_simple_job(job_id=1, replicas=(3, 3), h_mb=16.0)
+    for _ in range(30):
+        free = {
+            m: int(rng.integers(0, spec.server_gpus(m) + 1))
+            for m in range(spec.num_servers)
+        }
+        for job in (job8, job6):
+            if sum(free.values()) < job.g:
+                continue
+            for consolidate in (True, False):
+                caps = select_servers(
+                    free, job.g, consolidate=consolidate, spec=spec
+                )
+                placement, _a = cache.map_job(job, caps)
+                taken = dict(caps)
+                for m, x in placement.items():
+                    got = int(np.asarray(x).sum())
+                    assert got <= spec.server_gpus(m), (m, got)
+                    assert got <= free[m]
+                    assert got == taken[m]
+
+
+def test_cache_keys_distinguish_classes():
+    """Same capacity shape on different classes must be distinct entries."""
+    spec = ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=2, gpus_per_server=8, b_inter=12.5e9),
+            ServerClass(count=2, gpus_per_server=8, b_inter=1.25e9),
+        ],
+        b_intra=300e9,
+    )
+    job = make_simple_job(job_id=0, replicas=(4, 4), h_mb=256.0)
+    cache = PlacementCache(spec)
+    p0, a0 = cache.map_job(job, [(0, 8)])  # fast-NIC class
+    p1, a1 = cache.map_job(job, [(2, 8)])  # slow-NIC class: new key
+    assert cache.misses == 2 and cache.hits == 0
+    # same class, different server: within-class relabeled hit
+    p3, a3 = cache.map_job(job, [(1, 8)])
+    assert cache.hits == 1
+    assert a3 == a0
+    assert set(p3) == {1} and np.array_equal(p3[1], p0[0])
+    # fully co-located on one server: NIC doesn't matter, alphas agree
+    assert a0 == pytest.approx(a1)
+    # split across two servers: the slow class pays more
+    _, a_fast = cache.map_job(job, [(0, 4), (1, 4)])
+    _, a_slow = cache.map_job(job, [(2, 4), (3, 4)])
+    assert a_slow > a_fast
+
+
+def test_single_class_spec_equals_flat_spec():
+    """A one-class heterogeneous spec is the homogeneous cluster: the
+    engine must produce the PR-1 schedule byte for byte."""
+    flat = ClusterSpec(
+        num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    wrapped = ClusterSpec.heterogeneous(
+        [ServerClass(count=4, gpus_per_server=8, b_inter=1.25e9)],
+        b_intra=300e9,
+    )
+    jobs = _small_trace(3)
+    for refine in (False, True):
+        ra = simulate(
+            jobs, flat,
+            ASRPTPolicy(make_predictor("mean"), refine_mapping=refine),
+        )
+        rb = simulate(
+            jobs, wrapped,
+            ASRPTPolicy(make_predictor("mean"), refine_mapping=refine),
+        )
+        assert_identical(ra, rb)
+
+
+def test_consolidated_caps_hetero_prefers_big_fast_servers():
+    spec = ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=2, gpus_per_server=4, b_inter=1.25e9),
+            ServerClass(count=2, gpus_per_server=8, b_inter=12.5e9),
+        ],
+        b_intra=300e9,
+    )
+    job = make_simple_job(job_id=0, replicas=(6, 6), h_mb=64.0)  # g = 12
+    caps = consolidated_caps(job, spec)
+    # big (8-GPU) class first: ids 2, 3 hold 8 + 4
+    assert caps == [(2, 8), (3, 4)]
+    assert alpha_min_estimate(job, spec) > 0.0
+
+
+def test_select_servers_bandwidth_tiebreak():
+    spec = ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=2, gpus_per_server=8, b_inter=1.25e9),
+            ServerClass(count=2, gpus_per_server=8, b_inter=12.5e9),
+        ],
+        b_intra=300e9,
+    )
+    free = {0: 8, 1: 8, 2: 8, 3: 8}
+    # comm-heavy consolidation: fastest NIC first despite higher ids
+    assert select_servers(free, 16, consolidate=True, spec=spec) == [
+        (2, 8), (3, 8),
+    ]
+    # fragmentation-aware: slowest NIC first, fast servers stay free
+    assert select_servers(free, 4, consolidate=False, spec=spec) == [(0, 4)]
+    # without the spec the homogeneous id-order tiebreak applies
+    assert select_servers(free, 16, consolidate=True) == [(0, 8), (1, 8)]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_alpha_max_bounds_realized_alphas_hetero(seed):
+    """alpha_max stays an upper bound for every placement the scheduler
+    realizes on a mixed-generation cluster."""
+    from repro.core.simulator import AlphaCache
+
+    spec = mixed_cluster_spec(num_servers=6, seed=seed, n_classes=3)
+    jobs = _small_trace(seed, n_jobs=25)
+    res = simulate(jobs, spec, ASRPTPolicy(make_predictor("mean")))
+    bounds = AlphaCache(spec)
+    by_id = {j.job_id: j for j in jobs}
+    for jid, rec in res.records.items():
+        a_max, a_min = bounds.bounds(by_id[jid])
+        assert rec.alpha <= a_max + 1e-9
+        assert a_min <= a_max + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fault_injection_avoids_downed_servers(seed):
+    """No job is ever placed on a downed server; every job still finishes."""
+    spec = mixed_cluster_spec(num_servers=6, seed=seed, n_classes=2)
+    jobs = _small_trace(seed, n_jobs=30, max_g=8)
+    fault_t = jobs[len(jobs) // 3].arrival
+    downed = (0, spec.num_servers - 1)  # one big-class, one small-class
+    res = simulate(
+        jobs,
+        spec,
+        ASRPTPolicy(make_predictor("mean")),
+        faults=[(fault_t, m) for m in downed],
+    )
+    assert len(res.records) == len(jobs)
+    for jid, rec in res.records.items():
+        if rec.start >= fault_t:
+            assert not set(downed) & set(rec.servers), (jid, rec)
+
+
+def test_fault_injection_work_conserving_baseline():
+    spec = ClusterSpec(
+        num_servers=4, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    jobs = [
+        make_simple_job(job_id=i, replicas=(2,), p=0.5, h_mb=1,
+                        n_iters=20, arrival=float(i * 5))
+        for i in range(16)
+    ]
+    res = simulate(
+        jobs,
+        spec,
+        QueuePolicy(make_predictor("perfect"), key="subtime",
+                    work_conserving=True),
+        faults=[(30.0, 2)],
+    )
+    assert len(res.records) == len(jobs)
+    for jid, rec in res.records.items():
+        if rec.start >= 30.0:
+            assert 2 not in rec.servers, (jid, rec)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-indexed work-conserving ready queue
+# ---------------------------------------------------------------------------
+
+
+class _LinearScanWCS(QueuePolicy):
+    """Reference: the former O(queue) full-scan backfilling pass."""
+
+    def on_arrival(self, t, job):
+        bisect.insort(
+            self.waiting, (-self._key(job), -job.arrival, -job.job_id, job)
+        )
+
+    def schedule(self, t, cluster):
+        starts = []
+        waiting = self.waiting
+        if not waiting or cluster.total_free == 0:
+            return starts
+        started_idx = []
+        for i in range(len(waiting) - 1, -1, -1):
+            free = cluster.total_free
+            if free == 0:
+                break
+            job = waiting[i][3]
+            if job.g <= free:
+                self._start(job, cluster, starts)
+                started_idx.append(i)
+        for i in started_idx:  # descending, so positions stay valid
+            del waiting[i]
+        return starts
+
+    def queue_depth(self):
+        return len(self.waiting)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from(["duration", "workload", "subtime"]),
+)
+def test_bucketed_wcs_equals_linear_scan(seed, key):
+    specs = (
+        ClusterSpec(
+            num_servers=4, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+        ),
+        mixed_cluster_spec(num_servers=6, seed=seed, n_classes=3),
+    )
+    jobs = _small_trace(seed, n_jobs=60)
+    for spec in specs:
+        ra = simulate(
+            jobs, spec,
+            QueuePolicy(make_predictor("mean"), key=key,
+                        work_conserving=True),
+        )
+        rb = simulate(
+            jobs, spec,
+            _LinearScanWCS(make_predictor("mean"), key=key,
+                           work_conserving=True),
+        )
+        assert_identical(ra, rb)
+
+
+def test_bucketed_queue_depth_tracking():
+    pol = QueuePolicy(make_predictor("mean"), key="subtime",
+                      work_conserving=True)
+    spec = ClusterSpec(
+        num_servers=2, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    pol.bind(spec)
+    cluster = ClusterState(spec)
+    for i in range(5):
+        pol.on_arrival(float(i), make_simple_job(job_id=i, replicas=(2,)))
+    assert pol.queue_depth() == 5
+    started = pol.schedule(5.0, cluster)
+    assert len(started) == 5  # 5 x 2 GPUs fit in 16
+    assert pol.queue_depth() == 0

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
-from repro.models import Model, n_params
+from repro.models import Model
 from repro.train.data import make_batch
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import init_train_state, make_train_step

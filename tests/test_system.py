@@ -1,9 +1,7 @@
 """End-to-end system behaviour: the scheduler schedules the same models the
 framework trains; training + serving run under scheduler-chosen order."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.core import (
@@ -17,7 +15,7 @@ from repro.core import (
     simulate,
 )
 from repro.launch.train import train_loop
-from repro.models import Model, n_params
+from repro.models import Model
 
 
 def test_framework_arch_as_scheduler_job():
