@@ -5,10 +5,15 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test lint smoke bench-sched bench-hetero bench-budget ci
+.PHONY: test test-sched lint smoke bench-sched bench-hetero bench-budget ci
 
 test:
 	python -m pytest -x -q
+
+# Pure-scheduling subset (no JAX compiles): seconds instead of the
+# 15-20 min tier-1 — use while iterating on the scheduling engine.
+test-sched:
+	python -m pytest -m sched -x -q
 
 # Correctness-focused ruff rules (see [tool.ruff] in pyproject.toml); CI
 # installs ruff, locally we skip with a note when it's absent.  A lint

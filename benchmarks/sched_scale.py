@@ -10,10 +10,12 @@ designed to amortize.
 Reported per row: wall seconds, events processed, events/sec, peak
 pending-queue depth (policy-held jobs), total flow time.  At 20k jobs the
 A-SRPT row is additionally run with ``placement_cache=False`` — the
-exhaustive re-evaluation engine — and the cached/uncached events-per-sec
-ratio is reported as ``cache_speedup_20k`` (the two engines produce
-bit-identical schedules; tests/test_sched_cache.py holds that equivalence
-under property testing).
+exhaustive re-evaluation engine on the retained pure-Python reference
+pipeline (dict-walk Heavy-Edge, per-(server, stage) beta alpha) — and
+the cached/uncached events-per-sec ratio is reported as
+``cache_speedup_20k`` (the two engines produce bit-identical schedules;
+tests/test_sched_cache.py and tests/test_vectorized.py hold that
+equivalence under property testing).
 
 The 100k-job sweep runs A-SRPT always; the five baselines join at 100k
 only under ``--full`` (they are each ~minutes at that scale).
@@ -32,10 +34,12 @@ Variants:
   ``flow_vs_clean`` — degraded-cluster recovery flow time relative to the
   clean run.
 * ``--budget`` / ``sched_scale_budget`` — a CI-sized subset (one size,
-  single sample) whose events/sec per policy is written to
-  ``BENCH_sched.json`` for trend tracking; ``--check`` compares against a
-  committed baseline and *warns* (never fails) past the threshold, since
-  shared CI runners swing tens of percent.
+  best-of-3 cold-start samples per policy) whose events/sec per policy is
+  written to ``BENCH_sched.json`` for trend tracking; ``--check``
+  compares against a committed baseline and *warns* (never fails) past
+  the threshold, since shared CI runners swing tens of percent.
+* ``--profile [N]`` — run the selected variant under cProfile and dump
+  the top-N cumulative entries (hot-path triage without ad-hoc scripts).
 """
 from __future__ import annotations
 
@@ -187,23 +191,46 @@ def sched_scale_hetero(full: bool = False) -> List[Dict]:
     return rows
 
 
+BUDGET_SAMPLES = 3  # best-of per row; shared runners swing tens of percent
+
+
 def sched_scale_budget() -> List[Dict]:
-    """CI budget mode: one 5k-job size, every policy, single sample each.
+    """CI budget mode: one 5k-job size, every policy, best-of-3 samples.
 
     Small enough for a shared runner (~1 min), large enough that
     events/sec is dominated by the scheduling engine rather than setup.
+    Each row reports the fastest of ``BUDGET_SAMPLES`` back-to-back runs
+    (fresh policy and caches per run — every sample is a cold start):
+    single samples swung tens of percent with host noise, drowning the
+    regression signal the trend tracking exists for; best-of-3 follows
+    the 20k cached/uncached comparison's sampling in ``sched_scale``.
     """
     n = BUDGET_SIZE
     jobs = _trace(n)
     cluster = make_cluster(num_servers=NUM_SERVERS)
-    rows = [_row(n, "A-SRPT", simulate(jobs, cluster, _asrpt(), validate=False))]
+
+    def best_of(mk_policy, clu, faults=None):
+        return min(
+            (
+                simulate(jobs, clu, mk_policy(), validate=False, faults=faults)
+                for _ in range(BUDGET_SAMPLES)
+            ),
+            key=lambda r: r.wall_s,
+        )
+
+    rows = [_row(n, "A-SRPT", best_of(_asrpt, cluster))]
     for name in BASELINES:
-        pol = BASELINES[name](make_predictor("mean"))
-        rows.append(_row(n, name, simulate(jobs, cluster, pol, validate=False)))
+        rows.append(
+            _row(
+                n, name,
+                best_of(lambda: BASELINES[name](make_predictor("mean")),
+                        cluster),
+            )
+        )
     het = _hetero_cluster()
     horizon = n * SECONDS_PER_JOB
     faults = [(FAULT_AT_FRAC * horizon, m) for m in FAULT_SERVERS]
-    res = simulate(jobs, het, _asrpt(), validate=False, faults=faults)
+    res = best_of(_asrpt, het, faults=faults)
     rows.append(_row(n, "A-SRPT (hetero, 4 gen-a down)", res))
     return rows
 
@@ -282,6 +309,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="fail-soft events/sec comparison vs a baseline JSON "
              "(--budget only)",
     )
+    ap.add_argument(
+        "--profile", metavar="N", nargs="?", const=25, default=None,
+        type=int,
+        help="run under cProfile and dump the top-N functions by "
+             "cumulative time (default 25) — locates scheduling hot "
+             "paths without ad-hoc scripts",
+    )
     args = ap.parse_args(argv)
 
     if (args.json or args.check) and not args.budget:
@@ -290,11 +324,25 @@ def main(argv: Optional[List[str]] = None) -> int:
         if args.full:
             ap.error("--budget is fixed-size; drop --full (or use "
                      "--hetero/--full for the big sweeps)")
-        rows = sched_scale_budget()
+        run = sched_scale_budget
     elif args.hetero:
-        rows = sched_scale_hetero(full=args.full)
+        run = lambda: sched_scale_hetero(full=args.full)  # noqa: E731
     else:
-        rows = sched_scale(full=args.full)
+        run = lambda: sched_scale(full=args.full)  # noqa: E731
+
+    if args.profile is not None:
+        import cProfile
+        import pstats
+
+        profiler = cProfile.Profile()
+        profiler.enable()
+        rows = run()
+        profiler.disable()
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(
+            args.profile
+        )
+    else:
+        rows = run()
 
     for r in rows:
         print(json.dumps(r))

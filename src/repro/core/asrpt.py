@@ -38,7 +38,12 @@ from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional
 
 from .cluster import ClusterState
-from .heavy_edge import PlacementCache, map_job_canonical, select_servers
+from .heavy_edge import (
+    FreeCapsSnapshot,
+    PlacementCache,
+    map_job_canonical,
+    select_servers,
+)
 from .job import ClusterSpec, JobSpec
 from .predictor import IterationPredictor
 from .simulator import AlphaCache, Policy, Start
@@ -126,10 +131,12 @@ class ASRPTPolicy(Policy):
     def _map(self, job: JobSpec, caps) -> tuple:
         if self._pcache is not None:
             return self._pcache.map_job(job, caps)
-        # Uncached reference path: identical canonicalization, no memo —
-        # the cached engine must be bit-identical to this.
+        # Uncached reference path: identical canonicalization, no memo,
+        # and the retained pure-Python greedy/alpha pipeline — the cached
+        # array-native engine must be bit-identical to this.
         return map_job_canonical(
-            job, caps, self.cluster_spec, refine=self.refine_mapping
+            job, caps, self.cluster_spec, refine=self.refine_mapping,
+            reference=True,
         )
 
     # -- main scheduling pass -------------------------------------------------
@@ -157,44 +164,87 @@ class ASRPTPolicy(Policy):
             # expiring at/before t can change an outcome.
             dl = self._min_deadline()
             run_step2 = dl is not None and t >= dl - 1e-12
+        # Batched step-2 state (incremental mode): the consolidating pick
+        # order is shared by every evaluation against one free state, so
+        # the second evaluation onward carves its capacity vector from a
+        # prefix-sum snapshot instead of re-running the counting sort (a
+        # lone evaluation keeps the plain ``select_servers`` — building
+        # the full-order snapshot for one carve would cost more).  Jobs
+        # sharing (config, g) — hence provably the same caps, placement,
+        # and alpha — share one evaluation via ``memo``.  Any start
+        # invalidates all of it (the free state changed).
+        snapshot: Optional[FreeCapsSnapshot] = None
+        selected_once = False
+        memo: Dict[tuple, tuple] = {}
+        spec = self.cluster_spec
+
+        def consolidating_caps(g_need: int) -> tuple:
+            """Shared snapshot-or-select ladder for steps 2 and 3."""
+            nonlocal snapshot, selected_once
+            if snapshot is not None:
+                return snapshot.caps_for(g_need)
+            if selected_once:
+                snapshot = FreeCapsSnapshot.consolidating(
+                    cluster.free, cluster.total_free, spec,
+                    buckets=cluster.free_buckets,
+                )
+                return snapshot.caps_for(g_need)
+            selected_once = True
+            return tuple(
+                select_servers(
+                    cluster.free, g_need,
+                    consolidate=True, spec=spec,
+                    buckets=cluster.free_buckets,
+                    total_free=cluster.total_free,
+                )
+            )
+
         if run_step2:
             for jid in list(self.delayed.keys()):
                 d = self.delayed[jid]
-                if d.job.g > cluster.total_free:
+                g = d.job.g
+                if g > cluster.total_free:
                     continue  # cannot fit yet; keep waiting
                 expired = t >= d.deadline - 1e-12
-                if incremental and not expired:
-                    # The evaluation is a pure function of the selected
-                    # capacity vector; skip it when that provably didn't
-                    # change.
-                    if d.eval_epoch == cluster.epoch:
+                if incremental:
+                    if not expired and d.eval_epoch == cluster.epoch:
+                        # The evaluation is a pure function of the selected
+                        # capacity vector; skip it when that provably
+                        # didn't change.
                         continue
-                    caps = tuple(
-                        select_servers(
-                            cluster.free, d.job.g,
-                            consolidate=True, spec=self.cluster_spec,
-                        )
-                    )
-                    d.eval_epoch = cluster.epoch
-                    if caps == d.eval_caps:
-                        continue  # same caps -> same alpha -> same decision
-                    d.eval_caps = caps
+                    caps = consolidating_caps(g)
+                    if not expired:
+                        d.eval_epoch = cluster.epoch
+                        if caps == d.eval_caps:
+                            continue  # same caps -> same decision
+                        d.eval_caps = caps
+                    key = (d.job.config_key, g)
+                    hit = memo.get(key)
+                    if hit is None:
+                        hit = memo[key] = self._map(d.job, caps)
+                    placement, a = hit
                 else:
                     caps = tuple(
                         select_servers(
-                            cluster.free, d.job.g,
-                            consolidate=True, spec=self.cluster_spec,
+                            cluster.free, g,
+                            consolidate=True, spec=spec,
                         )
                     )
-                placement, a = self._map(d.job, caps)
+                    placement, a = self._map(d.job, caps)
                 _, a_min = self.alpha_cache.bounds(d.job)
                 if a < d.kappa or a / a_min <= self.comm_heavy or expired:
                     del self.delayed[jid]
                     starts.append(Start(d.job, placement, a))
                     cluster.allocate(jid, placement, counts=dict(caps))
+                    # free capacity changed: drop every per-state structure
+                    snapshot = None
+                    selected_once = False
+                    memo = {}
                 # else: stay delayed
 
-        # Step 3: Alg. 1 main loop over the head of pending_queue.
+        # Step 3: Alg. 1 main loop over the head of pending_queue.  The
+        # consolidating snapshot stays valid across heads that delay
+        # (delaying changes nothing) and is dropped on every allocation.
         while self.pending:
             job = self.pending[0]
             if job.g > cluster.total_free:
@@ -202,17 +252,22 @@ class ASRPTPolicy(Policy):
             self.pending.popleft()
             a_max, a_min = self.alpha_cache.bounds(job)
             if a_max / a_min >= self.comm_heavy:
-                caps = tuple(
-                    select_servers(
-                        cluster.free, job.g,
-                        consolidate=True, spec=self.cluster_spec,
+                if incremental:
+                    caps = consolidating_caps(job.g)
+                else:
+                    caps = tuple(
+                        select_servers(
+                            cluster.free, job.g,
+                            consolidate=True, spec=spec,
+                        )
                     )
-                )
                 placement, a = self._map(job, caps)
                 delay_budget = self.tau * self._pred_work[job.job_id]
                 if a / a_min <= self.comm_heavy or delay_budget <= 0.0:
                     starts.append(Start(job, placement, a))
                     cluster.allocate(job.job_id, placement, counts=dict(caps))
+                    snapshot = None
+                    selected_once = False
                 else:
                     d = _Delayed(job, kappa=a, deadline=t + delay_budget)
                     # Seed with this evaluation: caps were selected at the
@@ -223,13 +278,23 @@ class ASRPTPolicy(Policy):
                     self.delayed[job.job_id] = d
                     heapq.heappush(self._dheap, (d.deadline, job.job_id))
             else:
-                caps = select_servers(
-                    cluster.free, job.g,
-                    consolidate=False, spec=self.cluster_spec,
-                )
+                if incremental:
+                    caps = select_servers(
+                        cluster.free, job.g,
+                        consolidate=False, spec=spec,
+                        buckets=cluster.free_buckets,
+                        total_free=cluster.total_free,
+                    )
+                else:
+                    caps = select_servers(
+                        cluster.free, job.g,
+                        consolidate=False, spec=spec,
+                    )
                 placement, a = self._map(job, caps)
                 starts.append(Start(job, placement, a))
                 cluster.allocate(job.job_id, placement, counts=dict(caps))
+                snapshot = None
+                selected_once = False
 
         # A pass that started nothing left the cluster exactly as it found
         # it; record the epoch so step 2 can skip until something changes.

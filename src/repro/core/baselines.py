@@ -95,7 +95,8 @@ class QueuePolicy(Policy):
 
     def _start(self, job: JobSpec, cluster: ClusterState, starts) -> None:
         caps = select_servers(
-            cluster.free, job.g, consolidate=True, spec=self.cluster_spec
+            cluster.free, job.g, consolidate=True, spec=self.cluster_spec,
+            buckets=cluster.free_buckets, total_free=cluster.total_free,
         )
         placement, a = self._pcache.map_job(job, caps)
         starts.append(Start(job, placement, a))

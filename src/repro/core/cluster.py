@@ -9,7 +9,8 @@ reshuffle the selected capacity vector into one the greedy maps better.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional
+import bisect
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
@@ -17,7 +18,17 @@ from .job import ClusterSpec
 
 
 class ClusterState:
-    """Tracks free GPUs per server and per-job allocations."""
+    """Tracks free GPUs per server and per-job allocations.
+
+    Alongside the ``free`` dict the state maintains ``free_buckets`` —
+    server ids grouped by free-GPU count, ascending ids within a bucket
+    (the exact structure ``heavy_edge.select_servers`` builds per call) —
+    so per-event server selection walks the buckets directly instead of
+    re-sorting all servers.  Buckets update in O(servers touched) per
+    allocate/release; ascending-id order is preserved by ``bisect.insort``
+    and matches dict-iteration order (ids are inserted 0..M-1 and never
+    removed), keeping bucket-based selection bit-identical.
+    """
 
     def __init__(self, spec: ClusterSpec):
         self.spec = spec
@@ -31,33 +42,41 @@ class ClusterState:
                 m: spec.gpus_per_server for m in range(spec.num_servers)
             }
         self.free: Dict[int, int] = dict(self._cap)
+        self.free_buckets: List[List[int]] = [
+            [] for _ in range(spec.gpus_per_server + 1)
+        ]
+        for m in range(spec.num_servers):  # ascending ids per bucket
+            self.free_buckets[self.free[m]].append(m)
         self._job_alloc: Dict[int, Dict[int, int]] = {}
-        self._total_free: int = spec.total_gpus
+        self.total_free: int = spec.total_gpus
         self._down: set = set()
         self.epoch: int = 0
 
-    @property
-    def total_free(self) -> int:
-        return self._total_free
+    def _move_bucket(self, m: int, old: int, new: int) -> None:
+        if old > 0:
+            self.free_buckets[old].remove(m)
+        if new > 0:
+            bisect.insort(self.free_buckets[new], m)
 
     def can_fit(self, g_needed: int) -> bool:
-        return self._total_free >= g_needed
+        return self.total_free >= g_needed
 
     def allocate(
         self,
         job_id: int,
         placement: Mapping[int, np.ndarray],
-        counts: Optional[Mapping[int, int]] = None,
+        counts: Optional[Dict[int, int]] = None,
     ) -> None:
         """Reserve GPUs for ``placement``.
 
         ``counts`` optionally supplies the per-server GPU totals (callers
-        that selected capacities already know them); otherwise they are
-        summed from the placement vectors.
+        that selected capacities already know them; ownership transfers to
+        the cluster state — don't mutate it afterwards); otherwise they
+        are summed from the placement vectors.
         """
         free = self.free
         if counts is not None:
-            per_server = dict(counts)
+            per_server = counts
         else:
             per_server = {
                 m: int(x.sum()) if isinstance(x, np.ndarray)
@@ -72,9 +91,11 @@ class ClusterState:
                 )
         total = 0
         for m, n in per_server.items():
-            free[m] -= n
+            old = free[m]
+            free[m] = old - n
+            self._move_bucket(m, old, old - n)
             total += n
-        self._total_free -= total
+        self.total_free -= total
         self._job_alloc[job_id] = per_server
         self.epoch += 1
 
@@ -85,11 +106,13 @@ class ClusterState:
         for m, n in self._job_alloc.pop(job_id).items():
             if m in down:
                 continue  # capacity on a failed server never returns
-            self.free[m] += n
+            old = self.free[m]
+            self.free[m] = old + n
+            self._move_bucket(m, old, old + n)
             total += n
             if self.free[m] > cap[m]:
                 raise AssertionError(f"server {m} over-freed")
-        self._total_free += total
+        self.total_free += total
         self.epoch += 1
 
     def mark_server_down(self, server_id: int) -> None:
@@ -106,8 +129,10 @@ class ClusterState:
         if server_id in self._down:
             return
         self._down.add(server_id)
-        self._total_free -= self.free[server_id]
+        old = self.free[server_id]
+        self.total_free -= old
         self.free[server_id] = 0
+        self._move_bucket(server_id, old, 0)
         self.epoch += 1
 
     @property

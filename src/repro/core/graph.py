@@ -14,6 +14,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+import numpy as np
+
 from .job import JobSpec, RAR, TAR
 
 Vertex = Tuple[int, int]  # (stage_index, replica_index)
@@ -22,6 +24,77 @@ EdgeWeights = Dict[Tuple[Vertex, Vertex], float]
 
 def _edge_key(u: Vertex, v: Vertex) -> Tuple[Vertex, Vertex]:
     return (u, v) if u <= v else (v, u)
+
+
+class DenseGraph:
+    """Array form of a ``JobGraph``, built once and shared by every placement
+    computed for the job config (see ``heavy_edge.PlacementCache._graphs``).
+
+    ``W`` is the vertex-indexed symmetric weight matrix over ``verts`` (the
+    vertices in sorted order — the order every tiebreak in the greedy uses).
+    ``edge_a/edge_b`` list the edge endpoint indices sorted by
+    ``(-w, a, rank[a, b])`` with ``rank[i, j]`` the position at which
+    vertex ``j`` was inserted into ``i``'s adjacency dict — the precise
+    order in which the reference seed scan prefers equally-heavy edges —
+    so "heaviest edge among unassigned" is one masked ``argmax``.
+    ``stage_internal`` accumulates intra-stage edge weights in the same
+    edge-iteration order as the former per-call loop (bit-identical sums).
+    """
+
+    __slots__ = (
+        "verts", "index", "W", "incident", "edge_a", "edge_b",
+        "stage_of", "stage_bounds", "n_stages", "stage_internal", "arange",
+        "swap_invalid", "nbr_pairs",
+    )
+
+    def __init__(self, graph: "JobGraph"):
+        verts = sorted(graph.vertices)
+        n = len(verts)
+        index = {v: i for i, v in enumerate(verts)}
+        W = np.zeros((n, n))
+        rank = np.full((n, n), n * n, dtype=np.int64)
+        counters = [0] * n
+        edges = []
+        for (u, v), w in graph.edges.items():
+            i, j = index[u], index[v]
+            W[i, j] += w
+            W[j, i] += w
+            if rank[i, j] == n * n:
+                rank[i, j] = counters[i]
+                counters[i] += 1
+            if rank[j, i] == n * n:
+                rank[j, i] = counters[j]
+                counters[j] += 1
+            a, b = (i, j) if i < j else (j, i)
+            edges.append((w, a, b))
+        edges.sort(key=lambda e: (-e[0], e[1], rank[e[1], e[2]]))
+        # rank stays local: only the edge sort above needs it
+        self.verts = verts
+        self.index = index
+        self.W = W
+        self.incident = W.sum(axis=1)
+        self.edge_a = np.array([a for _w, a, _b in edges], dtype=np.int64)
+        self.edge_b = np.array([b for _w, _a, b in edges], dtype=np.int64)
+        # verts are sorted (stage, replica): stages occupy contiguous slices
+        self.stage_of = np.array([s for s, _r in verts], dtype=np.int64)
+        n_stages = int(self.stage_of[-1]) + 1 if n else 0
+        self.n_stages = n_stages
+        bounds = np.searchsorted(self.stage_of, np.arange(n_stages + 1))
+        self.stage_bounds = bounds
+        internal = [0.0] * n_stages
+        for (u, v), w in graph.edges.items():
+            if u[0] == v[0]:
+                internal[u[0]] += w
+        self.stage_internal = internal
+        self.arange = np.arange(n)
+        # ordered-pair / same-index mask shared by the refine swap search
+        self.swap_invalid = self.arange[:, None] >= self.arange[None, :]
+        # per-vertex neighbor lists in adjacency *insertion* order, for
+        # exact replication of reference float-accumulation sequences
+        self.nbr_pairs = [
+            [(index[nb], w) for nb, w in graph._adj[v].items()]
+            for v in verts
+        ]
 
 
 class JobGraph:
@@ -34,6 +107,14 @@ class JobGraph:
         for (u, v), w in self.edges.items():
             self._adj[u][v] = self._adj[u].get(v, 0.0) + w
             self._adj[v][u] = self._adj[v].get(u, 0.0) + w
+        self._dense: DenseGraph | None = None
+
+    def dense(self) -> DenseGraph:
+        """Cached array form (weight matrix, tiebreak ranks, stage slices)."""
+        d = self._dense
+        if d is None:
+            d = self._dense = DenseGraph(self)
+        return d
 
     def neighbors(self, v: Vertex) -> Dict[Vertex, float]:
         return self._adj[v]

@@ -19,22 +19,24 @@ Ties are broken by vertex order for determinism.
 """
 from __future__ import annotations
 
+import bisect
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph import JobGraph, Vertex, build_job_graph
+from .graph import DenseGraph, JobGraph, Vertex, build_job_graph
 from .job import ClusterSpec, JobSpec, ServerGeom
 from . import timing
 
 
-def heavy_edge(
+def heavy_edge_reference(
     graph: JobGraph, server_caps: Sequence[Tuple[int, int]]
 ) -> Dict[Vertex, int]:
-    """Map each vertex to a server id.
+    """Pure-Python greedy (the paper's procedure, dict walks).
 
-    ``server_caps``: (server_id, available_gpus) pairs; capacities must sum
-    to the number of vertices.
+    Retained as the property-test reference for the array-native
+    ``heavy_edge`` (tests/test_vectorized.py) and used by the reference
+    engine (``map_job(..., reference=True)``).
     """
     total_cap = sum(c for _, c in server_caps)
     if total_cap != len(graph.vertices):
@@ -107,6 +109,131 @@ def heavy_edge(
     return assignment
 
 
+def _min_weight_vertex(
+    graph: JobGraph, d: DenseGraph, mask: np.ndarray
+) -> int:
+    """Capacity-1 branch of the greedy, verbatim from the reference.
+
+    The reference sums each candidate's edge weights in adjacency
+    *insertion* order (Python float addition); replicating that exact
+    accumulation vectorized would cost more than the branch is worth —
+    single-GPU slots pick one vertex — so the array engine shares this
+    code with the reference instead of mirroring it.
+    """
+    verts = d.verts
+    unassigned = {verts[i] for i in np.flatnonzero(mask)}
+    v = min(
+        sorted(unassigned),
+        key=lambda u: (
+            sum(
+                w
+                for nb, w in graph.neighbors(u).items()
+                if nb in unassigned
+            ),
+            u,
+        ),
+    )
+    return d.index[v]
+
+
+def _heavy_edge_positions(
+    graph: JobGraph,
+    d: DenseGraph,
+    caps: Sequence[int],
+    order: Sequence[int],
+) -> np.ndarray:
+    """Array-native greedy: vertex index -> position in ``caps``.
+
+    Same procedure and tiebreaks as ``heavy_edge_reference``, expressed on
+    the dense weight matrix:
+
+    * the "heaviest remaining edge" seed is the first edge of the
+      config's precomputed ``(-w, a, rank)``-sorted edge list whose
+      endpoints are both unassigned (one masked ``argmax`` instead of the
+      nested neighbor scan);
+    * growth keeps ``maxw[v] = max edge weight from node_set to v``
+      incrementally (``np.maximum`` with the newly added row) and picks
+      the next vertex by masked ``argmax`` — argmax's first-max rule is
+      exactly the reference's ``nb < best_v`` tiebreak, and an all-zero
+      candidate row degrades to the reference's "smallest unassigned
+      vertex" fallback for disconnected remainders.
+    """
+    n = len(d.verts)
+    out = np.empty(n, dtype=np.int64)
+    mask = np.ones(n, dtype=bool)
+    n_un = n
+    W = d.W
+    ea, eb = d.edge_a, d.edge_b
+    have_edges = len(ea) > 0
+    for p in order:
+        cap = caps[p]
+        if cap <= 0:
+            continue
+        if cap >= n_un:
+            out[mask] = p
+            n_un = 0
+            break
+        if cap == 1:
+            i0 = _min_weight_vertex(graph, d, mask)
+            out[i0] = p
+            mask[i0] = False
+            n_un -= 1
+            continue
+        seeded2 = False
+        if have_edges:
+            ok = mask[ea] & mask[eb]
+            e = int(ok.argmax())
+            seeded2 = bool(ok[e])
+        if seeded2:
+            i0, j0 = int(ea[e]), int(eb[e])
+            out[i0] = out[j0] = p
+            mask[i0] = mask[j0] = False
+            n_un -= 2
+            count = 2
+            maxw = np.maximum(W[i0], W[j0])
+        else:
+            i0 = int(mask.argmax())  # first unassigned == smallest vertex
+            out[i0] = p
+            mask[i0] = False
+            n_un -= 1
+            count = 1
+            maxw = W[i0].copy()
+        while count < cap and n_un:
+            v = int(np.where(mask, maxw, -np.inf).argmax())
+            out[v] = p
+            mask[v] = False
+            n_un -= 1
+            count += 1
+            if count < cap and n_un:
+                np.maximum(maxw, W[v], out=maxw)
+    if n_un:
+        raise AssertionError("heavy_edge left vertices unassigned")
+    return out
+
+
+def heavy_edge(
+    graph: JobGraph, server_caps: Sequence[Tuple[int, int]]
+) -> Dict[Vertex, int]:
+    """Map each vertex to a server id (array-native greedy).
+
+    ``server_caps``: (server_id, available_gpus) pairs; capacities must sum
+    to the number of vertices.  Bit-identical to ``heavy_edge_reference``
+    (property-tested in tests/test_vectorized.py).
+    """
+    total_cap = sum(c for _, c in server_caps)
+    if total_cap != len(graph.vertices):
+        raise ValueError(
+            f"server capacities sum to {total_cap}, "
+            f"job needs {len(graph.vertices)} GPUs"
+        )
+    d = graph.dense()
+    ids = [m for m, _c in server_caps]
+    caps = [c for _m, c in server_caps]
+    order = sorted(range(len(ids)), key=lambda p: (-caps[p], ids[p]))
+    pos = _heavy_edge_positions(graph, d, caps, order)
+    return {v: ids[pos[i]] for i, v in enumerate(d.verts)}
+
+
 def refine_assignment(
     graph: JobGraph,
     assignment: Dict[Vertex, int],
@@ -143,21 +270,17 @@ def refine_assignment(
     homogeneous delta, so the unweighted formula is kept verbatim on that
     path (identical swap sequences — no behavior change).
     """
-    verts = sorted(graph.vertices)
+    d = graph.dense()
+    verts = d.verts
     n = len(verts)
     if n < 2:
         return dict(assignment)
-    index = {v: i for i, v in enumerate(verts)}
-    W = np.zeros((n, n))
-    for (u, v), w in graph.edges.items():
-        i, j = index[u], index[v]
-        W[i, j] += w
-        W[j, i] += w
+    W = d.W  # cached per config; values identical to the per-call rebuild
 
     servers = sorted({assignment[v] for v in verts})
     server_index = {m: k for k, m in enumerate(servers)}
     s = np.array([server_index[assignment[v]] for v in verts])
-    arange = np.arange(n)
+    arange = d.arange
 
     r_server = None
     if geoms is not None:
@@ -166,7 +289,7 @@ def refine_assignment(
             # scale-free normalization keeps the improvement threshold in
             # the same (byte-weight) units as the unweighted objective
             r_server = inv * (len(inv) / inv.sum())
-    tot = W.sum(axis=1) if r_server is not None else None
+    tot = d.incident if r_server is not None else None
 
     for _ in range(max_passes):
         ind = np.zeros((len(servers), n))
@@ -186,7 +309,7 @@ def refine_assignment(
             )
             delta = rv[:, None] * base + rv[None, :] * base.T
         # only ordered pairs on different servers are candidate swaps
-        invalid = (s[:, None] == s[None, :]) | (arange[:, None] >= arange[None, :])
+        invalid = (s[:, None] == s[None, :]) | d.swap_invalid
         delta[invalid] = np.inf
         flat = int(np.argmin(delta))
         i, j = divmod(flat, n)
@@ -195,6 +318,121 @@ def refine_assignment(
         s[i], s[j] = s[j], s[i]
 
     return {v: servers[s[i]] for i, v in enumerate(verts)}
+
+
+def _refine_positions_batched(
+    d: DenseGraph,
+    seeds: np.ndarray,
+    K: int,
+    r_server: Optional[np.ndarray],
+    max_passes: int = 3,
+) -> np.ndarray:
+    """``refine_assignment`` for a whole stack of seeds at once.
+
+    ``seeds``: (B, n) position arrays over the same ``K`` capacity slots.
+    Each row follows exactly the trajectory ``refine_assignment`` would
+    (same matmul shapes per slice, same association order, same argmin
+    flat-index tiebreak), so the results are bit-identical per seed while
+    the numpy call count is paid once for the batch instead of per seed.
+    Rows freeze as soon as their best swap stops improving; ``r_server``
+    is indexed by position (see ``_position_r_server``).
+    """
+    B, n = seeds.shape
+    W = d.W
+    arange = d.arange
+    S_ = seeds  # owned by this call: rows are refined in place
+    tot = d.incident if r_server is not None else None
+    if B == 1:
+        # single distinct seed: the 2-D ops of the reference loop verbatim
+        # (no batch gathers)
+        s = S_[0]
+        for _ in range(max_passes):
+            ind = np.zeros((K, n))
+            ind[s, arange] = 1.0
+            D = ind @ W
+            Ds = D[s]
+            d_own = Ds[arange, arange]
+            if r_server is None:
+                delta = (
+                    (d_own[:, None] - Ds.T) + (d_own[None, :] - Ds) + 2.0 * W
+                )
+            else:
+                rv = r_server[s]
+                base = (
+                    2.0 * d_own[:, None] - 2.0 * Ds + 2.0 * W
+                    + tot[None, :] - tot[:, None]
+                )
+                delta = rv[:, None] * base + rv[None, :] * base.T
+            invalid = (s[:, None] == s[None, :]) | d.swap_invalid
+            delta[invalid] = np.inf
+            f = int(delta.argmin())
+            i, j = f // n, f % n
+            if delta[i, j] >= -1e-12:
+                break
+            s[i], s[j] = s[j], s[i]
+        return S_
+    act = list(range(B))  # rows still swapping; frozen rows drop out
+    for _ in range(max_passes):
+        b_n = len(act)
+        Sa = S_[act]
+        bcol = np.arange(b_n)[:, None]
+        IND = np.zeros((b_n, K, n))
+        IND[bcol, Sa, arange] = 1.0
+        D = IND @ W  # per-slice dgemm == the reference's 2-D matmul
+        Ds = D[bcol, Sa]  # Ds[b, j, u] = D[b, s_j, u]
+        d_own = Ds[:, arange, arange]
+        if r_server is None:
+            delta = (
+                (d_own[:, :, None] - Ds.transpose(0, 2, 1))
+                + (d_own[:, None, :] - Ds)
+                + 2.0 * W
+            )
+        else:
+            rv = r_server[Sa]
+            base = (
+                2.0 * d_own[:, :, None] - 2.0 * Ds + 2.0 * W
+                + tot[None, None, :] - tot[None, :, None]
+            )
+            delta = (
+                rv[:, :, None] * base
+                + rv[:, None, :] * base.transpose(0, 2, 1)
+            )
+        invalid = (Sa[:, :, None] == Sa[:, None, :]) | d.swap_invalid
+        delta[invalid] = np.inf
+        flat = delta.reshape(b_n, -1).argmin(axis=1)
+        # scalar reads beat fancy gathers at this batch width (<= 3 rows)
+        still = []
+        for k in range(b_n):
+            f = int(flat[k])
+            i, j = f // n, f % n
+            if delta[k, i, j] < -1e-12:
+                b = act[k]
+                S_[b, i], S_[b, j] = S_[b, j], S_[b, i]
+                still.append(b)
+        act = still
+        if not act:
+            break
+    return S_
+
+
+def _position_r_server(
+    ids: Sequence[int], geoms: Optional[Mapping[int, ServerGeom]]
+) -> Optional[np.ndarray]:
+    """``refine_assignment``'s bandwidth weights, permuted to positions.
+
+    The reference normalizes over servers in sorted-id order; summing in
+    any other order could shift the last ulp, so the sum is taken in that
+    exact order before re-indexing by the caller's position layout.
+    """
+    if geoms is None:
+        return None
+    servers = sorted(ids)
+    inv = np.array([1.0 / geoms[m][1] for m in servers])
+    if np.all(inv == inv[0]):
+        return None
+    r = inv * (len(inv) / inv.sum())
+    lookup = {m: r[k] for k, m in enumerate(servers)}
+    return np.array([lookup[m] for m in ids])
 
 
 def contiguous_assignment(
@@ -271,6 +509,93 @@ def stage_aligned_assignment(
     return assign
 
 
+def _contiguous_positions(
+    d: DenseGraph, caps: Sequence[int], order: Sequence[int]
+) -> np.ndarray:
+    """``contiguous_assignment`` as a position array: verts are sorted and
+    the fill order is exactly ``order``, so it is one ``np.repeat``."""
+    return np.repeat(
+        np.array(order, dtype=np.int64),
+        np.array([caps[p] for p in order]),
+    )
+
+
+def _stage_aligned_positions(
+    graph: JobGraph,
+    d: DenseGraph,
+    server_caps: Sequence[Tuple[int, int]],
+) -> np.ndarray:
+    """``stage_aligned_assignment`` as a position array.
+
+    Bin packing and spillover run as plain Python over the dense form's
+    cached structures (intra-stage weights, contiguous stage slices,
+    insertion-ordered neighbor lists) — the problem sizes (vertices,
+    servers, stages) are tiny, so scalar loops beat per-op numpy
+    dispatch while replicating the reference's float-accumulation
+    sequences and first-max-in-caps-order tiebreak exactly (positions
+    enumerate ``server_caps``, the reference's ``free.items()`` order).
+    """
+    ids = [m for m, _c in server_caps]
+    internal = d.stage_internal
+    order = sorted(range(d.n_stages), key=lambda st: (-internal[st], st))
+    free = [c for _m, c in server_caps]
+    K = len(free)
+    bounds = d.stage_bounds
+    n = len(d.verts)
+    pos = [0] * n
+    placed = [True] * n
+    spill: List[int] = []
+    for st in order:
+        b0, b1 = int(bounds[st]), int(bounds[st + 1])
+        need = b1 - b0
+        best = None
+        best_p = -1
+        for p in range(K):
+            c = free[p]
+            if c >= need and (best is None or (c, ids[p]) < best):
+                best = (c, ids[p])
+                best_p = p
+        if best is None:
+            for i in range(b0, b1):
+                placed[i] = False
+            spill.append(st)
+            continue
+        for i in range(b0, b1):
+            pos[i] = best_p
+        free[best_p] -= need
+    if spill:
+        nbr_pairs = d.nbr_pairs
+        wsum = [0.0] * K
+        for st in spill:
+            for i in range(int(bounds[st]), int(bounds[st + 1])):
+                for p in range(K):
+                    wsum[p] = 0.0
+                for nb, w in nbr_pairs[i]:
+                    if placed[nb]:
+                        wsum[pos[nb]] += w
+                best_w = -1.0
+                best_p = -1
+                for p in range(K):
+                    if free[p] > 0 and wsum[p] > best_w:
+                        best_w = wsum[p]
+                        best_p = p
+                pos[i] = best_p
+                placed[i] = True
+                free[best_p] -= 1
+    return np.array(pos, dtype=np.int64)
+
+
+def _placement_matrices(
+    d: DenseGraph, positions: np.ndarray, K: int, S: int
+) -> np.ndarray:
+    """(B, n) position arrays -> (B, K, S) GPU matrices via one bincount."""
+    B = positions.shape[0]
+    KS = K * S
+    offs = (np.arange(B) * KS)[:, None]
+    flat = (positions * S + d.stage_of) + offs
+    return np.bincount(flat.ravel(), minlength=B * KS).reshape(B, K, S)
+
+
 def map_job(
     job: JobSpec,
     server_caps: Sequence[Tuple[int, int]],
@@ -278,6 +603,9 @@ def map_job(
     refine: bool = False,
     graph: Optional[JobGraph] = None,
     geoms: Optional[Mapping[int, ServerGeom]] = None,
+    reference: bool = False,
+    _het_ctx: Optional[tuple] = None,
+    _seed_cache: Optional[Dict[tuple, list]] = None,
 ) -> Tuple[Dict[int, np.ndarray], float]:
     """Run Heavy-Edge (optionally multi-start + local search).
 
@@ -289,28 +617,162 @@ def map_job(
     ``geoms``: per-server geometry override for the alpha evaluation
     (required when ``server_caps`` uses rank labels on a heterogeneous
     cluster; see ``map_job_canonical``).
+    ``reference``: run the retained pure-Python pipeline (dict-walk greedy
+    + per-(server, stage) beta alpha) instead of the array engine; the two
+    are bit-identical (tests/test_vectorized.py) and the reference backs
+    the uncached A-SRPT engine the property tests simulate against.
+    ``_het_ctx``: PlacementCache-precomputed (rank geoms, geometry
+    columns, r_server) for the caller's class layout, shared across every
+    capacity shape with the same classes (same values as the per-call
+    construction, computed once).
+    ``_seed_cache``: (config, caps) -> [seeds, uniq, uniq_of, refined-by-
+    bandwidth-pattern] (heterogeneous clusters): the greedy and both
+    auxiliary seeds are pure functions of the config and capacity vector
+    — they never read server classes — so distinct class layouts over the
+    same caps share them; the batched-refine output depends on geometry
+    only through the per-slot NIC-bandwidth pattern (the ``r_server``
+    weights), so layouts sharing that pattern share it too.  Entries hold
+    exactly the arrays recomputation would produce and are immutable.
     """
     if graph is None:
         graph = build_job_graph(job)
-    if geoms is None and cluster.is_heterogeneous:
+    if _het_ctx is not None:
+        geoms = _het_ctx[0]
+    elif geoms is None and cluster.is_heterogeneous:
         # caller passed physical ids on a mixed cluster: resolve their
         # geometry here so refine + alpha see the per-class bandwidths
         geoms = {m: cluster.server_geom(m) for m, _c in server_caps}
-    assignment = heavy_edge(graph, server_caps)
-    placement = timing.placement_from_assignment(job, assignment)
-    best_alpha = timing.alpha(job, placement, cluster, geoms=geoms)
-    if refine:
-        seeds = (
-            assignment,
-            contiguous_assignment(graph, server_caps),
-            stage_aligned_assignment(graph, server_caps),
+    if reference:
+        assignment = heavy_edge_reference(graph, server_caps)
+        placement = timing.placement_from_assignment(job, assignment)
+        best_alpha = timing.alpha_reference(job, placement, cluster, geoms=geoms)
+        if refine:
+            seeds = (
+                assignment,
+                contiguous_assignment(graph, server_caps),
+                stage_aligned_assignment(graph, server_caps),
+            )
+            for seed in seeds:
+                cand = refine_assignment(graph, seed, geoms=geoms)
+                cand_placement = timing.placement_from_assignment(job, cand)
+                a = timing.alpha_reference(job, cand_placement, cluster, geoms=geoms)
+                if a < best_alpha - 1e-12:
+                    best_alpha, placement = a, cand_placement
+        return placement, best_alpha
+
+    # -- array-native engine -------------------------------------------------
+    d = graph.dense()
+    n = len(d.verts)
+    total_cap = sum(c for _m, c in server_caps)
+    if total_cap != n:
+        raise ValueError(
+            f"server capacities sum to {total_cap}, job needs {n} GPUs"
         )
-        for seed in seeds:
-            cand = refine_assignment(graph, seed, geoms=geoms)
-            cand_placement = timing.placement_from_assignment(job, cand)
-            a = timing.alpha(job, cand_placement, cluster, geoms=geoms)
+    ids = [m for m, _c in server_caps]
+    caps = [c for _m, c in server_caps]
+    K = len(ids)
+    S = job.num_stages
+    if _het_ctx is not None:
+        g_col, bi_col, bx_col = _het_ctx[1]
+    elif geoms is not None:
+        g_col, bi_col, bx_col = timing._geom_columns(ids, cluster, geoms)
+    else:
+        g_col, bi_col, bx_col = (
+            cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
+        )
+    if K == 1:
+        # single server: every seed and every swap collapses to the same
+        # trivial placement, so only the alpha evaluation remains
+        X = np.bincount(d.stage_of, minlength=S)[None, :]
+        a = timing.alpha_matrix(job, X, g_col, bi_col, bx_col)
+        return {ids[0]: X[0]}, a
+
+    def _order():
+        # canonical callers (PlacementCache ranks) pass caps sorted
+        # descending with ids ascending — (-cap, id) order is the identity
+        if all(caps[p] >= caps[p + 1] for p in range(K - 1)) and (
+            ids == sorted(ids)
+        ):
+            return range(K)
+        return sorted(range(K), key=lambda p: (-caps[p], ids[p]))
+
+    if not refine:
+        pos_greedy = _heavy_edge_positions(graph, d, caps, _order())
+        X0 = _placement_matrices(d, pos_greedy[None, :], K, S)[0]
+        best_alpha = timing.alpha_matrix(job, X0, g_col, bi_col, bx_col)
+        best_X = X0
+    else:
+        ent = None
+        if _seed_cache is not None:
+            sc_key = (job.config_key, tuple(caps))
+            ent = _seed_cache.get(sc_key)
+        if ent is None:
+            order = _order()
+            seeds = [
+                _heavy_edge_positions(graph, d, caps, order),
+                _contiguous_positions(d, caps, order),
+                _stage_aligned_positions(graph, d, server_caps),
+            ]
+            # identical seeds refine identically: batch the distinct rows
+            uniq: List[np.ndarray] = []
+            uniq_of: List[int] = []
+            seen: Dict[bytes, int] = {}
+            for s_arr in seeds:
+                key = s_arr.tobytes()
+                idx = seen.get(key)
+                if idx is None:
+                    idx = seen[key] = len(uniq)
+                    uniq.append(s_arr)
+                uniq_of.append(idx)
+            ent = [seeds, uniq, uniq_of, {}]
+            if _seed_cache is not None:
+                _seed_cache[sc_key] = ent
+        seeds, uniq, uniq_of = ent[0], ent[1], ent[2]
+        pos_greedy = seeds[0]
+        if _het_ctx is not None:
+            r_server = _het_ctx[2]
+            bw_key = _het_ctx[3]
+        else:
+            r_server = _position_r_server(ids, geoms)
+            bw_key = ()  # hom callers: r_server is None
+        refined = ent[3].get(bw_key)
+        if refined is None:
+            seed_mat = np.empty((len(uniq), n), dtype=np.int64)
+            for u_i, row in enumerate(uniq):
+                seed_mat[u_i] = row
+            refined = _refine_positions_batched(d, seed_mat, K, r_server)
+            ent[3][bw_key] = refined
+        # one batched alpha evaluation: the unrefined greedy placement
+        # (the pre-refine incumbent) plus every distinct refined candidate
+        rows = [pos_greedy] + list(refined)
+        cand_uniq: List[np.ndarray] = []
+        cand_of: List[int] = []
+        seen2: Dict[bytes, int] = {}
+        for r_arr in rows:
+            key = r_arr.tobytes()
+            idx = seen2.get(key)
+            if idx is None:
+                idx = seen2[key] = len(cand_uniq)
+                cand_uniq.append(r_arr)
+            cand_of.append(idx)
+        cand_mat = np.empty((len(cand_uniq), n), dtype=np.int64)
+        for u_i, row in enumerate(cand_uniq):
+            cand_mat[u_i] = row
+        Xs = _placement_matrices(d, cand_mat, K, S)
+        alphas = timing.alpha_matrix(job, Xs, g_col, bi_col, bx_col)
+        best_u = cand_of[0]
+        best_alpha = float(alphas[best_u])
+        # replay the reference's sequential best-of comparison in seed order
+        for c_seed in range(len(seeds)):
+            u = cand_of[1 + uniq_of[c_seed]]
+            a = float(alphas[u])
             if a < best_alpha - 1e-12:
-                best_alpha, placement = a, cand_placement
+                best_alpha = a
+                best_u = u
+        best_X = Xs[best_u]
+    placement = {
+        ids[p]: best_X[p] for p in range(K) if caps[p] > 0
+    }
     return placement, best_alpha
 
 
@@ -330,6 +792,7 @@ def map_job_canonical(
     server_caps: Sequence[Tuple[int, int]],
     cluster: ClusterSpec,
     refine: bool = False,
+    reference: bool = False,
 ) -> Tuple[Dict[int, np.ndarray], float]:
     """``map_job`` on rank-relabeled servers, mapped back to the caller's ids.
 
@@ -352,7 +815,10 @@ def map_job_canonical(
     """
     ranked = [(i, c) for i, (_m, c) in enumerate(server_caps)]
     geoms = _rank_geoms(cluster, server_caps)
-    placement, a = map_job(job, ranked, cluster, refine=refine, geoms=geoms)
+    placement, a = map_job(
+        job, ranked, cluster, refine=refine, geoms=geoms,
+        reference=reference,
+    )
     return {server_caps[i][0]: x for i, x in placement.items()}, a
 
 
@@ -378,7 +844,7 @@ class PlacementCache:
 
     __slots__ = (
         "cluster", "refine", "maxsize", "hits", "misses", "_lru", "_graphs",
-        "_het",
+        "_het", "_class_of", "_hetctx", "_seeds", "_classes_memo",
     )
 
     def __init__(
@@ -399,14 +865,56 @@ class PlacementCache:
             OrderedDict()
         )
         self._graphs: Dict[int, JobGraph] = {}  # config_key -> comm graph
+        if self._het:
+            # bisect-free per-server lookups for the hot key construction
+            self._class_of = tuple(
+                cluster.class_of(m) for m in range(cluster.num_servers)
+            )
+        else:
+            self._class_of = ()
+        # class-shape tuple -> (rank geoms, geometry columns, r_server):
+        # rank geometry depends only on each slot's class, so it is shared
+        # across every capacity shape with the same class layout
+        self._hetctx: Dict[tuple, tuple] = {}
+        # (config, caps) -> seed/refine arrays shared across class layouts
+        # (the seeds never read classes); only useful on mixed clusters,
+        # where most misses are new class layouts over seen capacity shapes
+        self._seeds: Optional[Dict[tuple, list]] = {} if self._het else None
+        # ids tuple -> classes tuple (server subsets recur heavily)
+        self._classes_memo: Dict[tuple, tuple] = {}
+
+    def _het_context(self, classes: tuple) -> tuple:
+        ctx = self._hetctx.get(classes)
+        if ctx is None:
+            K = len(classes)
+            geoms = {
+                i: self.cluster.class_geom(c) for i, c in enumerate(classes)
+            }
+            cols = timing._geom_columns(range(K), self.cluster, geoms)
+            r_server = _position_r_server(list(range(K)), geoms)
+            # refine sees geometry only through the per-slot NIC pattern
+            # (None == uniform): layouts sharing it share refined seeds
+            bw_key = (
+                () if r_server is None
+                else tuple(geoms[i][1] for i in range(K))
+            )
+            ctx = self._hetctx[classes] = (geoms, cols, r_server, bw_key)
+        return ctx
 
     def map_job(
         self, job: JobSpec, server_caps: Sequence[Tuple[int, int]]
     ) -> Tuple[Dict[int, np.ndarray], float]:
         ids, shape = zip(*server_caps)
         if self._het:
-            class_of = self.cluster.class_of
-            key = (job.config_key, shape, tuple(class_of(m) for m in ids))
+            classes = self._classes_memo.get(ids)
+            if classes is None:
+                if len(self._classes_memo) >= self.maxsize:
+                    self._classes_memo.clear()  # bound the memo like _lru
+                class_of = self._class_of
+                classes = self._classes_memo[ids] = tuple(
+                    class_of[m] for m in ids
+                )
+            key = (job.config_key, shape, classes)
         else:
             key = (job.config_key, shape)
         lru = self._lru
@@ -421,13 +929,16 @@ class PlacementCache:
             graph = self._graphs.get(cfg_key)
             if graph is None:
                 graph = self._graphs[cfg_key] = build_job_graph(job)
+            if self._seeds is not None and len(self._seeds) >= self.maxsize:
+                self._seeds.clear()  # bound the seed store like _lru
             placement, a = map_job(
                 job,
                 list(enumerate(shape)),
                 self.cluster,
                 refine=self.refine,
                 graph=graph,
-                geoms=_rank_geoms(self.cluster, server_caps),
+                _het_ctx=self._het_context(key[2]) if self._het else None,
+                _seed_cache=self._seeds,
             )
             # every cap in the vector is fully used, so ranks 0..k-1 are
             # all present; store the stage vectors in rank order
@@ -496,6 +1007,8 @@ def select_servers(
     g_needed: int,
     consolidate: bool,
     spec: Optional[ClusterSpec] = None,
+    buckets: Optional[Sequence[Sequence[int]]] = None,
+    total_free: Optional[int] = None,
 ) -> List[Tuple[int, int]]:
     """Pick servers/GPU counts for a job (paper Alg. 1 lines 9 and 22).
 
@@ -507,24 +1020,38 @@ def select_servers(
     equally-free servers, fragmentation-aware placement prefers the
     slowest — keeping fast-NIC capacity free for the jobs that need it.
     Homogeneous specs are unaffected (one class, id tiebreak as before).
+    ``buckets``/``total_free`` (hot path): ``ClusterState.free_buckets``
+    maintained incrementally — skips the per-call counting sort; the
+    bucket walk is identical because the maintained buckets hold exactly
+    the servers the sort would produce, in the same ascending-id order.
     Returns (server_id, gpus_taken) or raises if capacity is insufficient.
     """
-    # Counting sort by capacity: free-GPU counts are bounded by the server
-    # size, and dict iteration yields servers in ascending id, so walking
-    # the buckets reproduces the (-cap, id) / (cap, id) orderings exactly.
-    buckets: Dict[int, List[int]] = {}
-    total = 0
-    max_c = 0
-    for m, c in free.items():
-        if c > 0:
-            b = buckets.get(c)
-            if b is None:
-                buckets[c] = [m]
-            else:
-                b.append(m)
-            total += c
-            if c > max_c:
-                max_c = c
+    if buckets is None:
+        # Counting sort by capacity: free-GPU counts are bounded by the
+        # server size, and dict iteration yields servers in ascending id,
+        # so walking the buckets reproduces the (-cap, id) / (cap, id)
+        # orderings exactly.
+        counted: Dict[int, List[int]] = {}
+        total = 0
+        max_c = 0
+        for m, c in free.items():
+            if c > 0:
+                b = counted.get(c)
+                if b is None:
+                    counted[c] = [m]
+                else:
+                    b.append(m)
+                total += c
+                if c > max_c:
+                    max_c = c
+        counted_get = counted.get
+    else:
+        total = total_free if total_free is not None else sum(
+            c * len(b) for c, b in enumerate(buckets)
+        )
+        max_c = len(buckets) - 1
+        counted_get = None
+
     if total < g_needed:
         raise ValueError("not enough free GPUs")
     het = spec is not None and spec.is_heterogeneous
@@ -535,7 +1062,9 @@ def select_servers(
         desc_rank, asc_rank = spec.bw_order_ranks
         rank = desc_rank if consolidate else asc_rank
     for c in order:
-        bucket = buckets.get(c, ())
+        bucket = buckets[c] if counted_get is None else counted_get(c, ())
+        if not bucket:
+            continue
         if het and len(bucket) > 1:
             bucket = sorted(bucket, key=rank.__getitem__)
         for m in bucket:
@@ -545,3 +1074,64 @@ def select_servers(
             if remaining == 0:
                 return picks
     return picks
+
+
+class FreeCapsSnapshot:
+    """One scheduling pass's sorted free-capacity structure.
+
+    The pick *order* ``select_servers`` walks does not depend on
+    ``g_needed`` — only the prefix taken does — so a pass that evaluates
+    many delayed jobs against an unchanged cluster can run the counting
+    sort once (over the full free capacity) and carve each job's capacity
+    vector from the prefix sums.  ``caps_for`` memoizes per distinct
+    demand ``g``: equal-``g`` jobs provably select the same vector, and
+    the shared tuple makes the step-2 caps-equality skip an identity
+    comparison in the common case.  Invalidate (drop) the snapshot after
+    any allocation — the free state it sorted no longer exists.
+    """
+
+    __slots__ = ("ids", "caps", "cum", "_by_g")
+
+    def __init__(self, picks: Sequence[Tuple[int, int]]):
+        self.ids = [m for m, _c in picks]
+        self.caps = [c for _m, c in picks]
+        cum: List[int] = []
+        acc = 0
+        for c in self.caps:
+            acc += c
+            cum.append(acc)
+        self.cum = cum
+        self._by_g: Dict[int, tuple] = {}
+
+    @classmethod
+    def consolidating(
+        cls,
+        free: Mapping[int, int],
+        total_free: int,
+        spec: Optional[ClusterSpec] = None,
+        buckets: Optional[Sequence[Sequence[int]]] = None,
+    ) -> "FreeCapsSnapshot":
+        return cls(
+            select_servers(
+                free, total_free, consolidate=True, spec=spec,
+                buckets=buckets, total_free=total_free,
+            )
+        )
+
+    def caps_for(self, g: int) -> tuple:
+        """The tuple ``select_servers(free, g, consolidate=True)`` returns.
+
+        Bit-identical by construction: full servers in pick order until
+        the remaining demand is smaller than the next capacity, which is
+        taken as the remainder (property-tested in tests/test_vectorized.py).
+        """
+        hit = self._by_g.get(g)
+        if hit is None:
+            i = bisect.bisect_left(self.cum, g)
+            prev = self.cum[i - 1] if i else 0
+            ids, caps = self.ids, self.caps
+            hit = tuple((ids[k], caps[k]) for k in range(i)) + (
+                (ids[i], g - prev),
+            )
+            self._by_g[g] = hit
+        return hit

@@ -232,10 +232,14 @@ class PerfectPredictor(IterationPredictor):
 
 
 class _GroupStats:
-    __slots__ = ("values",)
+    __slots__ = ("values", "stat_n", "stat_val")
 
     def __init__(self) -> None:
         self.values: List[float] = []
+        # statistic memo: recurring-group arrivals between observations
+        # would otherwise recompute the same mean/median per prediction
+        self.stat_n = -1
+        self.stat_val = 0.0
 
 
 class GroupStatPredictor(IterationPredictor):
@@ -255,9 +259,14 @@ class GroupStatPredictor(IterationPredictor):
         st = self._groups.get(job.group_id)
         if job.group_id < 0 or st is None or not st.values:
             return 0.0  # unseen job -> treat as instantly complete
-        if self.statistic == "mean":
-            return float(np.mean(st.values))
-        return float(np.median(st.values))
+        n = len(st.values)
+        if st.stat_n != n:
+            if self.statistic == "mean":
+                st.stat_val = float(np.mean(st.values))
+            else:
+                st.stat_val = float(np.median(st.values))
+            st.stat_n = n
+        return st.stat_val
 
 
 class RandomForestPredictor(IterationPredictor):

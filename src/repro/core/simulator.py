@@ -41,14 +41,14 @@ from . import timing
 _COMPLETION, _FAULT, _ARRIVAL, _WAKE = 0, 1, 2, 3
 
 
-@dataclass
+@dataclass(slots=True)
 class Start:
     job: JobSpec
     placement: Dict[int, np.ndarray]
     alpha: float
 
 
-@dataclass
+@dataclass(slots=True)
 class JobRecord:
     arrival: float
     start: float
@@ -76,6 +76,9 @@ class SimResult:
 
     @property
     def makespan(self) -> float:
+        # guard the empty case like mean_jct (max() raises on no records)
+        if not self.records:
+            return 0.0
         return max(r.completion for r in self.records.values())
 
     @property

@@ -136,19 +136,17 @@ def beta(
     )
 
 
-def alpha(
+def alpha_reference(
     job: JobSpec,
     placement: Mapping[int, np.ndarray],
     cluster: ClusterSpec,
     geoms: Optional[Geoms] = None,
 ) -> float:
-    """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m.
+    """Pure-Python Eq. (7): max over (server, stage) of ``beta`` calls.
 
-    ``geoms`` overrides the per-server geometry lookup (used by the
-    canonical rank-relabeled mapping, whose placement keys are ranks, not
-    physical server ids).  Without it, heterogeneous specs resolve each
-    placement key through ``cluster.server_geom``; homogeneous specs take
-    the unchanged fast path.
+    Retained as the property-test reference for the array-native ``alpha``
+    (tests/test_vectorized.py) and used by the reference engine
+    (``heavy_edge.map_job(..., reference=True)``).
     """
     het = geoms is not None or cluster.is_heterogeneous
     best = 0.0
@@ -164,6 +162,214 @@ def alpha(
                 if b > best:
                     best = b
     return best
+
+
+class _ConfigArrays:
+    """Per-stage profile vectors of one job config (keyed by config_key).
+
+    Every quantity Eqs. (4)-(7) read per stage, precomputed with the exact
+    arithmetic of the scalar reference (``two_d_in = 2.0 * d_in`` etc.) so
+    the vectorized evaluation reproduces its floats bit for bit.
+    """
+
+    __slots__ = (
+        "S", "comp", "two_d_in_tail", "two_d_out_head", "k_head", "k_tail",
+        "k_i", "ar_data", "has_ar", "has_ar_any",
+        "comp_l", "tdi_l", "tdo_l", "k_lf", "k_li", "ar_l", "har_l",
+    )
+
+    def __init__(self, job: JobSpec):
+        stages = job.stages
+        self.S = len(stages)
+        self.comp = np.array([st.p_f + st.p_b for st in stages])
+        two_d_in = np.array([2.0 * st.d_in for st in stages])
+        two_d_out = np.array([2.0 * st.d_out for st in stages])
+        self.k_i = np.array([st.k for st in stages], dtype=np.int64)
+        k_f = self.k_i.astype(np.float64)
+        # pre-sliced neighbor views (stage s reads k_{s-1} / k_{s+1})
+        self.two_d_in_tail = two_d_in[1:]
+        self.two_d_out_head = two_d_out[:-1]
+        self.k_head = k_f[:-1]
+        self.k_tail = k_f[1:]
+        h = np.array([st.h for st in stages])
+        self.ar_data = 2.0 * (self.k_i - 1) / self.k_i * h
+        self.has_ar = (self.k_i >= 2) & (h > 0.0)
+        self.has_ar_any = bool(self.has_ar.any())
+        # Python-scalar mirrors for the small-placement path (identical
+        # IEEE doubles: .tolist() is exact)
+        self.comp_l = self.comp.tolist()
+        self.tdi_l = two_d_in.tolist()
+        self.tdo_l = two_d_out.tolist()
+        self.k_lf = k_f.tolist()
+        self.k_li = self.k_i.tolist()
+        self.ar_l = self.ar_data.tolist()
+        self.har_l = self.has_ar.tolist()
+
+
+_CONFIG_ARRAYS: Dict[int, _ConfigArrays] = {}
+
+
+def config_arrays(job: JobSpec) -> _ConfigArrays:
+    key = job.config_key
+    ca = _CONFIG_ARRAYS.get(key)
+    if ca is None:
+        ca = _CONFIG_ARRAYS[key] = _ConfigArrays(job)
+    return ca
+
+
+_SCALAR_CELLS = 64  # below this, Python scalars beat numpy dispatch
+
+
+def _alpha_rows_scalar(ca, rows, g_l, bi_l, bx_l):
+    """Scalar evaluation of ``alpha_matrix`` for a list of K x S int-list
+    placements — the identical IEEE operation chain on Python floats, used
+    when the whole batch is smaller than numpy's per-op dispatch cost."""
+    S = ca.S
+    comp = ca.comp_l
+    tdi, tdo = ca.tdi_l, ca.tdo_l
+    kf, ki = ca.k_lf, ca.k_li
+    ar_d, har = ca.ar_l, ca.har_l
+    out = []
+    for Xr in rows:
+        best = 0.0
+        for m, xm in enumerate(Xr):
+            g_m, bi_m, bx_m = g_l[m], bi_l[m], bx_l[m]
+            for s in range(S):
+                x = xm[s]
+                if x <= 0:
+                    continue
+                nic = (x / g_m) * bi_m
+                if S > 1:
+                    if s > 0:
+                        kp = kf[s - 1]
+                        xp = xm[s - 1]
+                        inter = tdi[s] * ((kp - xp) / kp)
+                        intra = tdi[s] * (xp / kp)
+                    else:
+                        inter = 0.0
+                        intra = 0.0
+                    if s < S - 1:
+                        kn = kf[s + 1]
+                        xn = xm[s + 1]
+                        inter = inter + tdo[s] * ((kn - xn) / kn)
+                        intra = intra + tdo[s] * (xn / kn)
+                    core = comp[s] + (inter * x / nic + intra / bx_m)
+                else:
+                    core = comp[s]
+                if har[s]:
+                    if x == ki[s]:
+                        core = core + ar_d[s] / bx_m
+                    else:
+                        core = core + ar_d[s] * x / nic
+                if core > best:
+                    best = core
+        out.append(best)
+    return out
+
+
+def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra):
+    """Eqs. (4)-(7) for whole placements as one (servers x stages) array
+    expression.
+
+    ``X``: int GPU matrix, shape ``(K, S)`` or batched ``(B, K, S)`` (the
+    refine path evaluates every candidate placement in one call).
+    ``g``/``b_inter``/``b_intra``: scalars on homogeneous clusters, or
+    per-server ``(K, 1)`` arrays carrying each rank's class geometry.
+    Returns a float for 2-D ``X``, else a ``(B,)`` array of alphas.
+
+    Bit-identical to ``alpha_reference``: every elementwise op mirrors the
+    scalar chain (same association order), masked terms reproduce the
+    ``if bytes > 0`` skips, and the final max equals the loop's running max.
+    """
+    ca = config_arrays(job)
+    if X.size == 0:
+        return 0.0 if X.ndim == 2 else np.zeros(X.shape[0])
+    if X.size <= _SCALAR_CELLS:
+        K = X.shape[-2]
+        if isinstance(g, np.ndarray):
+            g_l = g.ravel().tolist()
+            bi_l = b_inter.ravel().tolist()
+            bx_l = b_intra.ravel().tolist()
+        else:
+            g_l = [g] * K
+            bi_l = [b_inter] * K
+            bx_l = [b_intra] * K
+        if X.ndim == 2:
+            return _alpha_rows_scalar(ca, [X.tolist()], g_l, bi_l, bx_l)[0]
+        return np.array(_alpha_rows_scalar(ca, X.tolist(), g_l, bi_l, bx_l))
+    Xf = X.astype(np.float64)
+    pos = X > 0
+    S = ca.S
+    nic = np.where(pos, (Xf / g) * b_inter, 1.0)  # 1.0: masked, avoids 0/0
+    if S > 1:
+        inter = np.zeros(Xf.shape)
+        intra = np.zeros(Xf.shape)
+        xp = Xf[..., :-1]
+        kp = ca.k_head
+        inter[..., 1:] = ca.two_d_in_tail * ((kp - xp) / kp)
+        intra[..., 1:] = ca.two_d_in_tail * (xp / kp)
+        xn = Xf[..., 1:]
+        kn = ca.k_tail
+        inter[..., :-1] += ca.two_d_out_head * ((kn - xn) / kn)
+        intra[..., :-1] += ca.two_d_out_head * (xn / kn)
+        # zero-byte terms contribute exact zeros, matching the reference's
+        # ``if bytes > 0`` skips without the branch
+        comm = inter * Xf / nic + intra / b_intra
+    else:
+        comm = None  # single stage: no pipeline neighbors, Eq. (5) is 0
+    if ca.has_ar_any:
+        ar = np.where(
+            ca.has_ar & pos,
+            np.where(X == ca.k_i, ca.ar_data / b_intra, ca.ar_data * Xf / nic),
+            0.0,
+        )
+        core = (ca.comp + comm) + ar if comm is not None else ca.comp + ar
+    else:
+        core = ca.comp + comm if comm is not None else ca.comp
+    beta_ = np.where(pos, core, 0.0)
+    if X.ndim == 2:
+        return float(beta_.max())
+    return beta_.reshape(X.shape[0], -1).max(axis=1)
+
+
+def _geom_columns(placement_keys, cluster: ClusterSpec, geoms: Optional[Geoms]):
+    """(g, b_inter, b_intra) broadcast columns for a list of server keys."""
+    if geoms is not None:
+        geo = [geoms[m] for m in placement_keys]
+    else:
+        geo = [cluster.server_geom(m) for m in placement_keys]
+    g = np.array([t[0] for t in geo], dtype=np.float64)[:, None]
+    bi = np.array([t[1] for t in geo])[:, None]
+    bx = np.array([t[2] for t in geo])[:, None]
+    return g, bi, bx
+
+
+def alpha(
+    job: JobSpec,
+    placement: Mapping[int, np.ndarray],
+    cluster: ClusterSpec,
+    geoms: Optional[Geoms] = None,
+) -> float:
+    """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m.
+
+    Array-native: evaluates the whole placement through ``alpha_matrix``
+    (bit-identical to ``alpha_reference``, property-tested).  ``geoms``
+    overrides the per-server geometry lookup (used by the canonical
+    rank-relabeled mapping, whose placement keys are ranks, not physical
+    server ids); without it heterogeneous specs resolve each key through
+    ``cluster.server_geom``, homogeneous specs use the cluster scalars.
+    """
+    if not placement:
+        return 0.0
+    ms = list(placement)
+    # int() in the reference truncates toward zero; astype matches for the
+    # non-negative vectors every caller passes
+    X = np.array([np.asarray(placement[m]) for m in ms]).astype(np.int64)
+    if geoms is not None or cluster.is_heterogeneous:
+        g, bi, bx = _geom_columns(ms, cluster, geoms)
+    else:
+        g, bi, bx = cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
+    return alpha_matrix(job, X, g, bi, bx)
 
 
 def validate_placement(

@@ -237,6 +237,11 @@ def generate_trace(cfg: TraceConfig) -> List[JobSpec]:
             job_id += 1
 
     jobs.sort(key=lambda j: (j.arrival, j.job_id))
+    for job in jobs:
+        # materialize the cached derived attributes (g, interned config id)
+        # at generation time, off the schedulers' hot path
+        job.g
+        job.config_key
     return jobs
 
 

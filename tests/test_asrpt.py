@@ -1,6 +1,8 @@
 """A-SRPT + baselines: scheduling invariants and end-to-end behaviour."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.sched
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

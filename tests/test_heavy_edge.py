@@ -1,6 +1,8 @@
 """Heavy-Edge GPU mapping: Fig. 2 reproduction + hypothesis properties."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.sched
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

@@ -14,6 +14,8 @@ import bisect
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.sched
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

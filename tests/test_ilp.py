@@ -1,6 +1,8 @@
 """Exact min-cut placement (B&B) vs Heavy-Edge (Table II relationship)."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.sched
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

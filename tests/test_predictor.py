@@ -1,6 +1,8 @@
 """Random-forest iteration predictor (from scratch) + simpler baselines."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.sched
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

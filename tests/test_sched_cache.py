@@ -8,6 +8,8 @@ not approximately.
 """
 import pytest
 
+pytestmark = pytest.mark.sched
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

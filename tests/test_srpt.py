@@ -2,6 +2,8 @@
 import itertools
 
 import pytest
+
+pytestmark = pytest.mark.sched
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests fall back to seeded sampling

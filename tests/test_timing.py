@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.sched
+
 from repro.core import ClusterSpec, alpha, alpha_max, beta
 from repro.core import timing
 from repro.core.job import JobSpec, StageSpec

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.sched
+
 from repro.core import TraceConfig, generate_trace, trace_stats
 
 

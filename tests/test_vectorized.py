@@ -1,0 +1,311 @@
+"""Array-native placement engine vs the retained pure-Python reference.
+
+The PR-3 hot path rebuilds Heavy-Edge -> alpha on dense arrays (cached
+``JobGraph.dense()`` weight matrix, masked-argmax greedy, batched
+three-seed refine, whole-placement ``timing.alpha_matrix``) and batches
+A-SRPT's delayed-queue re-evaluation through ``FreeCapsSnapshot`` prefix
+carving.  Every one of those paths may only skip or restructure work whose
+outcome is provably unchanged, so placements, alphas, selections, and full
+schedules must equal the reference *bit for bit* — not approximately —
+on homogeneous and mixed-class specs, greedy and refined.
+"""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.sched
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ClusterSpec,
+    ServerClass,
+    TraceConfig,
+    generate_trace,
+    mixed_cluster_spec,
+)
+from repro.core import timing
+from repro.core.graph import build_job_graph
+from repro.core.heavy_edge import (
+    FreeCapsSnapshot,
+    PlacementCache,
+    heavy_edge,
+    heavy_edge_reference,
+    map_job,
+    map_job_canonical,
+    select_servers,
+)
+
+from conftest import make_simple_job
+
+
+def _hom_spec(num_servers=8, gps=8):
+    return ClusterSpec(
+        num_servers=num_servers, gpus_per_server=gps,
+        b_inter=1.25e9, b_intra=300e9,
+    )
+
+
+def _trace_jobs(seed, n_jobs=25, max_g=24):
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=60.0 * n_jobs,
+            seed=seed,
+            max_gpus_per_job=max_g,
+            mean_iters=50,
+            session_spread=30.0,
+        )
+    )
+
+
+def _random_caps(rng, spec, g):
+    """A feasible capacity vector via select_servers on a random free state."""
+    while True:
+        free = {
+            m: int(rng.integers(0, spec.server_gpus(m) + 1))
+            for m in range(spec.num_servers)
+        }
+        if sum(free.values()) >= g:
+            consolidate = bool(rng.integers(0, 2))
+            return select_servers(free, g, consolidate=consolidate, spec=spec)
+
+
+def assert_placements_equal(pa, pb):
+    assert set(pa) == set(pb)
+    for m in pa:
+        assert np.array_equal(np.asarray(pa[m]), np.asarray(pb[m])), m
+
+
+# ---------------------------------------------------------------------------
+# Greedy: array heavy_edge == dict-walk reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_heavy_edge_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    specs = (_hom_spec(), mixed_cluster_spec(num_servers=7, seed=seed,
+                                             n_classes=3))
+    jobs = _trace_jobs(seed)
+    for spec in specs:
+        for job in jobs[:8]:
+            caps = _random_caps(rng, spec, job.g)
+            graph = build_job_graph(job)
+            assert heavy_edge(graph, caps) == heavy_edge_reference(graph, caps)
+
+
+def test_heavy_edge_single_gpu_servers():
+    """cap == 1 slots exercise the shared min-weight-vertex branch."""
+    job = make_simple_job(job_id=0, replicas=(2, 2), h_mb=64.0)
+    graph = build_job_graph(job)
+    caps = [(0, 1), (1, 1), (2, 1), (3, 1)]
+    assert heavy_edge(graph, caps) == heavy_edge_reference(graph, caps)
+
+
+def test_heavy_edge_no_edges():
+    """A 1-stage 1-replica-per-stage job has an empty edge set."""
+    job = make_simple_job(job_id=0, replicas=(1,), h_mb=0.0)
+    graph = build_job_graph(job)
+    assert heavy_edge(graph, [(0, 1)]) == heavy_edge_reference(
+        graph, [(0, 1)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# alpha: vectorized == per-(server, stage) beta reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_alpha_matches_reference(seed):
+    """Exact float equality on greedy placements, hom + mixed specs."""
+    rng = np.random.default_rng(seed)
+    specs = (_hom_spec(), mixed_cluster_spec(num_servers=6, seed=seed,
+                                             n_classes=2))
+    jobs = _trace_jobs(seed)
+    for spec in specs:
+        for job in jobs[:8]:
+            caps = _random_caps(rng, spec, job.g)
+            graph = build_job_graph(job)
+            assignment = heavy_edge(graph, caps)
+            placement = timing.placement_from_assignment(job, assignment)
+            a_vec = timing.alpha(job, placement, spec)
+            a_ref = timing.alpha_reference(job, placement, spec)
+            assert a_vec == a_ref  # bitwise, not approx
+
+
+def test_alpha_scalar_and_array_paths_agree():
+    """Placements straddling the scalar-cells threshold agree bitwise."""
+    spec = _hom_spec(num_servers=16)
+    for replicas in ((4, 4), (8, 8, 8, 8), (2,) * 8, (32,)):
+        job = make_simple_job(job_id=0, replicas=replicas, h_mb=128.0)
+        caps = select_servers(
+            {m: 8 for m in range(16)}, job.g, consolidate=True
+        )
+        graph = build_job_graph(job)
+        placement = timing.placement_from_assignment(
+            job, heavy_edge(graph, caps)
+        )
+        assert timing.alpha(job, placement, spec) == timing.alpha_reference(
+            job, placement, spec
+        )
+
+
+def test_alpha_empty_placement():
+    job = make_simple_job(job_id=0, replicas=(2,))
+    spec = _hom_spec()
+    assert timing.alpha(job, {}, spec) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# map_job: the fused array pipeline == reference pipeline (incl. refine)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_map_job_matches_reference(seed, refine):
+    rng = np.random.default_rng(seed)
+    specs = (_hom_spec(), mixed_cluster_spec(num_servers=7, seed=seed,
+                                             n_classes=3))
+    jobs = _trace_jobs(seed)
+    for spec in specs:
+        for job in jobs[:6]:
+            caps = _random_caps(rng, spec, job.g)
+            p_ref, a_ref = map_job(job, caps, spec, refine=refine,
+                                   reference=True)
+            p_arr, a_arr = map_job(job, caps, spec, refine=refine)
+            assert a_arr == a_ref
+            assert_placements_equal(p_arr, p_ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_map_job_canonical_matches_reference_refined(seed):
+    """The rank-relabeled path (what PlacementCache memoizes), refined."""
+    rng = np.random.default_rng(seed)
+    spec = mixed_cluster_spec(num_servers=6, seed=seed, n_classes=3)
+    jobs = _trace_jobs(seed, n_jobs=15)
+    for job in jobs[:6]:
+        caps = _random_caps(rng, spec, job.g)
+        p_ref, a_ref = map_job_canonical(job, caps, spec, refine=True,
+                                         reference=True)
+        p_arr, a_arr = map_job_canonical(job, caps, spec, refine=True)
+        assert a_arr == a_ref
+        assert_placements_equal(p_arr, p_ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_placement_cache_seed_reuse_across_class_layouts(seed):
+    """Mixed-cluster cache misses that share (config, shape) with an
+    earlier class layout reuse its seeds/refined arrays — the reused-path
+    result must still equal a fresh reference evaluation."""
+    rng = np.random.default_rng(seed)
+    spec = mixed_cluster_spec(num_servers=8, seed=seed, n_classes=3)
+    cache = PlacementCache(spec, refine=True)
+    jobs = _trace_jobs(seed, n_jobs=10)
+    for job in jobs[:4]:
+        for _ in range(6):  # several random layouts -> shape collisions
+            caps = _random_caps(rng, spec, job.g)
+            p_c, a_c = cache.map_job(job, caps)
+            p_ref, a_ref = map_job_canonical(job, caps, spec, refine=True,
+                                             reference=True)
+            assert a_c == a_ref
+            assert_placements_equal(p_c, p_ref)
+
+
+def test_map_job_rejects_wrong_capacity_total():
+    job = make_simple_job(job_id=0, replicas=(2, 2))
+    spec = _hom_spec()
+    with pytest.raises(ValueError):
+        map_job(job, [(0, 3)], spec)
+    with pytest.raises(ValueError):
+        map_job(job, [(0, 3)], spec, reference=True)
+
+
+# ---------------------------------------------------------------------------
+# FreeCapsSnapshot: prefix carving == select_servers, buckets == recount
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_snapshot_carving_matches_select_servers(seed):
+    rng = np.random.default_rng(seed)
+    specs = (_hom_spec(), mixed_cluster_spec(num_servers=9, seed=seed,
+                                             n_classes=3))
+    for spec in specs:
+        free = {
+            m: int(rng.integers(0, spec.server_gpus(m) + 1))
+            for m in range(spec.num_servers)
+        }
+        total = sum(free.values())
+        if total == 0:
+            continue
+        snap = FreeCapsSnapshot.consolidating(free, total, spec)
+        for g in rng.integers(1, total + 1, size=12):
+            g = int(g)
+            assert snap.caps_for(g) == tuple(
+                select_servers(free, g, consolidate=True, spec=spec)
+            )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_bucketed_select_matches_counting_sort(seed):
+    """ClusterState-maintained buckets == per-call counting sort."""
+    from repro.core.cluster import ClusterState
+
+    rng = np.random.default_rng(seed)
+    specs = (_hom_spec(num_servers=6), mixed_cluster_spec(
+        num_servers=6, seed=seed, n_classes=2))
+    for spec in specs:
+        cs = ClusterState(spec)
+        jid = 0
+        for _ in range(25):
+            # random allocate/release churn to exercise bucket moves
+            if cs.total_free > 0 and rng.random() < 0.7:
+                g = int(rng.integers(1, cs.total_free + 1))
+                caps = select_servers(
+                    cs.free, g, consolidate=bool(rng.integers(0, 2)),
+                    spec=spec,
+                    buckets=cs.free_buckets, total_free=cs.total_free,
+                )
+                cs.allocate(jid, {m: np.array([c]) for m, c in caps},
+                            counts=dict(caps))
+                jid += 1
+            elif cs._job_alloc:
+                victim = next(iter(cs._job_alloc))
+                cs.release(victim)
+            # invariant: buckets always equal a fresh counting sort
+            for consolidate in (True, False):
+                for g in (1, min(4, max(1, cs.total_free))):
+                    if cs.total_free < g:
+                        continue
+                    fast = select_servers(
+                        cs.free, g, consolidate=consolidate, spec=spec,
+                        buckets=cs.free_buckets, total_free=cs.total_free,
+                    )
+                    slow = select_servers(
+                        cs.free, g, consolidate=consolidate, spec=spec
+                    )
+                    assert fast == slow
+
+
+# ---------------------------------------------------------------------------
+# Satellites: SimResult.makespan guard
+# ---------------------------------------------------------------------------
+
+
+def test_makespan_empty_records():
+    from repro.core.simulator import SimResult
+
+    res = SimResult()
+    assert res.makespan == 0.0
+    assert res.mean_jct == 0.0
