@@ -5,7 +5,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-sched lint smoke bench-sched bench-hetero bench-budget ci
+.PHONY: test test-sched lint smoke bench-sched bench-hetero \
+	bench-straggler bench-budget ci
 
 test:
 	python -m pytest -x -q
@@ -39,11 +40,18 @@ bench-sched:
 bench-hetero:
 	python -m benchmarks.sched_scale --hetero $(if $(FULL),--full,)
 
-# CI budget mode: emits BENCH_sched.json and fail-soft-checks it against
-# the committed baseline (refresh with: make bench-budget && cp
-# BENCH_sched.json benchmarks/BENCH_sched_baseline.json).
+# Straggler (partial degradation) scenario: A-SRPT finish-in-place vs
+# migration-capable on the mixed cluster (flow_vs_stay < 1 = migration
+# wins).
+bench-straggler:
+	python -m benchmarks.sched_scale --straggler $(if $(FULL),--full,)
+
+# CI budget mode: emits BENCH_sched.json (incl. the straggler migration
+# row) and fail-soft-checks it against the committed baseline (refresh
+# with: make bench-budget && cp BENCH_sched.json
+# benchmarks/BENCH_sched_baseline.json).
 bench-budget:
-	python -m benchmarks.sched_scale --budget \
+	python -m benchmarks.sched_scale --budget --straggler \
 		--json BENCH_sched.json \
 		--check benchmarks/BENCH_sched_baseline.json
 

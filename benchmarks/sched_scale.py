@@ -33,11 +33,20 @@ Variants:
   (100 GbE 8x) servers a quarter into the horizon.  The fault row reports
   ``flow_vs_clean`` — degraded-cluster recovery flow time relative to the
   clean run.
+* ``--straggler`` / ``sched_scale_straggler`` — degradation scenario on
+  the mixed-generation cluster: mid-trace slowdown events sampled by
+  ``trace.straggler_events`` hit four big-GPU servers, and A-SRPT runs
+  twice — finish-in-place vs migration-capable (checkpoint-restart off
+  the degraded servers).  The migration row reports ``flow_vs_stay``
+  (total flow time relative to finish-in-place; < 1.0 means migration
+  wins) and the migration count.
 * ``--budget`` / ``sched_scale_budget`` — a CI-sized subset (one size,
   best-of-3 cold-start samples per policy) whose events/sec per policy is
   written to ``BENCH_sched.json`` for trend tracking; ``--check``
   compares against a committed baseline and *warns* (never fails) past
   the threshold, since shared CI runners swing tens of percent.
+  ``--budget --straggler`` appends the straggler migration row to the
+  trended set.
 * ``--profile [N]`` — run the selected variant under cProfile and dump
   the top-N cumulative entries (hot-path triage without ad-hoc scripts).
 """
@@ -55,6 +64,7 @@ from repro.core import (
     generate_trace,
     make_predictor,
     simulate,
+    straggler_events,
 )
 
 from .common import make_cluster
@@ -82,12 +92,31 @@ FAULT_AT_FRAC = 0.25  # of the trace horizon
 
 BUDGET_SIZE = 5_000  # --budget: one size, single sample per policy
 
+# Straggler scenario: four gen-a servers slow mid-trace (factors sampled
+# in [0.25, 0.6]); no recovery inside the 20k run's window, so stretched
+# jobs stay stretched unless migrated.  The checkpoint-restart penalty is
+# the migration.py default (120 s) — small against the multiplied
+# remaining time of a job slowed to a quarter speed.  The variant runs at
+# *moderate* load (3x the throughput regime's horizon): migration's win
+# comes from converting idle healthy capacity into useful work, which the
+# deliberately-saturated throughput regime has none of — there every GPU
+# is always busy, so moving a stretched job merely hands its degraded
+# GPUs (and their slowdown) to the next queued job and pays the restart
+# penalty on top (measurably: flow_vs_stay ~1.02 at full saturation).
+STRAGGLER_SIZES = (20_000,)
+STRAGGLER_N = 4
+STRAGGLER_FACTORS = (0.25, 0.6)
+STRAGGLER_WINDOW = (0.2, 0.5)  # event times, fraction of the horizon
+STRAGGLER_SECONDS_PER_JOB = 3 * SECONDS_PER_JOB
 
-def _trace(n_jobs: int, seed: int = 1) -> list:
+
+def _trace(
+    n_jobs: int, seed: int = 1, seconds_per_job: float = SECONDS_PER_JOB
+) -> list:
     return generate_trace(
         TraceConfig(
             n_jobs=n_jobs,
-            horizon=n_jobs * SECONDS_PER_JOB,
+            horizon=n_jobs * seconds_per_job,
             seed=seed,
             single_gpu_frac=SINGLE_GPU_FRAC,
             max_gpus_per_job=MAX_GPUS_PER_JOB,
@@ -98,12 +127,28 @@ def _trace(n_jobs: int, seed: int = 1) -> list:
     )
 
 
-def _asrpt(placement_cache: bool = True) -> ASRPTPolicy:
+def _asrpt(placement_cache: bool = True, **kw) -> ASRPTPolicy:
     return ASRPTPolicy(
         make_predictor("mean"),
         tau=2.0,
         refine_mapping=True,
         placement_cache=placement_cache,
+        **kw,
+    )
+
+
+def _straggler_degradations(n_jobs: int, seed: int = 2) -> list:
+    """Mid-trace slowdowns on gen-a (ids 0..23 in HETERO_CLASSES) servers;
+    no recovery — finish-in-place pays the full stretch."""
+    return straggler_events(
+        HETERO_CLASSES[0].count,
+        n_jobs * STRAGGLER_SECONDS_PER_JOB,
+        n_stragglers=STRAGGLER_N,
+        seed=seed,
+        factor_low=STRAGGLER_FACTORS[0],
+        factor_high=STRAGGLER_FACTORS[1],
+        start_frac=STRAGGLER_WINDOW,
+        recover=False,
     )
 
 
@@ -191,10 +236,48 @@ def sched_scale_hetero(full: bool = False) -> List[Dict]:
     return rows
 
 
+def sched_scale_straggler(full: bool = False) -> List[Dict]:
+    """Degradation scenario: stragglers on the mixed cluster, stay vs move.
+
+    Two A-SRPT runs over identical jobs + degradation events: the
+    finish-in-place engine (every stretched job completes on its degraded
+    placement) and the migration-capable engine (checkpoint-restart onto
+    fresh capacity when the predicted-time race says it wins).
+    ``flow_vs_stay`` < 1.0 on the migrate row is the headline: reacting
+    to partial degradation beats riding it out.
+    """
+    cluster = _hetero_cluster()
+    rows: List[Dict] = []
+    for n in STRAGGLER_SIZES:
+        jobs = _trace(n, seconds_per_job=STRAGGLER_SECONDS_PER_JOB)
+        deg = _straggler_degradations(n)
+        stay = simulate(
+            jobs, cluster, _asrpt(), validate=False, degradations=deg
+        )
+        rows.append(_row(n, "A-SRPT (straggler, stay)", stay))
+        move = simulate(
+            jobs, cluster, _asrpt(migrate=True), validate=False,
+            degradations=deg,
+        )
+        mrow = _row(n, "A-SRPT (straggler, migrate)", move)
+        mrow["flow_vs_stay"] = round(
+            move.total_flow_time / stay.total_flow_time, 3
+        )
+        mrow["n_migrations"] = move.n_migrations
+        rows.append(mrow)
+        if full:
+            pol = BASELINES["WCS-SubTime"](make_predictor("mean"))
+            res = simulate(
+                jobs, cluster, pol, validate=False, degradations=deg
+            )
+            rows.append(_row(n, "WCS-SubTime (straggler, stay)", res))
+    return rows
+
+
 BUDGET_SAMPLES = 3  # best-of per row; shared runners swing tens of percent
 
 
-def sched_scale_budget() -> List[Dict]:
+def sched_scale_budget(straggler: bool = False) -> List[Dict]:
     """CI budget mode: one 5k-job size, every policy, best-of-3 samples.
 
     Small enough for a shared runner (~1 min), large enough that
@@ -204,15 +287,22 @@ def sched_scale_budget() -> List[Dict]:
     single samples swung tens of percent with host noise, drowning the
     regression signal the trend tracking exists for; best-of-3 follows
     the 20k cached/uncached comparison's sampling in ``sched_scale``.
+
+    ``straggler=True`` appends the migration-capable straggler row (same
+    mixed cluster and event recipe as ``sched_scale_straggler``, scaled
+    to the budget size) so CI trends the degradation path's events/sec
+    alongside everything else.
     """
     n = BUDGET_SIZE
     jobs = _trace(n)
     cluster = make_cluster(num_servers=NUM_SERVERS)
 
-    def best_of(mk_policy, clu, faults=None):
+    def best_of(mk_policy, clu, faults=None, degradations=None, trace=None):
+        run_jobs = jobs if trace is None else trace
         return min(
             (
-                simulate(jobs, clu, mk_policy(), validate=False, faults=faults)
+                simulate(run_jobs, clu, mk_policy(), validate=False,
+                         faults=faults, degradations=degradations)
                 for _ in range(BUDGET_SAMPLES)
             ),
             key=lambda r: r.wall_s,
@@ -232,6 +322,18 @@ def sched_scale_budget() -> List[Dict]:
     faults = [(FAULT_AT_FRAC * horizon, m) for m in FAULT_SERVERS]
     res = best_of(_asrpt, het, faults=faults)
     rows.append(_row(n, "A-SRPT (hetero, 4 gen-a down)", res))
+    if straggler:
+        # the straggler recipe is moderate-load (see STRAGGLER_SECONDS_PER
+        # _JOB): its own trace, same budget size and sampling
+        sjobs = _trace(n, seconds_per_job=STRAGGLER_SECONDS_PER_JOB)
+        deg = _straggler_degradations(n)
+        res = best_of(
+            lambda: _asrpt(migrate=True), het, degradations=deg,
+            trace=sjobs,
+        )
+        srow = _row(n, "A-SRPT (straggler, migrate)", res)
+        srow["n_migrations"] = res.n_migrations
+        rows.append(srow)
     return rows
 
 
@@ -299,6 +401,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="mixed-generation cluster + fault-injection variant",
     )
     ap.add_argument(
+        "--straggler", action="store_true",
+        help="degradation scenario: mid-trace slowdowns on the mixed "
+             "cluster, A-SRPT finish-in-place vs migration-capable "
+             "(with --budget: append the migrate row to the trended set)",
+    )
+    ap.add_argument(
         "--json", metavar="PATH", default=None,
         help="write BENCH_sched.json-style output to PATH (--budget only: "
              "the trend file keys events/sec by policy name, which is only "
@@ -320,13 +428,19 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if (args.json or args.check) and not args.budget:
         ap.error("--json/--check track the budget-mode series; add --budget")
+    if args.hetero and args.straggler:
+        ap.error("--hetero and --straggler are separate variants")
     if args.budget:
         if args.full:
             ap.error("--budget is fixed-size; drop --full (or use "
                      "--hetero/--full for the big sweeps)")
-        run = sched_scale_budget
+        run = lambda: sched_scale_budget(  # noqa: E731
+            straggler=args.straggler
+        )
     elif args.hetero:
         run = lambda: sched_scale_hetero(full=args.full)  # noqa: E731
+    elif args.straggler:
+        run = lambda: sched_scale_straggler(full=args.full)  # noqa: E731
     else:
         run = lambda: sched_scale(full=args.full)  # noqa: E731
 

@@ -16,7 +16,14 @@ from .heavy_edge import (  # noqa: F401
 )
 from .cluster import ClusterState  # noqa: F401
 from .srpt import VirtualSRPT, srpt_total_completion  # noqa: F401
-from .simulator import Policy, SimResult, Start, simulate  # noqa: F401
+from .simulator import (  # noqa: F401
+    Migration,
+    Policy,
+    SimResult,
+    Start,
+    simulate,
+)
+from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin  # noqa: F401
 from .asrpt import ASRPTPolicy  # noqa: F401
 from .baselines import BASELINES  # noqa: F401
 from .predictor import (  # noqa: F401
@@ -31,6 +38,7 @@ from .trace import (  # noqa: F401
     TraceConfig,
     generate_trace,
     mixed_cluster_spec,
+    straggler_events,
     trace_stats,
 )
 from .profiles import PAPER_MODELS, make_job, job_from_model_shape  # noqa: F401

@@ -30,6 +30,15 @@ better.)  Deadline expiry is checked unconditionally.  The schedule is
 bit-identical to exhaustive re-evaluation (property-tested in
 tests/test_sched_cache.py) while per-event work drops by an order of
 magnitude on congested traces.
+
+Degraded clusters (stragglers, see cluster.py): while any server carries
+a speed factor != 1.0, server selection tie-breaks by *effective*
+bandwidth, placements are evaluated (and cached) per speed signature,
+and the step-2 skip keys on (caps, speeds) so a speed change alone
+re-evaluates delayed jobs.  All of it is gated on
+``cluster.has_degraded`` — clean passes run the original code paths
+byte for byte.  With ``migrate=True`` the policy also checkpoint-
+restarts running jobs off degraded capacity (migration.py).
 """
 from __future__ import annotations
 
@@ -39,12 +48,13 @@ from typing import Deque, Dict, List, Optional
 
 from .cluster import ClusterState
 from .heavy_edge import (
-    FreeCapsSnapshot,
+    ConsolidatingLadder,
     PlacementCache,
     map_job_canonical,
     select_servers,
 )
 from .job import ClusterSpec, JobSpec
+from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin
 from .predictor import IterationPredictor
 from .simulator import AlphaCache, Policy, Start
 from .srpt import VirtualSRPT
@@ -59,14 +69,16 @@ class _Delayed:
         self.job = job
         self.kappa = kappa
         self.deadline = deadline
-        # (cluster.epoch, selected caps) at the last placement evaluation.
-        # While the cluster is unchanged — or changes leave the selected
-        # capacity vector identical — the evaluation outcome is unchanged.
+        # (cluster.epoch, (selected caps, their speed factors)) at the last
+        # placement evaluation.  While the cluster is unchanged — or
+        # changes leave both the selected capacity vector and the speeds
+        # of those servers identical — the evaluation outcome is unchanged
+        # (the mapping is a pure function of caps + speeds).
         self.eval_epoch = -1
         self.eval_caps: Optional[tuple] = None
 
 
-class ASRPTPolicy(Policy):
+class ASRPTPolicy(MigrationMixin, Policy):
     def __init__(
         self,
         predictor: IterationPredictor,
@@ -74,12 +86,16 @@ class ASRPTPolicy(Policy):
         tau: float = 2.0,
         refine_mapping: bool = False,  # beyond-paper local-search swaps
         placement_cache: bool = True,  # incremental eval + memoized mapping
+        migrate: bool = False,  # checkpoint-restart off degraded servers
+        migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
     ):
         self.predictor = predictor
         self.comm_heavy = comm_heavy
         self.tau = tau
         self.refine_mapping = refine_mapping
         self.placement_cache = placement_cache
+        self.migrate = migrate
+        self.migration_penalty = migration_penalty
         self.vm = VirtualSRPT()
         self.pending: Deque[JobSpec] = deque()
         self.delayed: "OrderedDict[int, _Delayed]" = OrderedDict()
@@ -128,15 +144,15 @@ class ASRPTPolicy(Policy):
 
     # -- placement helpers ---------------------------------------------------
 
-    def _map(self, job: JobSpec, caps) -> tuple:
+    def _map(self, job: JobSpec, caps, speeds=None) -> tuple:
         if self._pcache is not None:
-            return self._pcache.map_job(job, caps)
+            return self._pcache.map_job(job, caps, speeds=speeds)
         # Uncached reference path: identical canonicalization, no memo,
         # and the retained pure-Python greedy/alpha pipeline — the cached
         # array-native engine must be bit-identical to this.
         return map_job_canonical(
             job, caps, self.cluster_spec, refine=self.refine_mapping,
-            reference=True,
+            reference=True, speeds=speeds,
         )
 
     # -- main scheduling pass -------------------------------------------------
@@ -167,37 +183,21 @@ class ASRPTPolicy(Policy):
         # Batched step-2 state (incremental mode): the consolidating pick
         # order is shared by every evaluation against one free state, so
         # the second evaluation onward carves its capacity vector from a
-        # prefix-sum snapshot instead of re-running the counting sort (a
-        # lone evaluation keeps the plain ``select_servers`` — building
-        # the full-order snapshot for one carve would cost more).  Jobs
-        # sharing (config, g) — hence provably the same caps, placement,
-        # and alpha — share one evaluation via ``memo``.  Any start
-        # invalidates all of it (the free state changed).
-        snapshot: Optional[FreeCapsSnapshot] = None
-        selected_once = False
+        # prefix-sum snapshot (``ConsolidatingLadder``; reset on every
+        # start — the free state changed).  Jobs sharing (config, g) —
+        # hence provably the same caps, placement, and alpha — share one
+        # evaluation via ``memo``.
         memo: Dict[tuple, tuple] = {}
         spec = self.cluster_spec
-
-        def consolidating_caps(g_need: int) -> tuple:
-            """Shared snapshot-or-select ladder for steps 2 and 3."""
-            nonlocal snapshot, selected_once
-            if snapshot is not None:
-                return snapshot.caps_for(g_need)
-            if selected_once:
-                snapshot = FreeCapsSnapshot.consolidating(
-                    cluster.free, cluster.total_free, spec,
-                    buckets=cluster.free_buckets,
-                )
-                return snapshot.caps_for(g_need)
-            selected_once = True
-            return tuple(
-                select_servers(
-                    cluster.free, g_need,
-                    consolidate=True, spec=spec,
-                    buckets=cluster.free_buckets,
-                    total_free=cluster.total_free,
-                )
-            )
+        # Degradation state (None on clean clusters — every added branch
+        # below degrades to the original clean code path): effective-
+        # bandwidth ranks steer selection away from stragglers, per-slot
+        # speed factors key the mapping.  Speeds only change between
+        # passes (simulator events), never inside one.
+        bw_ranks = cluster.effective_bw_ranks
+        speeds_for = cluster.speeds_for if cluster.has_degraded else None
+        ladder = ConsolidatingLadder(cluster, spec, ranks=bw_ranks)
+        consolidating_caps = ladder.caps_for
 
         if run_step2:
             for jid in list(self.delayed.keys()):
@@ -213,32 +213,34 @@ class ASRPTPolicy(Policy):
                         # didn't change.
                         continue
                     caps = consolidating_caps(g)
+                    sp = speeds_for(caps) if speeds_for else None
                     if not expired:
                         d.eval_epoch = cluster.epoch
-                        if caps == d.eval_caps:
-                            continue  # same caps -> same decision
-                        d.eval_caps = caps
+                        if (caps, sp) == d.eval_caps:
+                            continue  # same caps + speeds -> same decision
+                        d.eval_caps = (caps, sp)
                     key = (d.job.config_key, g)
                     hit = memo.get(key)
                     if hit is None:
-                        hit = memo[key] = self._map(d.job, caps)
+                        hit = memo[key] = self._map(d.job, caps, sp)
                     placement, a = hit
                 else:
                     caps = tuple(
                         select_servers(
                             cluster.free, g,
                             consolidate=True, spec=spec,
+                            ranks=bw_ranks,
                         )
                     )
-                    placement, a = self._map(d.job, caps)
+                    sp = speeds_for(caps) if speeds_for else None
+                    placement, a = self._map(d.job, caps, sp)
                 _, a_min = self.alpha_cache.bounds(d.job)
                 if a < d.kappa or a / a_min <= self.comm_heavy or expired:
                     del self.delayed[jid]
                     starts.append(Start(d.job, placement, a))
                     cluster.allocate(jid, placement, counts=dict(caps))
                     # free capacity changed: drop every per-state structure
-                    snapshot = None
-                    selected_once = False
+                    ladder.reset()
                     memo = {}
                 # else: stay delayed
 
@@ -259,22 +261,23 @@ class ASRPTPolicy(Policy):
                         select_servers(
                             cluster.free, job.g,
                             consolidate=True, spec=spec,
+                            ranks=bw_ranks,
                         )
                     )
-                placement, a = self._map(job, caps)
+                sp = speeds_for(caps) if speeds_for else None
+                placement, a = self._map(job, caps, sp)
                 delay_budget = self.tau * self._pred_work[job.job_id]
                 if a / a_min <= self.comm_heavy or delay_budget <= 0.0:
                     starts.append(Start(job, placement, a))
                     cluster.allocate(job.job_id, placement, counts=dict(caps))
-                    snapshot = None
-                    selected_once = False
+                    ladder.reset()
                 else:
                     d = _Delayed(job, kappa=a, deadline=t + delay_budget)
                     # Seed with this evaluation: caps were selected at the
                     # current cluster state, so step 2 can skip until the
                     # state (and the resulting caps) actually changes.
                     d.eval_epoch = cluster.epoch
-                    d.eval_caps = caps
+                    d.eval_caps = (caps, sp)
                     self.delayed[job.job_id] = d
                     heapq.heappush(self._dheap, (d.deadline, job.job_id))
             else:
@@ -284,17 +287,19 @@ class ASRPTPolicy(Policy):
                         consolidate=False, spec=spec,
                         buckets=cluster.free_buckets,
                         total_free=cluster.total_free,
+                        ranks=bw_ranks,
                     )
                 else:
                     caps = select_servers(
                         cluster.free, job.g,
                         consolidate=False, spec=spec,
+                        ranks=bw_ranks,
                     )
-                placement, a = self._map(job, caps)
+                sp = speeds_for(caps) if speeds_for else None
+                placement, a = self._map(job, caps, sp)
                 starts.append(Start(job, placement, a))
                 cluster.allocate(job.job_id, placement, counts=dict(caps))
-                snapshot = None
-                selected_once = False
+                ladder.reset()
 
         # A pass that started nothing left the cluster exactly as it found
         # it; record the epoch so step 2 can skip until something changes.

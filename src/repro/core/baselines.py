@@ -20,11 +20,12 @@ from typing import Callable, Dict, List
 from .cluster import ClusterState
 from .heavy_edge import PlacementCache, select_servers
 from .job import ClusterSpec, JobSpec
+from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin
 from .predictor import IterationPredictor
 from .simulator import AlphaCache, Policy, Start
 
 
-class QueuePolicy(Policy):
+class QueuePolicy(MigrationMixin, Policy):
     """Priority-queue scheduler parameterized by key and work-conservation.
 
     Strict head-of-line mode keeps one queue sorted in *descending*
@@ -49,12 +50,16 @@ class QueuePolicy(Policy):
         predictor: IterationPredictor,
         key: str,
         work_conserving: bool,
+        migrate: bool = False,  # checkpoint-restart off degraded servers
+        migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
     ):
         if key not in ("duration", "workload", "subtime"):
             raise ValueError(key)
         self.predictor = predictor
         self.key_kind = key
         self.work_conserving = work_conserving
+        self.migrate = migrate
+        self.migration_penalty = migration_penalty
         # (-key, -arrival, -job_id, job): ascending sort puts the smallest
         # (key, arrival, job_id) — the next job to schedule — at the end.
         # Strict head-of-line uses the flat list; work-conserving buckets
@@ -97,8 +102,10 @@ class QueuePolicy(Policy):
         caps = select_servers(
             cluster.free, job.g, consolidate=True, spec=self.cluster_spec,
             buckets=cluster.free_buckets, total_free=cluster.total_free,
+            ranks=cluster.effective_bw_ranks,
         )
-        placement, a = self._pcache.map_job(job, caps)
+        speeds = cluster.speeds_for(caps) if cluster.has_degraded else None
+        placement, a = self._pcache.map_job(job, caps, speeds=speeds)
         starts.append(Start(job, placement, a))
         cluster.allocate(job.job_id, placement, counts=dict(caps))
 
@@ -150,24 +157,24 @@ class QueuePolicy(Policy):
         return self._n_waiting if self.work_conserving else len(self.waiting)
 
 
-def spjf(predictor: IterationPredictor) -> QueuePolicy:
-    return QueuePolicy(predictor, key="duration", work_conserving=False)
+def spjf(predictor: IterationPredictor, **kw) -> QueuePolicy:
+    return QueuePolicy(predictor, key="duration", work_conserving=False, **kw)
 
 
-def spwf(predictor: IterationPredictor) -> QueuePolicy:
-    return QueuePolicy(predictor, key="workload", work_conserving=False)
+def spwf(predictor: IterationPredictor, **kw) -> QueuePolicy:
+    return QueuePolicy(predictor, key="workload", work_conserving=False, **kw)
 
 
-def wcs_duration(predictor: IterationPredictor) -> QueuePolicy:
-    return QueuePolicy(predictor, key="duration", work_conserving=True)
+def wcs_duration(predictor: IterationPredictor, **kw) -> QueuePolicy:
+    return QueuePolicy(predictor, key="duration", work_conserving=True, **kw)
 
 
-def wcs_workload(predictor: IterationPredictor) -> QueuePolicy:
-    return QueuePolicy(predictor, key="workload", work_conserving=True)
+def wcs_workload(predictor: IterationPredictor, **kw) -> QueuePolicy:
+    return QueuePolicy(predictor, key="workload", work_conserving=True, **kw)
 
 
-def wcs_subtime(predictor: IterationPredictor) -> QueuePolicy:
-    return QueuePolicy(predictor, key="subtime", work_conserving=True)
+def wcs_subtime(predictor: IterationPredictor, **kw) -> QueuePolicy:
+    return QueuePolicy(predictor, key="subtime", work_conserving=True, **kw)
 
 
 BASELINES: dict[str, Callable[[IterationPredictor], Policy]] = {

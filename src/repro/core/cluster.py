@@ -6,15 +6,26 @@ decision that is a pure function of the free-capacity state; nothing
 weaker is sound — in particular "only releases can improve a placement"
 does NOT hold, because Heavy-Edge is greedy and shrinking capacities can
 reshuffle the selected capacity vector into one the greedy maps better.
+
+Degradation (straggler) state: ``set_server_speed`` records a per-server
+speed factor in (0, 1] ∪ (1, ∞) that scales the server's *effective*
+compute and NIC bandwidth — every stage term evaluated on that server
+stretches by ``1/factor`` (see timing.py).  GPU *counts* are unaffected:
+a half-speed server still holds its GPUs, they just run slower.  A
+factor of exactly ``0.0`` is a full failure and degrades to
+``mark_server_down`` (the PR-2 fault path).  Speed changes bump
+``epoch`` (placement decisions depend on them) and a separate
+``speed_version`` so policies can cheaply detect "speeds changed while
+caps stayed equal".
 """
 from __future__ import annotations
 
 import bisect
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .job import ClusterSpec
+from .job import ClusterSpec, build_bw_ranks
 
 
 class ClusterState:
@@ -51,6 +62,10 @@ class ClusterState:
         self.total_free: int = spec.total_gpus
         self._down: set = set()
         self.epoch: int = 0
+        # sparse straggler state: only servers with factor != 1.0 appear
+        self._speed: Dict[int, float] = {}
+        self.speed_version: int = 0
+        self._bw_ranks: Optional[Tuple[tuple, tuple]] = None
 
     def _move_bucket(self, m: int, old: int, new: int) -> None:
         if old > 0:
@@ -129,11 +144,98 @@ class ClusterState:
         if server_id in self._down:
             return
         self._down.add(server_id)
+        if self._speed.pop(server_id, None) is not None:
+            # a dead straggler is just dead: its speed no longer matters,
+            # and dropping it lets a now-clean cluster take the fast path
+            self._bw_ranks = None
+            self.speed_version += 1
         old = self.free[server_id]
         self.total_free -= old
         self.free[server_id] = 0
         self._move_bucket(server_id, old, 0)
         self.epoch += 1
+
+    def set_server_speed(self, server_id: int, factor: float) -> bool:
+        """Degradation hook: scale a server's effective speed by ``factor``.
+
+        ``factor == 1.0`` restores full speed (recovery), ``factor == 0.0``
+        is a full failure and takes the ``mark_server_down`` path verbatim.
+        Returns True when the state actually changed — a repeated event
+        with the server's current factor is a no-op (no epoch bump), so
+        all-1.0 degradation schedules stay bit-identical to clean runs.
+        """
+        if server_id not in self.free:
+            raise ValueError(
+                f"unknown server {server_id} "
+                f"(cluster has {self.spec.num_servers})"
+            )
+        if factor < 0.0:
+            raise ValueError(f"speed factor must be >= 0, got {factor}")
+        if factor == 0.0:
+            if server_id in self._down:
+                return False
+            self.mark_server_down(server_id)
+            return True
+        if server_id in self._down:
+            return False  # dead servers don't recover (restart = new server)
+        if factor == self._speed.get(server_id, 1.0):
+            return False
+        if factor == 1.0:
+            del self._speed[server_id]
+        else:
+            self._speed[server_id] = factor
+        self._bw_ranks = None
+        self.speed_version += 1
+        self.epoch += 1
+        return True
+
+    @property
+    def has_degraded(self) -> bool:
+        return bool(self._speed)
+
+    @property
+    def speed_factors(self) -> Dict[int, float]:
+        """Sparse {server_id: factor} map (only factors != 1.0); treat as
+        read-only — the timing layer takes it as the ``speeds`` mapping."""
+        return self._speed
+
+    def speed_of(self, server_id: int) -> float:
+        return self._speed.get(server_id, 1.0)
+
+    def speeds_for(
+        self, caps: Sequence[Tuple[int, int]]
+    ) -> Optional[Tuple[float, ...]]:
+        """Per-slot factors aligned with a ``select_servers`` capacity
+        vector, or None when no server is degraded (the clean fast path —
+        callers skip speed threading entirely)."""
+        sp = self._speed
+        if not sp:
+            return None
+        get = sp.get
+        return tuple(get(m, 1.0) for m, _c in caps)
+
+    @property
+    def effective_bw_ranks(self) -> Optional[Tuple[tuple, tuple]]:
+        """(descending, ascending) effective-bandwidth rank tuples for the
+        ``select_servers`` tiebreak, where effective bandwidth is the
+        class NIC bandwidth times the server's speed factor.  None while
+        no server is degraded — callers then fall back to the static
+        ``ClusterSpec.bw_order_ranks`` (heterogeneous) or no tiebreak
+        (homogeneous), keeping clean schedules byte-identical.
+        """
+        if not self._speed:
+            return None
+        ranks = self._bw_ranks
+        if ranks is None:
+            spec = self.spec
+            sp = self._speed
+            ranks = self._bw_ranks = build_bw_ranks(
+                [
+                    spec.server_geom(m)[1] * sp.get(m, 1.0)
+                    for m in range(spec.num_servers)
+                ]
+            )
+        return ranks
 
     @property
     def downed_servers(self) -> frozenset:

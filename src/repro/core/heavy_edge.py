@@ -234,11 +234,44 @@ def heavy_edge(
     return {v: ids[pos[i]] for i, v in enumerate(d.verts)}
 
 
+def _bw_weights(
+    servers: Sequence[int],
+    geoms: Optional[Mapping[int, ServerGeom]],
+    speeds: Optional[Mapping[int, float]] = None,
+) -> Optional[np.ndarray]:
+    """Normalized inverse effective-bandwidth weights over ``servers``.
+
+    The single definition of the weight chain ``refine_assignment`` and
+    ``_position_r_server`` share: inverse of ``b_inter * speed`` per
+    server (bandwidth from ``geoms``, 1.0 when absent), None when the
+    weights are uniform, else scale-free-normalized so the improvement
+    threshold stays in the same (byte-weight) units as the unweighted
+    objective.  Order of ``servers`` fixes the summation order, hence
+    the exact floats — callers pass sorted ids.
+    """
+    if speeds and any(speeds.get(m, 1.0) != 1.0 for m in servers):
+        sget = speeds.get
+        if geoms is not None:
+            inv = np.array(
+                [1.0 / (geoms[m][1] * sget(m, 1.0)) for m in servers]
+            )
+        else:
+            inv = np.array([1.0 / sget(m, 1.0) for m in servers])
+    elif geoms is not None:
+        inv = np.array([1.0 / geoms[m][1] for m in servers])
+    else:
+        return None
+    if np.all(inv == inv[0]):
+        return None
+    return inv * (len(inv) / inv.sum())
+
+
 def refine_assignment(
     graph: JobGraph,
     assignment: Dict[Vertex, int],
     max_passes: int = 3,
     geoms: Optional[Mapping[int, ServerGeom]] = None,
+    speeds: Optional[Mapping[int, float]] = None,
 ) -> Dict[Vertex, int]:
     """Beyond-paper local search: best-improvement pairwise swaps.
 
@@ -269,6 +302,11 @@ def refine_assignment(
     bandwidth is equal this reduces to exactly ``2 r`` times the
     homogeneous delta, so the unweighted formula is kept verbatim on that
     path (identical swap sequences — no behavior change).
+
+    ``speeds`` (degraded clusters) folds each server's speed factor into
+    its effective NIC bandwidth (``b_inter * f``): cutting an edge onto a
+    degraded server is penalized like cutting onto a proportionally
+    slower NIC.  Absent/all-1.0 factors leave the objective untouched.
     """
     d = graph.dense()
     verts = d.verts
@@ -282,13 +320,7 @@ def refine_assignment(
     s = np.array([server_index[assignment[v]] for v in verts])
     arange = d.arange
 
-    r_server = None
-    if geoms is not None:
-        inv = np.array([1.0 / geoms[m][1] for m in servers])
-        if not np.all(inv == inv[0]):
-            # scale-free normalization keeps the improvement threshold in
-            # the same (byte-weight) units as the unweighted objective
-            r_server = inv * (len(inv) / inv.sum())
+    r_server = _bw_weights(servers, geoms, speeds)
     tot = d.incident if r_server is not None else None
 
     for _ in range(max_passes):
@@ -416,21 +448,21 @@ def _refine_positions_batched(
 
 
 def _position_r_server(
-    ids: Sequence[int], geoms: Optional[Mapping[int, ServerGeom]]
+    ids: Sequence[int],
+    geoms: Optional[Mapping[int, ServerGeom]],
+    speeds: Optional[Mapping[int, float]] = None,
 ) -> Optional[np.ndarray]:
     """``refine_assignment``'s bandwidth weights, permuted to positions.
 
-    The reference normalizes over servers in sorted-id order; summing in
-    any other order could shift the last ulp, so the sum is taken in that
-    exact order before re-indexing by the caller's position layout.
+    The reference normalizes over servers in sorted-id order (see
+    ``_bw_weights``); summing in any other order could shift the last
+    ulp, so the shared chain runs in that exact order before re-indexing
+    by the caller's position layout.
     """
-    if geoms is None:
-        return None
     servers = sorted(ids)
-    inv = np.array([1.0 / geoms[m][1] for m in servers])
-    if np.all(inv == inv[0]):
+    r = _bw_weights(servers, geoms, speeds)
+    if r is None:
         return None
-    r = inv * (len(inv) / inv.sum())
     lookup = {m: r[k] for k, m in enumerate(servers)}
     return np.array([lookup[m] for m in ids])
 
@@ -604,6 +636,7 @@ def map_job(
     graph: Optional[JobGraph] = None,
     geoms: Optional[Mapping[int, ServerGeom]] = None,
     reference: bool = False,
+    speeds: Optional[Sequence[float]] = None,
     _het_ctx: Optional[tuple] = None,
     _seed_cache: Optional[Dict[tuple, list]] = None,
 ) -> Tuple[Dict[int, np.ndarray], float]:
@@ -621,6 +654,10 @@ def map_job(
     + per-(server, stage) beta alpha) instead of the array engine; the two
     are bit-identical (tests/test_vectorized.py) and the reference backs
     the uncached A-SRPT engine the property tests simulate against.
+    ``speeds``: per-slot degradation factors aligned with ``server_caps``
+    (see timing.py) — they stretch the alpha evaluation and fold into the
+    refine objective's effective bandwidths; the greedy itself is
+    weight-only and unaffected.  All-1.0 (or None) is the clean path.
     ``_het_ctx``: PlacementCache-precomputed (rank geoms, geometry
     columns, r_server) for the caller's class layout, shared across every
     capacity shape with the same classes (same values as the per-call
@@ -642,10 +679,19 @@ def map_job(
         # caller passed physical ids on a mixed cluster: resolve their
         # geometry here so refine + alpha see the per-class bandwidths
         geoms = {m: cluster.server_geom(m) for m, _c in server_caps}
+    if speeds is not None and all(f == 1.0 for f in speeds):
+        speeds = None  # normalize: full speed everywhere == clean path
+    speed_by_id = (
+        {m: f for (m, _c), f in zip(server_caps, speeds) if f != 1.0}
+        if speeds is not None
+        else None
+    )
     if reference:
         assignment = heavy_edge_reference(graph, server_caps)
         placement = timing.placement_from_assignment(job, assignment)
-        best_alpha = timing.alpha_reference(job, placement, cluster, geoms=geoms)
+        best_alpha = timing.alpha_reference(
+            job, placement, cluster, geoms=geoms, speeds=speed_by_id
+        )
         if refine:
             seeds = (
                 assignment,
@@ -653,9 +699,14 @@ def map_job(
                 stage_aligned_assignment(graph, server_caps),
             )
             for seed in seeds:
-                cand = refine_assignment(graph, seed, geoms=geoms)
+                cand = refine_assignment(
+                    graph, seed, geoms=geoms, speeds=speed_by_id
+                )
                 cand_placement = timing.placement_from_assignment(job, cand)
-                a = timing.alpha_reference(job, cand_placement, cluster, geoms=geoms)
+                a = timing.alpha_reference(
+                    job, cand_placement, cluster, geoms=geoms,
+                    speeds=speed_by_id,
+                )
                 if a < best_alpha - 1e-12:
                     best_alpha, placement = a, cand_placement
         return placement, best_alpha
@@ -680,11 +731,16 @@ def map_job(
         g_col, bi_col, bx_col = (
             cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
         )
+    f_col = np.array(speeds)[:, None] if speeds is not None else None
+    if speeds is not None:
+        # degraded mode is rare and speed-dependent: don't pollute the
+        # speed-agnostic shared seed/refine store
+        _seed_cache = None
     if K == 1:
         # single server: every seed and every swap collapses to the same
         # trivial placement, so only the alpha evaluation remains
         X = np.bincount(d.stage_of, minlength=S)[None, :]
-        a = timing.alpha_matrix(job, X, g_col, bi_col, bx_col)
+        a = timing.alpha_matrix(job, X, g_col, bi_col, bx_col, speed=f_col)
         return {ids[0]: X[0]}, a
 
     def _order():
@@ -699,7 +755,9 @@ def map_job(
     if not refine:
         pos_greedy = _heavy_edge_positions(graph, d, caps, _order())
         X0 = _placement_matrices(d, pos_greedy[None, :], K, S)[0]
-        best_alpha = timing.alpha_matrix(job, X0, g_col, bi_col, bx_col)
+        best_alpha = timing.alpha_matrix(
+            job, X0, g_col, bi_col, bx_col, speed=f_col
+        )
         best_X = X0
     else:
         ent = None
@@ -733,7 +791,7 @@ def map_job(
             r_server = _het_ctx[2]
             bw_key = _het_ctx[3]
         else:
-            r_server = _position_r_server(ids, geoms)
+            r_server = _position_r_server(ids, geoms, speed_by_id)
             bw_key = ()  # hom callers: r_server is None
         refined = ent[3].get(bw_key)
         if refined is None:
@@ -759,7 +817,9 @@ def map_job(
         for u_i, row in enumerate(cand_uniq):
             cand_mat[u_i] = row
         Xs = _placement_matrices(d, cand_mat, K, S)
-        alphas = timing.alpha_matrix(job, Xs, g_col, bi_col, bx_col)
+        alphas = timing.alpha_matrix(
+            job, Xs, g_col, bi_col, bx_col, speed=f_col
+        )
         best_u = cand_of[0]
         best_alpha = float(alphas[best_u])
         # replay the reference's sequential best-of comparison in seed order
@@ -793,6 +853,7 @@ def map_job_canonical(
     cluster: ClusterSpec,
     refine: bool = False,
     reference: bool = False,
+    speeds: Optional[Sequence[float]] = None,
 ) -> Tuple[Dict[int, np.ndarray], float]:
     """``map_job`` on rank-relabeled servers, mapped back to the caller's ids.
 
@@ -811,13 +872,15 @@ def map_job_canonical(
     ascending within ties, so rank order coincides with every id tiebreak
     the greedy performs.  The ``refine`` seeds may break capacity ties
     differently than physical ids would — quality is identical by
-    symmetry.)
+    symmetry.)  ``speeds`` (per-slot degradation factors, aligned with
+    ``server_caps``) ride along to the rank labels unchanged — the
+    relabeling is then a within-(class, speed) permutation.
     """
     ranked = [(i, c) for i, (_m, c) in enumerate(server_caps)]
     geoms = _rank_geoms(cluster, server_caps)
     placement, a = map_job(
         job, ranked, cluster, refine=refine, geoms=geoms,
-        reference=reference,
+        reference=reference, speeds=speeds,
     )
     return {server_caps[i][0]: x for i, x in placement.items()}, a
 
@@ -902,9 +965,22 @@ class PlacementCache:
         return ctx
 
     def map_job(
-        self, job: JobSpec, server_caps: Sequence[Tuple[int, int]]
+        self,
+        job: JobSpec,
+        server_caps: Sequence[Tuple[int, int]],
+        speeds: Optional[Tuple[float, ...]] = None,
     ) -> Tuple[Dict[int, np.ndarray], float]:
+        """``speeds``: per-slot degradation factors aligned with
+        ``server_caps`` (``ClusterState.speeds_for``), or None while no
+        server is degraded.  The cache key carries the factor tuple, so
+        relabeling stays within (capacity, class, speed) — a degraded
+        slot is never answered from a clean slot's entry or vice versa;
+        clean calls keep the original key shape and hit the same entries
+        as before.
+        """
         ids, shape = zip(*server_caps)
+        if speeds is not None and all(f == 1.0 for f in speeds):
+            speeds = None  # clean vector: share the clean entries
         if self._het:
             classes = self._classes_memo.get(ids)
             if classes is None:
@@ -916,7 +992,10 @@ class PlacementCache:
                 )
             key = (job.config_key, shape, classes)
         else:
+            classes = None
             key = (job.config_key, shape)
+        if speeds is not None:
+            key = key + (speeds,)
         lru = self._lru
         hit = lru.get(key)
         if hit is not None:
@@ -931,15 +1010,30 @@ class PlacementCache:
                 graph = self._graphs[cfg_key] = build_job_graph(job)
             if self._seeds is not None and len(self._seeds) >= self.maxsize:
                 self._seeds.clear()  # bound the seed store like _lru
-            placement, a = map_job(
-                job,
-                list(enumerate(shape)),
-                self.cluster,
-                refine=self.refine,
-                graph=graph,
-                _het_ctx=self._het_context(key[2]) if self._het else None,
-                _seed_cache=self._seeds,
-            )
+            if speeds is not None:
+                # degraded slots: per-call geometry + speed columns (rare
+                # path; the class-layout fast context is speed-agnostic)
+                placement, a = map_job(
+                    job,
+                    list(enumerate(shape)),
+                    self.cluster,
+                    refine=self.refine,
+                    graph=graph,
+                    geoms=(
+                        self._het_context(classes)[0] if self._het else None
+                    ),
+                    speeds=speeds,
+                )
+            else:
+                placement, a = map_job(
+                    job,
+                    list(enumerate(shape)),
+                    self.cluster,
+                    refine=self.refine,
+                    graph=graph,
+                    _het_ctx=self._het_context(classes) if self._het else None,
+                    _seed_cache=self._seeds,
+                )
             # every cap in the vector is fully used, so ranks 0..k-1 are
             # all present; store the stage vectors in rank order
             hit = ([placement[i] for i in range(len(ids))], a)
@@ -1009,6 +1103,7 @@ def select_servers(
     spec: Optional[ClusterSpec] = None,
     buckets: Optional[Sequence[Sequence[int]]] = None,
     total_free: Optional[int] = None,
+    ranks: Optional[Tuple[Sequence[int], Sequence[int]]] = None,
 ) -> List[Tuple[int, int]]:
     """Pick servers/GPU counts for a job (paper Alg. 1 lines 9 and 22).
 
@@ -1020,6 +1115,11 @@ def select_servers(
     equally-free servers, fragmentation-aware placement prefers the
     slowest — keeping fast-NIC capacity free for the jobs that need it.
     Homogeneous specs are unaffected (one class, id tiebreak as before).
+    ``ranks`` overrides the static spec ranks with *effective*-bandwidth
+    ranks (``ClusterState.effective_bw_ranks``) while servers are
+    degraded: among equally-free servers a straggler sorts like a
+    proportionally slower NIC, so consolidating placement avoids
+    degraded capacity whenever a healthy server offers the same count.
     ``buckets``/``total_free`` (hot path): ``ClusterState.free_buckets``
     maintained incrementally — skips the per-call counting sort; the
     bucket walk is identical because the maintained buckets hold exactly
@@ -1054,18 +1154,22 @@ def select_servers(
 
     if total < g_needed:
         raise ValueError("not enough free GPUs")
-    het = spec is not None and spec.is_heterogeneous
+    tiebreak = ranks is not None or (
+        spec is not None and spec.is_heterogeneous
+    )
     order = range(max_c, 0, -1) if consolidate else range(1, max_c + 1)
     picks: List[Tuple[int, int]] = []
     remaining = g_needed
-    if het:
-        desc_rank, asc_rank = spec.bw_order_ranks
+    if tiebreak:
+        desc_rank, asc_rank = ranks if ranks is not None else (
+            spec.bw_order_ranks
+        )
         rank = desc_rank if consolidate else asc_rank
     for c in order:
         bucket = buckets[c] if counted_get is None else counted_get(c, ())
         if not bucket:
             continue
-        if het and len(bucket) > 1:
+        if tiebreak and len(bucket) > 1:
             bucket = sorted(bucket, key=rank.__getitem__)
         for m in bucket:
             take = c if c < remaining else remaining
@@ -1110,11 +1214,12 @@ class FreeCapsSnapshot:
         total_free: int,
         spec: Optional[ClusterSpec] = None,
         buckets: Optional[Sequence[Sequence[int]]] = None,
+        ranks: Optional[Tuple[Sequence[int], Sequence[int]]] = None,
     ) -> "FreeCapsSnapshot":
         return cls(
             select_servers(
                 free, total_free, consolidate=True, spec=spec,
-                buckets=buckets, total_free=total_free,
+                buckets=buckets, total_free=total_free, ranks=ranks,
             )
         )
 
@@ -1135,3 +1240,56 @@ class FreeCapsSnapshot:
             )
             self._by_g[g] = hit
         return hit
+
+
+class ConsolidatingLadder:
+    """Snapshot-or-select ladder over one ``ClusterState``'s free capacity.
+
+    The protocol A-SRPT's step 2/3 and the migration planner share: the
+    *first* consolidating demand after any allocation runs a plain
+    ``select_servers`` (building the full-order snapshot for a single
+    carve would cost more than it saves); from the second demand on, one
+    ``FreeCapsSnapshot`` per free state serves every demand by prefix
+    carving.  Call ``reset()`` after any allocation — the sorted free
+    state the snapshot captured no longer exists.  ``ranks`` (effective-
+    bandwidth tiebreak) is fixed at construction: allocations never
+    change speed factors, so it stays valid across resets within one
+    scheduling pass / migration sweep.
+
+    ``cluster`` is duck-typed (``free``/``free_buckets``/``total_free``)
+    to keep this module import-cycle-free with cluster.py.
+    """
+
+    __slots__ = ("cluster", "spec", "ranks", "_snapshot", "_selected_once")
+
+    def __init__(self, cluster, spec: Optional[ClusterSpec], ranks=None):
+        self.cluster = cluster
+        self.spec = spec
+        self.ranks = ranks
+        self._snapshot: Optional[FreeCapsSnapshot] = None
+        self._selected_once = False
+
+    def caps_for(self, g_need: int) -> tuple:
+        cluster = self.cluster
+        if self._snapshot is not None:
+            return self._snapshot.caps_for(g_need)
+        if self._selected_once:
+            self._snapshot = FreeCapsSnapshot.consolidating(
+                cluster.free, cluster.total_free, self.spec,
+                buckets=cluster.free_buckets, ranks=self.ranks,
+            )
+            return self._snapshot.caps_for(g_need)
+        self._selected_once = True
+        return tuple(
+            select_servers(
+                cluster.free, g_need,
+                consolidate=True, spec=self.spec,
+                buckets=cluster.free_buckets,
+                total_free=cluster.total_free,
+                ranks=self.ranks,
+            )
+        )
+
+    def reset(self) -> None:
+        self._snapshot = None
+        self._selected_once = False

@@ -146,6 +146,28 @@ class ServerClass:
 ServerGeom = Tuple[int, float, float]
 
 
+def build_bw_ranks(
+    bandwidths: Sequence[float],
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Per-server positions in the ``(-bw, id)`` and ``(bw, id)`` orderings.
+
+    The one definition of the ``select_servers`` bandwidth-tiebreak rank
+    construction, shared by the static ``ClusterSpec.bw_order_ranks``
+    (class NIC bandwidths) and the dynamic
+    ``ClusterState.effective_bw_ranks`` (bandwidth x speed factor).
+    """
+    n = len(bandwidths)
+    desc = sorted(range(n), key=lambda m: (-bandwidths[m], m))
+    asc = sorted(range(n), key=lambda m: (bandwidths[m], m))
+    desc_rank = [0] * n
+    asc_rank = [0] * n
+    for r, m in enumerate(desc):
+        desc_rank[m] = r
+    for r, m in enumerate(asc):
+        asc_rank[m] = r
+    return tuple(desc_rank), tuple(asc_rank)
+
+
 @dataclass(frozen=True)
 class ClusterSpec:
     """Cluster of M servers (paper Sec. III, extended to mixed generations).
@@ -258,16 +280,9 @@ class ClusterSpec:
         tiebreaks, precomputed once so the per-event hot path sorts
         buckets on a plain indexed int key instead of a geometry lookup.
         """
-        n = self.num_servers
-        desc = sorted(range(n), key=lambda m: (-self.server_geom(m)[1], m))
-        asc = sorted(range(n), key=lambda m: (self.server_geom(m)[1], m))
-        desc_rank = [0] * n
-        asc_rank = [0] * n
-        for r, m in enumerate(desc):
-            desc_rank[m] = r
-        for r, m in enumerate(asc):
-            asc_rank[m] = r
-        return tuple(desc_rank), tuple(asc_rank)
+        return build_bw_ranks(
+            [self.server_geom(m)[1] for m in range(self.num_servers)]
+        )
 
 
 Placement = dict  # {server_id: np.ndarray[S_i]} -- x_{i,s}^m, see timing.py

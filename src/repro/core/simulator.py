@@ -22,6 +22,20 @@ Hot-path design (trace scale):
 
 Policies observe only online information: arrivals as they happen, true
 iteration counts only at completion (fed to the predictor).
+
+Degradation events (stragglers): ``degradations=[(t, server, factor)]``
+scales a server's effective speed mid-run (see cluster.py / timing.py).
+Running jobs touching the server are *re-timed*: their remaining
+iterations are brought to ``t`` under the old alpha, a new alpha is
+evaluated under the updated speed map, and the completion event is
+re-issued.  Completion events are therefore epoch-tagged per job (like
+wakes): superseded completions stay in the heap and are dropped on pop.
+A ``factor == 0.0`` event takes the PR-2 fault path verbatim (capacity
+forfeited, running jobs finish in place, no re-timing) — ``faults=`` is
+now sugar for factor-0.0 degradations.  After re-timing, the policy's
+``plan_migrations`` hook may checkpoint-restart affected jobs onto
+fresh capacity (see migration.py); the simulator re-times migrated jobs
+with the restart penalty and updates their records in place.
 """
 from __future__ import annotations
 
@@ -49,12 +63,52 @@ class Start:
 
 
 @dataclass(slots=True)
+class Migration:
+    """A checkpoint-restart decision returned by ``Policy.plan_migrations``.
+
+    The policy has already released the job's old allocation and allocated
+    ``placement`` (policies own their allocations, as with ``Start``); the
+    simulator re-times the job: remaining iterations resume at ``alpha``
+    after ``penalty`` seconds of checkpoint-restart downtime.
+    """
+
+    job: JobSpec
+    placement: Dict[int, np.ndarray]
+    alpha: float
+    penalty: float
+
+
+@dataclass(slots=True)
 class JobRecord:
     arrival: float
     start: float
     completion: float
     alpha: float
     servers: Tuple[int, ...]
+    migrations: int = 0
+
+
+@dataclass(slots=True)
+class _Running:
+    """Live bookkeeping for one started job (degradation re-timing).
+
+    ``iters_rem`` is the remaining iteration count as of ``since`` —
+    which is the time the job last (re)started *computing*: after a
+    migration ``since`` sits at ``t + penalty``, so the checkpoint-
+    restart downtime is never credited as productive work if another
+    event re-times the job mid-restart (re-timings subtract elapsed
+    iterations only for ``t > since``).  The live completion event
+    carries ``epoch`` — re-timing bumps it, turning the superseded event
+    into a stale heap entry.  Instances double as the read-only views
+    handed to ``Policy.plan_migrations``.
+    """
+
+    job: JobSpec
+    placement: Dict[int, np.ndarray]
+    alpha: float
+    iters_rem: float
+    since: float
+    epoch: int = 0
 
 
 @dataclass
@@ -64,6 +118,7 @@ class SimResult:
     n_events: int = 0
     n_sched_passes: int = 0
     peak_queue_depth: int = 0
+    n_migrations: int = 0
     wall_s: float = 0.0
 
     @property
@@ -97,6 +152,11 @@ class Policy:
     allocation is kept (the simulator releases it at the job's completion).
     """
 
+    # Opt-in for the degradation migration hook: the simulator maintains
+    # the straggler watchlist and calls ``plan_migrations`` only when this
+    # is truthy (MigrationMixin exposes it as a constructor arg).
+    migrate: bool = False
+
     def bind(self, cluster_spec: ClusterSpec) -> None:
         self.cluster_spec = cluster_spec
 
@@ -112,6 +172,21 @@ class Policy:
     def next_wakeup(self, t: float) -> Optional[float]:
         return None
 
+    def plan_migrations(
+        self, t: float, cluster: ClusterState, candidates: List["_Running"]
+    ) -> List[Migration]:
+        """Degradation hook: while any job is running on degraded
+        capacity, called before every scheduling pass with those jobs as
+        read-only views (so capacity freed by completions since the
+        degradation event is still exploitable).  A migrating policy
+        releases the old allocation, allocates the new placement, and
+        returns a ``Migration`` per moved job (see migration.py); the
+        default never migrates.  Only called when ``self.migrate`` is
+        truthy (non-migrating policies skip the watchlist bookkeeping
+        entirely); never called on clean runs.
+        """
+        return []
+
     def queue_depth(self) -> int:
         """Jobs held by the policy (pending + delayed); for engine stats."""
         return 0
@@ -123,6 +198,7 @@ def simulate(
     policy: Policy,
     validate: bool = True,
     faults: Optional[Sequence[Tuple[float, int]]] = None,
+    degradations: Optional[Sequence[Tuple[float, int, float]]] = None,
 ) -> SimResult:
     """Run ``policy`` over ``jobs``; returns per-job records + engine stats.
 
@@ -135,6 +211,16 @@ def simulate(
     bump wakes incremental policies out of their settled state.  Jobs
     whose GPU demand exceeds the *degraded* cluster capacity can never
     start; the end-of-run unfinished-jobs check reports them.
+
+    ``degradations``: (time, server_id, speed_factor) straggler events.
+    ``factor`` in (0, 1) slows the server (compute + NIC stretch by
+    ``1/factor``), 1.0 restores it, > 1.0 models a boost, and exactly
+    0.0 is a full failure — identical to a ``faults`` entry at the same
+    time (the two sequences share one event stream).  Running jobs
+    touching a ``factor > 0`` change are re-timed at the event and
+    offered to ``policy.plan_migrations``; a repeated factor equal to
+    the server's current speed is a no-op and triggers no scheduling
+    pass, so an all-1.0 schedule is bit-identical to the clean run.
     """
     import time as _time
 
@@ -153,19 +239,46 @@ def simulate(
     seq = itertools.count()
     # (time, kind, seq-or-epoch, payload); kind breaks time ties
     # (completions/faults before arrivals before wakes), seq keeps sorts
-    # stable.  Payload: the JobSpec for completions/arrivals, the server id
-    # for faults, None for wakes.
+    # stable.  Payload: (JobSpec, completion-epoch) for completions, the
+    # JobSpec for arrivals, (server id, factor) for faults/degradations,
+    # None for wakes.
     events: List[Tuple[float, int, int, object]] = [
         (job.arrival, _ARRIVAL, next(seq), job) for job in jobs
     ]
     for fault_t, server_id in faults or ():
-        events.append((fault_t, _FAULT, next(seq), server_id))
+        events.append((fault_t, _FAULT, next(seq), (server_id, 0.0)))
+    track_running = False  # any factor > 0 event => re-timing bookkeeping
+    for deg_t, server_id, factor in degradations or ():
+        if factor < 0.0:
+            raise ValueError(f"speed factor must be >= 0, got {factor}")
+        if factor > 0.0:
+            track_running = True
+        events.append((deg_t, _FAULT, next(seq), (server_id, factor)))
     heapq.heapify(events)
+    # watchlist + plan_migrations only for policies that opted in: the
+    # hook of a non-migrating policy returns [] unconditionally, so the
+    # per-pass candidate bookkeeping would be pure overhead
+    offer_migrations = track_running and bool(
+        getattr(policy, "migrate", False)
+    )
 
     n_completed = 0
     n_events = 0
     peak_depth = 0
     n_passes = 0
+    n_migrations = 0
+    # job_id -> live bookkeeping (placement, remaining iterations, the
+    # epoch of the one non-stale completion event).  Only maintained when
+    # a factor > 0 event exists: re-timing is the sole producer of stale
+    # completions, so clean/fault-only runs skip the registry entirely
+    # (measured ~10-20% of the cheap baselines' event cost at 5k jobs).
+    running: Dict[int, _Running] = {}
+    # Jobs currently running on degraded (factor < 1) capacity: they are
+    # (re-)offered to ``plan_migrations`` on every scheduling pass while
+    # the set is non-empty — a saturated cluster often has nowhere to
+    # migrate *at* the degradation event, but completions free capacity
+    # moments later.  Empty on clean runs (the hook is never called).
+    straggler_watch: set = set()
     # Single live wake: stale wake events carry an older epoch and are
     # dropped on pop without triggering a scheduling pass.
     wake_epoch = 0
@@ -181,20 +294,41 @@ def simulate(
     while events:
         t = events[0][0]
         live = False  # any non-stale event at this timestamp?
+        speed_changed: List[int] = []  # servers re-sped at t (factor > 0)
+        downed: List[int] = []  # servers killed at t (factor == 0)
         while events and events[0][0] == t:
             _, kind, tag, payload = heappop(events)
             n_events += 1
             if kind == _COMPLETION:
-                release(payload.job_id)
-                on_completion(t, payload)
+                job, ep = payload
+                if track_running:
+                    r = running.get(job.job_id)
+                    if r is None or ep != r.epoch:
+                        continue  # superseded by a re-timing: stale entry
+                    del running[job.job_id]
+                    straggler_watch.discard(job.job_id)
+                release(job.job_id)
+                on_completion(t, job)
                 n_completed += 1
                 live = True
             elif kind == _ARRIVAL:
                 on_arrival(t, payload)
                 live = True
             elif kind == _FAULT:
-                cluster.mark_server_down(payload)
-                live = True
+                server_id, factor = payload
+                if factor == 0.0:
+                    # full failure: the PR-2 fault path verbatim (capacity
+                    # forfeited; running jobs finish in place, un-re-timed)
+                    cluster.mark_server_down(server_id)
+                    if track_running:
+                        downed.append(server_id)
+                    live = True
+                elif cluster.set_server_speed(server_id, factor):
+                    speed_changed.append(server_id)
+                    live = True
+                # else: factor equals the current speed — a no-op event
+                # (neither re-timing nor a scheduling pass; keeps all-1.0
+                # degradation schedules identical to clean runs)
             else:  # _WAKE: no state change; just triggers a scheduling pass.
                 if tag == wake_epoch:
                     wake_time = None
@@ -202,6 +336,111 @@ def simulate(
                 # else: superseded wake — ignore.
         if not live:
             continue
+
+        if downed and straggler_watch:
+            # A job whose placement touches a *dead* server can never
+            # checkpoint-restart (its checkpoint state lived there): drop
+            # it from the watch — it finishes in place, PR-2 style.
+            dead = set(downed)
+            for jid in [
+                j for j in straggler_watch
+                if not dead.isdisjoint(running[j].placement)
+            ]:
+                straggler_watch.discard(jid)
+
+        if speed_changed:
+            # Re-time every running job touching a re-sped server under the
+            # final (post-drain) speed map; jobs left on degraded capacity
+            # join the straggler watchlist.
+            changed = set(speed_changed)
+            speeds = cluster.speed_factors
+            down = cluster.downed_servers
+            for jid, r in running.items():
+                if changed.isdisjoint(r.placement):
+                    continue
+                if not down.isdisjoint(r.placement):
+                    # straddles a dead server: it finishes in place at its
+                    # last re-timed alpha (PR-2).  Re-timing here would
+                    # evaluate the dead server at full speed — its _speed
+                    # entry died with it — shrinking the completion.
+                    continue
+                if t > r.since:
+                    r.iters_rem -= (t - r.since) / r.alpha
+                    if r.iters_rem < 0.0:
+                        r.iters_rem = 0.0
+                    r.since = t
+                a_new = timing.alpha(
+                    r.job, r.placement, cluster_spec,
+                    speeds=speeds or None,
+                )
+                if a_new != r.alpha:
+                    r.alpha = a_new
+                    r.epoch += 1
+                    # r.since == t normally; for a job still inside a
+                    # migration's restart window (since > t) the pending
+                    # downtime is preserved, not re-counted as progress
+                    completion = r.since + r.iters_rem * a_new
+                    rec = records[jid]
+                    rec.alpha = a_new
+                    rec.completion = completion
+                    heappush(
+                        events,
+                        (completion, _COMPLETION, next(seq), (r.job, r.epoch)),
+                    )
+                # (dead-straddlers never reach here — the `continue`
+                # above — so no downed-server check is needed)
+                if (
+                    offer_migrations
+                    and speeds
+                    and not speeds.keys().isdisjoint(r.placement)
+                ):
+                    straggler_watch.add(jid)
+                else:
+                    straggler_watch.discard(jid)
+
+        if straggler_watch:
+            speeds = cluster.speed_factors
+            if not speeds:
+                # every straggler recovered or died (a downed server's jobs
+                # finish in place at their last re-timed alpha — PR-2)
+                straggler_watch.clear()
+            else:
+                candidates: List[_Running] = []
+                for jid in sorted(straggler_watch):
+                    r = running[jid]
+                    if t > r.since:
+                        # bring remaining-iteration bookkeeping to t so the
+                        # stay-vs-move race compares current quantities
+                        r.iters_rem -= (t - r.since) / r.alpha
+                        if r.iters_rem < 0.0:
+                            r.iters_rem = 0.0
+                        r.since = t
+                    candidates.append(r)
+                for mig in policy.plan_migrations(t, cluster, candidates):
+                    job = mig.job
+                    if validate:
+                        timing.validate_placement(job, mig.placement)
+                    r = running[job.job_id]
+                    r.placement = mig.placement
+                    r.alpha = mig.alpha
+                    r.epoch += 1
+                    # computing resumes only after the restart downtime;
+                    # parking ``since`` there keeps later re-timings from
+                    # crediting the penalty window as iterations done
+                    r.since = t + mig.penalty
+                    completion = r.since + r.iters_rem * mig.alpha
+                    rec = records[job.job_id]
+                    rec.alpha = mig.alpha
+                    rec.completion = completion
+                    rec.servers = tuple(sorted(mig.placement))
+                    rec.migrations += 1
+                    n_migrations += 1
+                    heappush(
+                        events,
+                        (completion, _COMPLETION, next(seq), (job, r.epoch)),
+                    )
+                    if speeds.keys().isdisjoint(mig.placement):
+                        straggler_watch.discard(job.job_id)
 
         for start in schedule(t, cluster):
             job = start.job
@@ -217,7 +456,23 @@ def simulate(
                 # touched servers are exactly the placement keys
                 servers=tuple(sorted(start.placement)),
             )
-            heappush(events, (completion, _COMPLETION, next(seq), job))
+            if track_running:
+                running[job.job_id] = _Running(
+                    job=job,
+                    placement=start.placement,
+                    alpha=start.alpha,
+                    iters_rem=float(job.n_iters),
+                    since=t,
+                )
+                # a job *started* onto degraded capacity (a straggler can
+                # still hold the most free GPUs) is as migratable as one
+                # caught there by the event; placements never touch downed
+                # servers, so no dead-server check is needed here
+                if offer_migrations:
+                    sp = cluster.speed_factors
+                    if sp and not sp.keys().isdisjoint(start.placement):
+                        straggler_watch.add(job.job_id)
+            heappush(events, (completion, _COMPLETION, next(seq), (job, 0)))
         n_passes += 1
         depth = queue_depth()
         if depth > peak_depth:
@@ -235,6 +490,7 @@ def simulate(
     result.n_events = n_events
     result.n_sched_passes = n_passes
     result.peak_queue_depth = peak_depth
+    result.n_migrations = n_migrations
     result.wall_s = _time.perf_counter() - wall0
     return result
 

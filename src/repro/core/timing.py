@@ -18,6 +18,15 @@ Per-stage, per-server time  beta_{i,s}^m = comp + comm + AllReduce:
 
 alpha_i (Eq. 7) = max over (server, stage) of beta — the bottleneck stage of
 the fully-pipelined (asynchronous) execution.
+
+Degradation (straggler) support: a per-server *speed factor* ``f`` models a
+partially-degraded server (thermally throttled GPUs, slowed NIC).  It
+scales the server's effective compute throughput and both bandwidths by
+``f`` at once, so every stage term evaluated on that server stretches by
+exactly ``1/f`` — the whole ``beta`` is divided by ``f`` as the final
+operation, identically on the scalar reference and the array engine (the
+two stay bit-identical under degradation).  ``speeds`` mappings are
+sparse: absent servers are at full speed.
 """
 from __future__ import annotations
 
@@ -119,21 +128,28 @@ def beta(
     s: int,
     cluster: ClusterSpec,
     geom: Optional[ServerGeom] = None,
+    speed: float = 1.0,
 ) -> float:
     """beta_{i,s}^m: per-iteration time of stage ``s`` on one server.
 
     ``geom`` identifies the server's class geometry on heterogeneous
-    clusters (``None`` = the homogeneous cluster-wide values).
+    clusters (``None`` = the homogeneous cluster-wide values).  ``speed``
+    is the server's degradation factor: compute and bandwidths all scale
+    by it, so the whole term is divided by it (a lone final division —
+    ``speed == 1.0`` leaves the clean float chain untouched).
     """
     if int(x_m[s]) == 0:
         return 0.0
     st = job.stages[s]
     comp = st.p_f + st.p_b  # Eq. (4)
-    return (
+    b = (
         comp
         + _stage_comm_time(job, x_m, s, cluster, geom=geom)
         + _stage_allreduce_time(job, x_m, s, cluster, geom=geom)
     )
+    if speed != 1.0:
+        b = b / speed
+    return b
 
 
 def alpha_reference(
@@ -141,12 +157,14 @@ def alpha_reference(
     placement: Mapping[int, np.ndarray],
     cluster: ClusterSpec,
     geoms: Optional[Geoms] = None,
+    speeds: Optional[Mapping[int, float]] = None,
 ) -> float:
     """Pure-Python Eq. (7): max over (server, stage) of ``beta`` calls.
 
     Retained as the property-test reference for the array-native ``alpha``
     (tests/test_vectorized.py) and used by the reference engine
-    (``heavy_edge.map_job(..., reference=True)``).
+    (``heavy_edge.map_job(..., reference=True)``).  ``speeds``: sparse
+    per-server degradation factors (keys match the placement's).
     """
     het = geoms is not None or cluster.is_heterogeneous
     best = 0.0
@@ -156,9 +174,10 @@ def alpha_reference(
             geom = geoms[m] if geoms is not None else cluster.server_geom(m)
         else:
             geom = None
+        f = speeds.get(m, 1.0) if speeds else 1.0
         for s in range(job.num_stages):
             if x_m[s] > 0:
-                b = beta(job, x_m, s, cluster, geom=geom)
+                b = beta(job, x_m, s, cluster, geom=geom, speed=f)
                 if b > best:
                     best = b
     return best
@@ -220,10 +239,12 @@ def config_arrays(job: JobSpec) -> _ConfigArrays:
 _SCALAR_CELLS = 64  # below this, Python scalars beat numpy dispatch
 
 
-def _alpha_rows_scalar(ca, rows, g_l, bi_l, bx_l):
+def _alpha_rows_scalar(ca, rows, g_l, bi_l, bx_l, f_l=None):
     """Scalar evaluation of ``alpha_matrix`` for a list of K x S int-list
     placements — the identical IEEE operation chain on Python floats, used
-    when the whole batch is smaller than numpy's per-op dispatch cost."""
+    when the whole batch is smaller than numpy's per-op dispatch cost.
+    ``f_l``: optional per-server speed factors (divides each cell like the
+    reference's final ``b / speed``)."""
     S = ca.S
     comp = ca.comp_l
     tdi, tdo = ca.tdi_l, ca.tdo_l
@@ -234,6 +255,7 @@ def _alpha_rows_scalar(ca, rows, g_l, bi_l, bx_l):
         best = 0.0
         for m, xm in enumerate(Xr):
             g_m, bi_m, bx_m = g_l[m], bi_l[m], bx_l[m]
+            f_m = f_l[m] if f_l is not None else 1.0
             for s in range(S):
                 x = xm[s]
                 if x <= 0:
@@ -261,13 +283,15 @@ def _alpha_rows_scalar(ca, rows, g_l, bi_l, bx_l):
                         core = core + ar_d[s] / bx_m
                     else:
                         core = core + ar_d[s] * x / nic
+                if f_m != 1.0:
+                    core = core / f_m
                 if core > best:
                     best = core
         out.append(best)
     return out
 
 
-def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra):
+def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra, speed=None):
     """Eqs. (4)-(7) for whole placements as one (servers x stages) array
     expression.
 
@@ -275,6 +299,9 @@ def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra):
     refine path evaluates every candidate placement in one call).
     ``g``/``b_inter``/``b_intra``: scalars on homogeneous clusters, or
     per-server ``(K, 1)`` arrays carrying each rank's class geometry.
+    ``speed``: optional ``(K, 1)`` per-server degradation factors — each
+    server's beta row is divided by its factor as the final op, mirroring
+    the reference's ``b / speed``.
     Returns a float for 2-D ``X``, else a ``(B,)`` array of alphas.
 
     Bit-identical to ``alpha_reference``: every elementwise op mirrors the
@@ -294,9 +321,14 @@ def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra):
             g_l = [g] * K
             bi_l = [b_inter] * K
             bx_l = [b_intra] * K
+        f_l = speed.ravel().tolist() if speed is not None else None
         if X.ndim == 2:
-            return _alpha_rows_scalar(ca, [X.tolist()], g_l, bi_l, bx_l)[0]
-        return np.array(_alpha_rows_scalar(ca, X.tolist(), g_l, bi_l, bx_l))
+            return _alpha_rows_scalar(
+                ca, [X.tolist()], g_l, bi_l, bx_l, f_l
+            )[0]
+        return np.array(
+            _alpha_rows_scalar(ca, X.tolist(), g_l, bi_l, bx_l, f_l)
+        )
     Xf = X.astype(np.float64)
     pos = X > 0
     S = ca.S
@@ -327,6 +359,10 @@ def alpha_matrix(job: JobSpec, X: np.ndarray, g, b_inter, b_intra):
     else:
         core = ca.comp + comm if comm is not None else ca.comp
     beta_ = np.where(pos, core, 0.0)
+    if speed is not None:
+        # per-server stretch: same final division as the scalar chain
+        # (masked zeros stay exact zeros — factors are > 0)
+        beta_ = beta_ / speed
     if X.ndim == 2:
         return float(beta_.max())
     return beta_.reshape(X.shape[0], -1).max(axis=1)
@@ -349,6 +385,7 @@ def alpha(
     placement: Mapping[int, np.ndarray],
     cluster: ClusterSpec,
     geoms: Optional[Geoms] = None,
+    speeds: Optional[Mapping[int, float]] = None,
 ) -> float:
     """Eq. (7): alpha_i = max over (server, stage) of beta_{i,s}^m.
 
@@ -358,6 +395,8 @@ def alpha(
     rank-relabeled mapping, whose placement keys are ranks, not physical
     server ids); without it heterogeneous specs resolve each key through
     ``cluster.server_geom``, homogeneous specs use the cluster scalars.
+    ``speeds``: sparse per-server degradation factors (see module doc);
+    an empty/None mapping is the clean fast path.
     """
     if not placement:
         return 0.0
@@ -369,7 +408,13 @@ def alpha(
         g, bi, bx = _geom_columns(ms, cluster, geoms)
     else:
         g, bi, bx = cluster.gpus_per_server, cluster.b_inter, cluster.b_intra
-    return alpha_matrix(job, X, g, bi, bx)
+    f_col = None
+    if speeds:
+        get = speeds.get
+        fs = [get(m, 1.0) for m in ms]
+        if any(f != 1.0 for f in fs):
+            f_col = np.array(fs)[:, None]
+    return alpha_matrix(job, X, g, bi, bx, speed=f_col)
 
 
 def validate_placement(

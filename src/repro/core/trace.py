@@ -15,7 +15,7 @@ scheduling problem:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -70,6 +70,58 @@ def mixed_cluster_spec(
         )
     ]
     return ClusterSpec.heterogeneous(classes, b_intra=b_intra)
+
+
+def straggler_events(
+    num_servers: int,
+    horizon: float,
+    n_stragglers: int = 4,
+    seed: int = 0,
+    factor_low: float = 0.25,
+    factor_high: float = 0.75,
+    start_frac: Tuple[float, float] = (0.2, 0.6),
+    duration_frac: float = 0.25,
+    recover: bool = True,
+) -> List[Tuple[float, int, float]]:
+    """Sample timed slowdown events for ``simulate(degradations=...)``.
+
+    Production characterization (Hu et al., arXiv 2109.01313) attributes
+    most tail slowdown to *partial* degradation — thermally throttled
+    GPUs, flapping NICs — rather than outright failures.  This sampler
+    draws ``n_stragglers`` distinct servers, each slowing to a factor in
+    ``[factor_low, factor_high]`` at a time inside
+    ``start_frac * horizon`` (mid-trace, so the cluster is loaded);
+    ``recover=True`` pairs every slowdown with a return-to-1.0 event
+    ``duration_frac * horizon`` later (clamped inside the horizon), so a
+    finish-in-place policy pays the stretch while a migrating one can
+    route around it.
+
+    Deterministic per seed; events are returned time-sorted.
+    """
+    if n_stragglers > num_servers:
+        raise ValueError(
+            f"{n_stragglers} stragglers > {num_servers} servers"
+        )
+    if not 0.0 < factor_low <= factor_high:
+        raise ValueError("factors must satisfy 0 < low <= high")
+    rng = np.random.default_rng(seed)
+    servers = rng.choice(num_servers, size=n_stragglers, replace=False)
+    starts = rng.uniform(
+        start_frac[0] * horizon, start_frac[1] * horizon, size=n_stragglers
+    )
+    factors = rng.uniform(factor_low, factor_high, size=n_stragglers)
+    events: List[Tuple[float, int, float]] = [
+        (float(t), int(m), float(f))
+        for t, m, f in zip(starts, servers, factors)
+    ]
+    if recover:
+        dur = duration_frac * horizon
+        events.extend(
+            (float(min(t + dur, horizon)), int(m), 1.0)
+            for t, m in zip(starts, servers)
+        )
+    events.sort()
+    return events
 
 
 @dataclass

@@ -1,0 +1,559 @@
+"""Degradation-aware scheduling: stragglers, re-timing, and migration.
+
+The two anchor properties (ISSUE 4):
+
+* a straggler run whose events all carry ``speed_factor == 1.0`` — even
+  with a migration-capable policy whose penalty is infinite — is
+  *bit-identical* to the clean run;
+* a ``speed_factor == 0.0`` event reproduces the PR-2 fault path exactly
+  (``faults=[(t, m)]`` and ``degradations=[(t, m, 0.0)]`` are the same
+  event).
+
+Plus: the cached array-native engine stays bit-identical to the uncached
+pure-Python reference engine *under* degradation and migration, re-timing
+math is exact, migration strictly helps when idle healthy capacity
+exists, and placement avoids degraded capacity via the effective-
+bandwidth tiebreak.
+"""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.sched
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ASRPTPolicy,
+    BASELINES,
+    ClusterSpec,
+    ServerClass,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+    straggler_events,
+)
+from repro.core import timing
+from repro.core.cluster import ClusterState
+from repro.core.heavy_edge import PlacementCache, map_job_canonical
+
+from conftest import make_simple_job
+
+INF = float("inf")
+
+
+def assert_identical(ra, rb):
+    assert set(ra.records) == set(rb.records)
+    for jid, a in ra.records.items():
+        b = rb.records[jid]
+        assert a.start == b.start, jid
+        assert a.completion == b.completion, jid
+        assert a.alpha == b.alpha, jid
+        assert a.servers == b.servers, jid
+        assert a.migrations == b.migrations, jid
+
+
+def _hom_cluster(n=6):
+    return ClusterSpec(
+        num_servers=n, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+def _het_cluster():
+    return ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=3, gpus_per_server=8, b_inter=12.5e9, name="a"),
+            ServerClass(count=3, gpus_per_server=8, b_inter=1.25e9, name="b"),
+            ServerClass(
+                count=3, gpus_per_server=4, b_inter=1.25e9, b_intra=50e9,
+                name="c",
+            ),
+        ],
+        b_intra=300e9,
+    )
+
+
+def _trace(seed, n_jobs=120, horizon=1500.0, max_g=16):
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=horizon,
+            seed=seed,
+            single_gpu_frac=0.4,
+            max_gpus_per_job=max_g,
+        )
+    )
+
+
+def _asrpt(**kw):
+    return ASRPTPolicy(make_predictor("mean"), tau=2.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# anchor property 1: all-1.0 events are invisible
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_unit_speed_events_bit_identical_to_clean(seed):
+    cluster = _hom_cluster()
+    jobs = _trace(seed)
+    events = straggler_events(
+        cluster.num_servers, 1500.0, n_stragglers=3, seed=seed,
+        factor_low=1.0, factor_high=1.0,
+    )
+    assert all(f == 1.0 for _t, _m, f in events)
+    clean = simulate(jobs, cluster, _asrpt())
+    noop = simulate(
+        jobs, cluster, _asrpt(migrate=True, migration_penalty=INF),
+        degradations=events,
+    )
+    assert_identical(clean, noop)
+    assert noop.n_migrations == 0
+
+
+def test_unit_speed_events_bit_identical_hetero_and_baselines():
+    cluster = _het_cluster()
+    jobs = _trace(5, max_g=24)
+    events = [(100.0, 1, 1.0), (400.0, 7, 1.0), (401.0, 1, 1.0)]
+    clean = simulate(
+        jobs, cluster, _asrpt(refine_mapping=True)
+    )
+    noop = simulate(
+        jobs, cluster,
+        _asrpt(refine_mapping=True, migrate=True, migration_penalty=INF),
+        degradations=events,
+    )
+    assert_identical(clean, noop)
+    for name in ("SPJF", "WCS-SubTime"):
+        pa = BASELINES[name](make_predictor("mean"))
+        pb = BASELINES[name](
+            make_predictor("mean"), migrate=True, migration_penalty=INF
+        )
+        assert_identical(
+            simulate(jobs, cluster, pa),
+            simulate(jobs, cluster, pb, degradations=events),
+        )
+
+
+# ---------------------------------------------------------------------------
+# anchor property 2: factor 0.0 == the PR-2 fault path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_zero_factor_reproduces_fault_path(seed):
+    cluster = _hom_cluster()
+    jobs = _trace(seed)
+    rng = np.random.default_rng(seed)
+    server = int(rng.integers(0, cluster.num_servers))
+    t_fault = float(rng.uniform(50.0, 1200.0))
+    via_fault = simulate(jobs, cluster, _asrpt(), faults=[(t_fault, server)])
+    via_deg = simulate(
+        jobs, cluster, _asrpt(), degradations=[(t_fault, server, 0.0)]
+    )
+    assert_identical(via_fault, via_deg)
+    # ... and a migration-capable policy changes nothing either: running
+    # jobs on a *downed* server are never re-timed or offered (PR-2
+    # finish-in-place semantics).
+    via_deg_mig = simulate(
+        jobs, cluster, _asrpt(migrate=True, migration_penalty=0.0),
+        degradations=[(t_fault, server, 0.0)],
+    )
+    assert_identical(via_fault, via_deg_mig)
+
+
+# ---------------------------------------------------------------------------
+# cached == uncached under degradation + migration
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cached_equals_uncached_under_degradation(seed):
+    cluster = _hom_cluster()
+    jobs = _trace(seed, n_jobs=80)
+    events = straggler_events(
+        cluster.num_servers, 1500.0, n_stragglers=2, seed=seed,
+        factor_low=0.25, factor_high=0.75,
+    )
+    results = []
+    for cache in (True, False):
+        pol = _asrpt(
+            placement_cache=cache, migrate=True, migration_penalty=30.0
+        )
+        results.append(
+            simulate(jobs, cluster, pol, degradations=events)
+        )
+    assert_identical(*results)
+
+
+def test_cached_equals_uncached_under_degradation_hetero_refine():
+    cluster = _het_cluster()
+    jobs = _trace(9, n_jobs=80, max_g=24)
+    events = [(200.0, 0, 0.3), (300.0, 4, 0.5), (800.0, 0, 1.0)]
+    results = []
+    for cache in (True, False):
+        pol = _asrpt(
+            refine_mapping=True, placement_cache=cache,
+            migrate=True, migration_penalty=30.0,
+        )
+        results.append(simulate(jobs, cluster, pol, degradations=events))
+    assert_identical(*results)
+
+
+# ---------------------------------------------------------------------------
+# re-timing math
+# ---------------------------------------------------------------------------
+
+
+def test_single_job_stretch_is_exact():
+    """A mid-run slowdown stretches the remaining iterations by 1/f."""
+    cluster = ClusterSpec(
+        num_servers=1, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=1000)
+    clean = simulate([job], cluster, _asrpt())
+    a0 = clean.records[0].alpha
+    t_ev = 37.0
+    assert t_ev < clean.records[0].completion
+    f = 0.25  # power of two: a0 / f is exact
+    deg = simulate(
+        [job], cluster, _asrpt(), degradations=[(t_ev, 0, f)]
+    )
+    rec = deg.records[0]
+    iters_rem = 1000.0 - (t_ev - 0.0) / a0
+    assert rec.alpha == a0 / f
+    assert rec.completion == t_ev + iters_rem * (a0 / f)
+
+
+def test_recovery_shrinks_completion_again():
+    cluster = ClusterSpec(
+        num_servers=1, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=200)
+    clean = simulate([job], cluster, _asrpt())
+    slow_only = simulate(
+        [job], cluster, _asrpt(), degradations=[(5.0, 0, 0.5)]
+    )
+    recovered = simulate(
+        [job], cluster, _asrpt(),
+        degradations=[(5.0, 0, 0.5), (10.0, 0, 1.0)],
+    )
+    c_clean = clean.records[0].completion
+    c_slow = slow_only.records[0].completion
+    c_rec = recovered.records[0].completion
+    assert c_clean < c_rec < c_slow
+    # after recovery the job runs at the clean rate again
+    assert recovered.records[0].alpha == clean.records[0].alpha
+
+
+# ---------------------------------------------------------------------------
+# migration behavior
+# ---------------------------------------------------------------------------
+
+
+def _two_server_spec():
+    return ClusterSpec(
+        num_servers=2, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+def test_migration_moves_job_off_straggler():
+    """One long job on server 0, server 1 idle: a deep slowdown makes the
+    checkpoint-restart race an easy win; the record must show the move."""
+    cluster = _two_server_spec()
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=500)
+    stay = simulate(
+        [job], cluster, _asrpt(), degradations=[(10.0, 0, 0.1)]
+    )
+    move = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=5.0),
+        degradations=[(10.0, 0, 0.1)],
+    )
+    assert stay.n_migrations == 0
+    assert move.n_migrations == 1
+    assert move.records[0].migrations == 1
+    assert move.records[0].servers == (1,)
+    assert move.records[0].completion < stay.records[0].completion
+    # stay keeps the stretched placement on the straggler
+    assert stay.records[0].servers == (0,)
+
+
+def test_migration_respects_infinite_penalty():
+    cluster = _two_server_spec()
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=500)
+    stay = simulate(
+        [job], cluster, _asrpt(), degradations=[(10.0, 0, 0.1)]
+    )
+    never = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=INF),
+        degradations=[(10.0, 0, 0.1)],
+    )
+    assert_identical(stay, never)
+
+
+def test_migration_waits_for_capacity_freed_later():
+    """At the event the cluster is full; a completion then frees healthy
+    capacity and the straggler migrates on that later pass."""
+    cluster = _two_server_spec()
+    # long job fills server 0, short job fills server 1
+    long_job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=2000)
+    short_job = make_simple_job(job_id=1, replicas=(2, 2), n_iters=50)
+    pol = _asrpt(migrate=True, migration_penalty=1.0)
+    res = simulate(
+        [long_job, short_job], cluster, pol,
+        degradations=[(1.0, 0, 0.1)],
+    )
+    # server 0 degraded at t=1 while both servers are busy; job 1 (on
+    # server 1) completes, then job 0 migrates onto the freed server 1
+    assert res.n_migrations == 1
+    assert res.records[0].servers == (1,)
+    assert res.records[0].completion > res.records[1].completion
+
+
+def test_migration_penalty_charged():
+    """The restart penalty is visible in the migrated completion time."""
+    cluster = _two_server_spec()
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=500)
+    t_ev, f = 10.0, 0.125
+    base = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=0.0),
+        degradations=[(t_ev, 0, f)],
+    )
+    pen = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=7.0),
+        degradations=[(t_ev, 0, f)],
+    )
+    assert base.n_migrations == pen.n_migrations == 1
+    assert pen.records[0].completion == base.records[0].completion + 7.0
+
+
+def test_migration_improves_flow_on_straggler_trace():
+    """Light load + unrecovered stragglers: migrating A-SRPT strictly
+    beats finish-in-place A-SRPT (the benchmark acceptance property at
+    test scale — migration's win comes from idle healthy capacity, so
+    the load here is deliberately light)."""
+    cluster = _hom_cluster(n=8)
+    jobs = _trace(3, n_jobs=60, horizon=6000.0)
+    events = [(1200.0, m, 0.2) for m in (0, 1, 2)]
+    stay = simulate(jobs, cluster, _asrpt(), degradations=events)
+    move = simulate(
+        jobs, cluster, _asrpt(migrate=True, migration_penalty=30.0),
+        degradations=events,
+    )
+    assert move.n_migrations > 0
+    assert move.total_flow_time < stay.total_flow_time
+
+
+def test_retiming_mid_restart_preserves_penalty():
+    """A re-timing event inside a migration's restart window must not
+    credit the downtime as progress nor drop the remaining penalty."""
+    cluster = _two_server_spec()
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=500)
+    clean = simulate([job], cluster, _asrpt())
+    a0 = clean.records[0].alpha
+    pen = 20.0
+    res = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=pen),
+        # migrate off server 0 at t=10 (restart until t=30), then slow
+        # the *new* server mid-restart at t=15
+        degradations=[(10.0, 0, 0.1), (15.0, 1, 0.8)],
+    )
+    assert res.n_migrations == 1
+    rec = res.records[0]
+    assert rec.servers == (1,)
+    iters_rem = 500.0 - 10.0 / a0  # brought to t=10 before the migration
+    # computing resumes at t = 10 + pen; the t=15 re-timing happens inside
+    # the restart window, so no iterations are credited for [10, 15) and
+    # the remaining 15 s of downtime stay owed
+    assert rec.alpha == a0 / 0.8
+    assert rec.completion == (10.0 + pen) + iters_rem * (a0 / 0.8)
+
+
+def test_job_started_on_degraded_capacity_can_migrate():
+    """A job *placed onto* a straggler (the only capacity left) is as
+    migratable as one caught there by the event."""
+    from repro.core.baselines import spjf
+
+    cluster = _two_server_spec()
+    short = make_simple_job(job_id=0, replicas=(2, 2), n_iters=100,
+                            arrival=2.0)
+    long_ = make_simple_job(job_id=1, replicas=(2, 2), n_iters=3000,
+                            arrival=3.0)
+    pol = spjf(
+        make_predictor("perfect"), migrate=True, migration_penalty=1.0
+    )
+    res = simulate(
+        [short, long_], cluster, pol, degradations=[(1.0, 0, 0.2)]
+    )
+    # at t=2 the healthy server 1 wins the effective-bandwidth tiebreak;
+    # at t=3 only the straggler is free, so the long job starts there
+    # (stretched) — and must migrate to server 1 once the short job ends
+    assert res.records[0].servers == (1,)
+    assert res.n_migrations == 1
+    assert res.records[1].migrations == 1
+    assert res.records[1].servers == (1,)
+
+
+def test_dead_straddler_keeps_last_retimed_alpha():
+    """A job spanning a degraded server that later dies is frozen at its
+    last re-timed alpha: further events on its other servers must not
+    re-evaluate the dead server at full speed."""
+    from repro.core.baselines import spjf
+
+    cluster = _two_server_spec()
+    job = make_simple_job(job_id=0, replicas=(4, 4), n_iters=2000)
+    pol = spjf(make_predictor("perfect"))
+    # g=8 spans both 4-GPU servers
+    stretched = simulate(
+        [job], cluster, pol, degradations=[(10.0, 0, 0.5)]
+    )
+    pol2 = spjf(make_predictor("perfect"))
+    frozen = simulate(
+        [job], cluster, pol2,
+        degradations=[
+            (10.0, 0, 0.5),   # straggler
+            (20.0, 0, 0.0),   # dies
+            (30.0, 1, 1.0),   # no-op on the healthy half (current speed)
+            (40.0, 1, 0.9999),  # real event on the healthy half
+        ],
+    )
+    assert stretched.records[0].servers == (0, 1)
+    # the t=40 event must not resurrect server 0 at full speed: alpha
+    # stays at (or above) the post-t1 stretched value
+    assert frozen.records[0].alpha == stretched.records[0].alpha
+    assert frozen.records[0].completion == stretched.records[0].completion
+
+
+def test_job_on_dead_server_never_migrates():
+    """Once a straggler's server dies, its checkpoint state is gone: the
+    job leaves the migration watchlist and finishes in place even when
+    healthy capacity frees up later."""
+    from repro.core.baselines import spjf
+
+    cluster = _two_server_spec()
+    long_job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=2000)
+    short_job = make_simple_job(job_id=1, replicas=(2, 2), n_iters=250)
+    pol = spjf(
+        make_predictor("perfect"), migrate=True, migration_penalty=1.0
+    )
+    # SPJF starts the short job first (server 0), long job lands on
+    # server 1; server 1 slows at t=10 (long job joins the watch), dies
+    # at t=20 (watch purged); the short job's completion then frees
+    # server 0 — the dead-server job must NOT checkpoint-restart onto it
+    res = simulate(
+        [long_job, short_job], cluster, pol,
+        degradations=[(10.0, 1, 0.5), (20.0, 1, 0.0)],
+    )
+    assert res.records[1].servers == (0,)
+    assert res.records[0].servers == (1,)
+    assert res.n_migrations == 0
+    assert res.records[0].migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation-aware placement
+# ---------------------------------------------------------------------------
+
+
+def test_new_placements_avoid_degraded_server():
+    """Equal free capacity: the effective-bandwidth tiebreak steers new
+    jobs away from the straggler."""
+    cluster = ClusterSpec(
+        num_servers=3, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    jobs = [
+        make_simple_job(job_id=i, replicas=(2, 2), n_iters=20,
+                        arrival=100.0 + i)
+        for i in range(2)
+    ]
+    res = simulate(
+        jobs, cluster, _asrpt(), degradations=[(1.0, 0, 0.5)]
+    )
+    # two 4-GPU jobs, three empty 4-GPU servers, server 0 degraded:
+    # both jobs must land on the healthy servers
+    for rec in res.records.values():
+        assert 0 not in rec.servers, rec
+
+
+def test_degraded_placement_alpha_accounts_for_speed():
+    """When the straggler is the only capacity, the start alpha is the
+    stretched one (scheduler knows the server is slow)."""
+    cluster = ClusterSpec(
+        num_servers=1, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+    job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=10,
+                          arrival=50.0)
+    clean = simulate([job], cluster, _asrpt())
+    deg = simulate(
+        [job], cluster, _asrpt(), degradations=[(1.0, 0, 0.5)]
+    )
+    assert deg.records[0].alpha == clean.records[0].alpha / 0.5
+
+
+# ---------------------------------------------------------------------------
+# PlacementCache speed keying
+# ---------------------------------------------------------------------------
+
+
+def test_pcache_speed_key_isolates_degraded_entries():
+    cluster = _hom_cluster(n=4)
+    job = make_simple_job(job_id=0, replicas=(2, 2))
+    pc = PlacementCache(cluster)
+    caps = ((0, 2), (1, 2))
+    p_clean, a_clean = pc.map_job(job, caps)
+    sp = (0.5, 1.0)
+    p_deg, a_deg = pc.map_job(job, caps, speeds=sp)
+    assert a_deg > a_clean
+    # reference equality for the degraded mapping
+    p_ref, a_ref = map_job_canonical(
+        job, caps, cluster, reference=True, speeds=sp
+    )
+    assert a_deg == a_ref
+    for m in p_ref:
+        np.testing.assert_array_equal(p_deg[m], p_ref[m])
+    # the clean entry is untouched by the degraded probe
+    p2, a2 = pc.map_job(job, caps)
+    assert a2 == a_clean
+    # an all-1.0 speeds tuple shares the clean entry (no duplicate work)
+    hits_before = pc.hits
+    p3, a3 = pc.map_job(job, caps, speeds=(1.0, 1.0))
+    assert a3 == a_clean and pc.hits == hits_before + 1
+
+
+def test_cluster_speed_state_roundtrip():
+    cluster = _hom_cluster(n=4)
+    cs = ClusterState(cluster)
+    assert cs.effective_bw_ranks is None
+    assert cs.speeds_for(((0, 4), (1, 4))) is None
+    assert cs.set_server_speed(2, 0.5)
+    assert not cs.set_server_speed(2, 0.5)  # repeat: no-op, no epoch bump
+    assert cs.speed_of(2) == 0.5 and cs.has_degraded
+    desc, asc = cs.effective_bw_ranks
+    assert desc[2] == cluster.num_servers - 1  # slowest sorts last
+    assert cs.set_server_speed(2, 1.0)
+    assert not cs.has_degraded and cs.effective_bw_ranks is None
+    with pytest.raises(ValueError):
+        cs.set_server_speed(99, 0.5)
+    with pytest.raises(ValueError):
+        cs.set_server_speed(0, -0.1)
+
+
+def test_alpha_speeds_reference_equals_array():
+    """timing.alpha(speeds=...) matches alpha_reference(speeds=...) on a
+    placement large enough to take the vectorized path."""
+    cluster = _hom_cluster(n=6)
+    job = make_simple_job(replicas=(8, 8, 8), h_mb=256)
+    caps = [(m, 4) for m in range(6)]
+    placement, _ = map_job_canonical(job, caps, cluster)
+    speeds = {0: 0.3, 3: 0.7}
+    a_arr = timing.alpha(job, placement, cluster, speeds=speeds)
+    a_ref = timing.alpha_reference(job, placement, cluster, speeds=speeds)
+    assert a_arr == a_ref
+    assert a_arr > timing.alpha(job, placement, cluster)

@@ -85,6 +85,110 @@ class TestElasticMesh:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.sched
+class TestDegradationInjection:
+    """Edge cases of the fault/degradation event stream (ISSUE 4)."""
+
+    def _spec(self, n=2):
+        return ClusterSpec(
+            num_servers=n, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+        )
+
+    def _policy(self, tau=1.0, **kw):
+        return ASRPTPolicy(make_predictor("perfect"), tau=tau, **kw)
+
+    def test_event_at_t_zero(self):
+        """A degradation at t=0 precedes same-timestamp arrivals: the very
+        first placement already sees the stretched server.  (tau=0 — a
+        stretched alpha makes the job look comm-heavy against its clean
+        bounds, and a delay budget would defer the start.)"""
+        spec = self._spec(n=1)
+        job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=10,
+                              arrival=0.0)
+        clean = simulate([job], spec, self._policy(tau=0.0))
+        deg = simulate(
+            [job], spec, self._policy(tau=0.0),
+            degradations=[(0.0, 0, 0.5)],
+        )
+        # same start instant (the A-SRPT virtual machine releases the job
+        # identically), but the placement alpha is stretched from the
+        # first pass — the event beat the arrival at the same timestamp
+        assert deg.records[0].start == clean.records[0].start
+        assert deg.records[0].alpha == clean.records[0].alpha / 0.5
+
+    def test_multiple_events_one_server(self):
+        """Successive factor changes compose: each re-timing uses the
+        latest factor, and recovery restores the clean rate.  (SPJF
+        starts the lone job at t=0; A-SRPT would hold it in the virtual
+        machine past the event window.)"""
+        from repro.core.baselines import spjf
+
+        spec = self._spec(n=1)
+        job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=400)
+        clean = simulate([job], spec, spjf(make_predictor("perfect")))
+        a0 = clean.records[0].alpha
+        assert clean.records[0].start == 0.0
+        res = simulate(
+            [job], spec, spjf(make_predictor("perfect")),
+            degradations=[(2.0, 0, 0.5), (4.0, 0, 0.25), (6.0, 0, 1.0)],
+        )
+        rec = res.records[0]
+        assert rec.alpha == a0  # final factor is 1.0
+        # iterations done by t=6: 2s at full, 2s at half, 2s at quarter
+        iters_done = 2.0 / a0 + 2.0 / (a0 / 0.5) + 2.0 / (a0 / 0.25)
+        expected_tail = (400.0 - iters_done) * a0
+        assert rec.completion == pytest.approx(6.0 + expected_tail,
+                                               rel=1e-12)
+
+    def test_event_on_idle_vs_allocated_server(self):
+        """Idle-server events re-time nothing but steer later placements;
+        allocated-server events stretch the running job."""
+        from repro.core.baselines import spjf
+
+        spec = self._spec(n=2)
+        job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=100)
+        clean = simulate([job], spec, spjf(make_predictor("perfect")))
+        assert clean.records[0].start == 0.0
+        assert clean.records[0].servers == (0,)  # consolidates onto one
+        # idle server slows: the running job is untouched
+        idle = simulate(
+            [job], spec, spjf(make_predictor("perfect")),
+            degradations=[(1.0, 1, 0.25)],
+        )
+        assert idle.records[0].completion == clean.records[0].completion
+        assert idle.records[0].alpha == clean.records[0].alpha
+        # allocated server slows: the job stretches
+        busy = simulate(
+            [job], spec, spjf(make_predictor("perfect")),
+            degradations=[(1.0, 0, 0.25)],
+        )
+        assert busy.records[0].completion > clean.records[0].completion
+
+    def test_event_after_last_completion(self):
+        """Events past the makespan drain without passes going wrong and
+        the run still completes all jobs."""
+        spec = self._spec(n=2)
+        job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=10)
+        clean = simulate([job], spec, self._policy())
+        t_late = clean.records[0].completion + 1000.0
+        late = simulate(
+            [job], spec, self._policy(migrate=True, migration_penalty=1.0),
+            degradations=[(t_late, 0, 0.5), (t_late + 1.0, 0, 0.0)],
+        )
+        assert late.records[0].completion == clean.records[0].completion
+        assert late.n_migrations == 0
+
+    def test_unknown_server_and_negative_factor_raise(self):
+        spec = self._spec(n=2)
+        job = make_simple_job(job_id=0, replicas=(2, 2), n_iters=10)
+        with pytest.raises(ValueError):
+            simulate([job], spec, self._policy(),
+                     degradations=[(1.0, 0, -0.5)])
+        with pytest.raises(ValueError):
+            simulate([job], spec, self._policy(),
+                     degradations=[(1.0, 99, 0.5)])
+
+
 class TestSchedulerReaction:
     def test_scheduler_avoids_downed_server(self):
         """After a server fails, no new placement touches it."""
