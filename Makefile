@@ -6,7 +6,7 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-sched lint smoke bench-sched bench-hetero \
-	bench-straggler bench-budget ci
+	bench-straggler bench-elastic bench-budget bench-trend ci
 
 test:
 	python -m pytest -x -q
@@ -45,6 +45,21 @@ bench-hetero:
 # wins).
 bench-straggler:
 	python -m benchmarks.sched_scale --straggler $(if $(FULL),--full,)
+
+# Elastic-capacity scenario: four gen-a servers absent from the start
+# join at 40% of the horizon (ServerJoin/ServerLeave events;
+# flow_vs_static < 1 = recovered flow time).
+bench-elastic:
+	python -m benchmarks.sched_scale --elastic $(if $(FULL),--full,)
+
+# Aggregate BENCH_sched*.json artifacts (downloaded CI runs and/or the
+# committed baseline) into a per-policy events/sec trend table.  Default
+# scans the repo root, which picks up benchmarks/BENCH_sched_baseline.json
+# plus any fresh BENCH_sched.json from `make bench-budget`; point
+# TREND_DIR at a directory of downloaded artifacts for the full series.
+TREND_DIR ?= .
+bench-trend:
+	python -m benchmarks.bench_trend $(TREND_DIR)
 
 # CI budget mode: emits BENCH_sched.json (incl. the straggler migration
 # row) and fail-soft-checks it against the committed baseline (refresh

@@ -1,0 +1,221 @@
+"""Aggregate BENCH_sched.json artifacts into a per-policy events/sec trend.
+
+Every CI run uploads one ``BENCH_sched.json`` (emitted by
+``sched_scale --budget --json``: events/sec per policy, see
+benchmarks/README.md); until now nothing aggregated the series — each
+run was a lone point, and sustained regressions only surfaced as
+repeated fail-soft warnings.  This tool turns a directory of downloaded
+artifacts (e.g. ``gh run download``'s per-run subdirectories, or any
+flat collection of ``BENCH_sched*.json`` files) into one table:
+
+    python -m benchmarks.bench_trend ARTIFACT_DIR [more dirs/files...]
+
+Artifacts are discovered recursively (``BENCH_sched*.json`` — the
+committed ``benchmarks/BENCH_sched_baseline.json`` matches too, so
+``make bench-trend`` over the repo root trends the baseline against a
+fresh ``make bench-budget`` out of the box) and ordered by each
+artifact's recorded ``generated_at`` run timestamp, falling back to
+file mtime for artifacts predating the field: the trend reads left
+(oldest) to right (latest).  (Pure mtime would mis-order downloaded
+artifacts — ``gh run download`` stamps everything at download time.)
+
+Output: a markdown table, one row per policy — every artifact's
+events/sec, then ``best`` and ``latest/first`` (the trend headline:
+< 1.00 means the newest run is slower than the oldest).  ``--json``
+writes the same series machine-readably::
+
+    {
+      "schema": 1,
+      "bench": "sched_trend",
+      "artifacts": ["<label>", ...],            // oldest -> latest
+      "events_per_sec": {"A-SRPT": [35689.2, ...], ...},  // null = absent
+      "latest_vs_first": {"A-SRPT": 1.04, ...}
+    }
+
+Labels are paths relative to the common ancestor (artifact directories
+are usually named per CI run, so the run id survives into the table).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+PATTERN = "BENCH_sched*.json"
+
+
+def discover(paths: Sequence[str]) -> List[pathlib.Path]:
+    """Artifact files from a mix of files/directories, mtime-ordered."""
+    found: List[pathlib.Path] = []
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_dir():
+            found.extend(p.rglob(PATTERN))
+        elif p.is_file():
+            found.append(p)
+        else:
+            raise FileNotFoundError(f"no such file or directory: {raw}")
+    # de-dup (a dir arg may contain an explicitly-passed file)
+    uniq = sorted(
+        {f.resolve() for f in found},
+        key=lambda f: (f.stat().st_mtime, str(f)),
+    )
+    return uniq
+
+
+def _label(path: pathlib.Path, root: Optional[pathlib.Path]) -> str:
+    if root is not None:
+        try:
+            rel = path.relative_to(root)
+            return str(rel) if str(rel) != path.name else path.name
+        except ValueError:
+            pass
+    return path.name
+
+
+def _run_timestamp(f: pathlib.Path, data: Dict) -> float:
+    """When the artifact's benchmark actually ran: the recorded
+    ``generated_at`` (sched_scale budget mode stamps it), else the file
+    mtime (meaningless after downloads/checkouts, but the only signal
+    pre-field artifacts carry)."""
+    stamp = data.get("generated_at")
+    if isinstance(stamp, str):
+        from datetime import datetime, timezone
+
+        try:
+            dt = datetime.fromisoformat(stamp)
+        except ValueError:
+            pass
+        else:
+            if dt.tzinfo is None:
+                # naive stamps are taken as UTC so the ordering does not
+                # depend on the consuming machine's timezone
+                dt = dt.replace(tzinfo=timezone.utc)
+            return dt.timestamp()
+    return f.stat().st_mtime
+
+
+def load_series(
+    files: Sequence[pathlib.Path],
+) -> Tuple[List[str], Dict[str, List[Optional[float]]]]:
+    """(artifact labels, per-policy events/sec aligned to the labels),
+    ordered by each artifact's run timestamp (see ``_run_timestamp``).
+
+    Artifacts that fail to parse or lack the ``events_per_sec`` section
+    are skipped with a note on stdout rather than aborting the trend —
+    CI downloads can include partial/corrupt runs.
+    """
+    try:
+        root = pathlib.Path(os.path.commonpath([f.parent for f in files]))
+    except ValueError:
+        root = None
+    parsed: List[Tuple[float, str, pathlib.Path, Dict]] = []
+    for f in files:
+        try:
+            with open(f) as fh:
+                data = json.load(fh)
+            eps = data["events_per_sec"]
+        except (json.JSONDecodeError, KeyError, OSError) as exc:
+            print(f"[trend] skipping {f}: {exc}")
+            continue
+        parsed.append((_run_timestamp(f, data), str(f), f, eps))
+    parsed.sort(key=lambda e: (e[0], e[1]))
+    labels: List[str] = []
+    series: Dict[str, List[Optional[float]]] = {}
+    for _ts, _key, f, eps in parsed:
+        labels.append(_label(f, root))
+        for policy in series:
+            series[policy].append(None)
+        for policy, value in eps.items():
+            col = series.setdefault(policy, [None] * len(labels))
+            col[-1] = float(value)
+    return labels, series
+
+
+def latest_vs_first(
+    series: Dict[str, List[Optional[float]]],
+) -> Dict[str, Optional[float]]:
+    """Per-policy trend headline.  ``latest`` is strictly the newest
+    artifact: a policy absent from it gets no ratio (a stale point must
+    not masquerade as the current trend); ``first`` is the policy's
+    earliest appearance."""
+    out: Dict[str, Optional[float]] = {}
+    for policy, vals in series.items():
+        present = [v for v in vals if v is not None]
+        out[policy] = (
+            round(vals[-1] / present[0], 3)
+            if vals and vals[-1] is not None
+            and len(present) >= 2 and present[0] > 0
+            else None
+        )
+    return out
+
+
+def to_markdown(
+    labels: Sequence[str], series: Dict[str, List[Optional[float]]]
+) -> str:
+    """Per-policy trend table (policies in first-appearance order)."""
+    ratios = latest_vs_first(series)
+    head = ["policy", *labels, "best", "latest/first"]
+    lines = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+    ]
+    for policy, vals in series.items():
+        present = [v for v in vals if v is not None]
+        best = f"{max(present):.0f}" if present else "-"
+        ratio = ratios[policy]
+        cells = [policy]
+        cells += [f"{v:.0f}" if v is not None else "-" for v in vals]
+        cells += [best, f"{ratio:.2f}" if ratio is not None else "-"]
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def to_trend_json(
+    labels: Sequence[str], series: Dict[str, List[Optional[float]]]
+) -> Dict:
+    return {
+        "schema": 1,
+        "bench": "sched_trend",
+        "artifacts": list(labels),
+        "events_per_sec": series,
+        "latest_vs_first": latest_vs_first(series),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "paths", nargs="+",
+        help=f"directories (scanned recursively for {PATTERN}) and/or "
+             f"artifact files",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write the series as JSON to PATH",
+    )
+    args = ap.parse_args(argv)
+
+    files = discover(args.paths)
+    if not files:
+        print(f"no {PATTERN} artifacts under {args.paths}")
+        return 1
+    labels, series = load_series(files)
+    if not labels:
+        print("no parseable artifacts")
+        return 1
+    print(to_markdown(labels, series))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(to_trend_json(labels, series), fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

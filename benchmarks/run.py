@@ -45,6 +45,7 @@ def main() -> None:
         "table2": paper_figs.table2_heavyedge_ilp,
         "sched_scale": sched_scale.sched_scale,
         "sched_hetero": sched_scale.sched_scale_hetero,
+        "sched_elastic": sched_scale.sched_scale_elastic,
     }
     selected = (
         args.only.split(",") if args.only else list(benches) + ["roofline"]

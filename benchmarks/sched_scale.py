@@ -40,6 +40,17 @@ Variants:
   the degraded servers).  The migration row reports ``flow_vs_stay``
   (total flow time relative to finish-in-place; < 1.0 means migration
   wins) and the migration count.
+* ``--elastic`` / ``sched_scale_elastic`` — elastic-capacity scenario
+  (ServerJoin/ServerLeave events, see repro.core.scenario): four gen-a
+  servers are absent from the start; the *static* rows ride out the
+  trace on the reduced cluster, the *join* rows get the capacity back
+  mid-trace and report ``flow_vs_static`` (< 1.0 = recovered flow
+  time), under A-SRPT and a queue baseline.
+* ``--scenario FILE`` — replay any saved ``Scenario`` JSON (the format
+  ``tests/golden/scenario_straggler.json`` instantiates; see
+  scenario.py) under ``--policy`` (default A-SRPT).  The row includes
+  the schedule sha256, so replays double as cross-machine equivalence
+  checks.
 * ``--budget`` / ``sched_scale_budget`` — a CI-sized subset (one size,
   best-of-3 cold-start samples per policy) whose events/sec per policy is
   written to ``BENCH_sched.json`` for trend tracking; ``--check``
@@ -59,8 +70,10 @@ from repro.core import (
     ASRPTPolicy,
     BASELINES,
     ClusterSpec,
+    Scenario,
     ServerClass,
     TraceConfig,
+    elastic_events,
     generate_trace,
     make_predictor,
     simulate,
@@ -274,6 +287,110 @@ def sched_scale_straggler(full: bool = False) -> List[Dict]:
     return rows
 
 
+# Elastic-capacity scenario (--elastic): four gen-a servers are absent
+# from the start (ServerLeave at t=0 — e.g. delayed delivery or a
+# maintenance window) and join at JOIN_AT_FRAC of the horizon.  The
+# static rows never get them back; flow_vs_static on the join rows is
+# the recovered flow time.  Runs at the straggler variant's moderate
+# load: the join's value is absorbing the backlog the reduced cluster
+# accumulated, which full saturation would mask (the queue never drains
+# either way there).
+ELASTIC_SIZES = (20_000,)
+ELASTIC_SERVERS = (0, 1, 2, 3)  # gen-a, the biggest-fastest class
+JOIN_AT_FRAC = 0.4
+
+
+def sched_scale_elastic(full: bool = False) -> List[Dict]:
+    """Elastic capacity: ServerJoin/ServerLeave events end to end.
+
+    Two scenarios over identical jobs on the mixed-generation cluster,
+    each under A-SRPT and a queue baseline: *static* (four gen-a servers
+    absent for the whole trace) vs *join* (they come online at 40 % of
+    the horizon).  ``flow_vs_static`` < 1.0 on the join rows is the
+    headline: mid-trace capacity is converted into recovered flow time,
+    and the settled-policy wake on ServerJoin starts queued work the
+    moment it lands.
+    """
+    cluster = _hetero_cluster()
+    rows: List[Dict] = []
+    sizes = ELASTIC_SIZES + ((100_000,) if full else ())
+    for n in sizes:
+        jobs = _trace(n, seconds_per_job=STRAGGLER_SECONDS_PER_JOB)
+        horizon = n * STRAGGLER_SECONDS_PER_JOB
+        static_sc = Scenario(
+            jobs=tuple(jobs), cluster=cluster,
+            events=tuple(elastic_events(ELASTIC_SERVERS, join_at=None)),
+            name=f"elastic-static-{n}",
+        )
+        join_sc = Scenario(
+            jobs=tuple(jobs), cluster=cluster,
+            events=tuple(
+                elastic_events(
+                    ELASTIC_SERVERS, join_at=JOIN_AT_FRAC * horizon
+                )
+            ),
+            name=f"elastic-join-{n}",
+        )
+        policies = [
+            ("A-SRPT", _asrpt),
+            (
+                "WCS-SubTime",
+                lambda: BASELINES["WCS-SubTime"](make_predictor("mean")),
+            ),
+        ]
+        for pname, mk in policies:
+            static = simulate(static_sc, mk(), validate=False)
+            rows.append(_row(n, f"{pname} (elastic, static)", static))
+            joined = simulate(join_sc, mk(), validate=False)
+            jrow = _row(n, f"{pname} (elastic, join@40%)", joined)
+            jrow["flow_vs_static"] = round(
+                joined.total_flow_time / static.total_flow_time, 3
+            )
+            rows.append(jrow)
+    return rows
+
+
+def sched_scale_scenario(
+    path: str,
+    policy: str = "A-SRPT",
+    migration_penalty: Optional[float] = None,
+) -> List[Dict]:
+    """Replay a saved Scenario JSON under one policy (--scenario FILE).
+
+    The row carries the schedule sha256 (``SimResult.schedule_digest``)
+    so a replay on another machine doubles as a bit-identity check for
+    the matmul-free engines.  Matching a committed digest requires the
+    policy config the fixture was recorded with — the golden straggler
+    fixture used ``--migration-penalty 20`` (see tests/test_golden.py,
+    which pins that digest in-process; the CI scenario-schema step only
+    checks the replay runs end to end).
+    """
+    sc = Scenario.load(path)
+    mig_kw = (
+        {} if migration_penalty is None
+        else {"migration_penalty": migration_penalty}
+    )
+    if policy == "A-SRPT":
+        pol: ASRPTPolicy = ASRPTPolicy(
+            make_predictor("mean"), tau=2.0,
+            migrate=bool(sc.events), **mig_kw,
+        )
+    elif policy in BASELINES:
+        pol = BASELINES[policy](
+            make_predictor("mean"), migrate=bool(sc.events), **mig_kw
+        )
+    else:
+        raise ValueError(
+            f"unknown policy {policy!r} (A-SRPT or one of "
+            f"{sorted(BASELINES)})"
+        )
+    res = simulate(sc, pol)
+    row = _row(len(sc.jobs), f"{policy} @{sc.name or path}", res)
+    row["n_migrations"] = res.n_migrations
+    row["sha256"] = res.schedule_digest()
+    return [row]
+
+
 BUDGET_SAMPLES = 3  # best-of per row; shared runners swing tens of percent
 
 
@@ -343,10 +460,20 @@ def sched_scale_budget(straggler: bool = False) -> List[Dict]:
 
 
 def rows_to_bench_json(rows: Sequence[Dict]) -> Dict:
-    """events/sec per policy (the trended metric) + the full row dump."""
+    """events/sec per policy (the trended metric) + the full row dump.
+
+    ``generated_at`` records when the benchmark actually ran —
+    ``bench_trend.py`` orders artifacts by it (file mtimes are
+    meaningless after an artifact download or a fresh checkout).
+    """
+    from datetime import datetime, timezone
+
     return {
         "schema": 1,
         "bench": "sched_scale_budget",
+        "generated_at": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"
+        ),
         "events_per_sec": {
             r["policy"]: r["events_per_sec"] for r in rows
         },
@@ -407,6 +534,31 @@ def main(argv: Optional[List[str]] = None) -> int:
              "(with --budget: append the migrate row to the trended set)",
     )
     ap.add_argument(
+        "--elastic", action="store_true",
+        help="elastic-capacity scenario: four gen-a servers absent from "
+             "the start, joining at 40%% of the horizon (flow_vs_static "
+             "< 1 = recovered flow time), A-SRPT + WCS-SubTime",
+    )
+    ap.add_argument(
+        "--scenario", metavar="FILE", default=None,
+        help="replay a saved Scenario JSON (repro.core.scenario schema; "
+             "see tests/golden/scenario_straggler.json) and print the "
+             "schedule sha256; migration is enabled when the scenario "
+             "carries events",
+    )
+    ap.add_argument(
+        "--policy", metavar="NAME", default="A-SRPT",
+        help="policy for --scenario replays: A-SRPT (default) or a "
+             "baseline name (SPJF, SPWF, WCS-Duration, WCS-Workload, "
+             "WCS-SubTime)",
+    )
+    ap.add_argument(
+        "--migration-penalty", metavar="SECONDS", default=None, type=float,
+        help="checkpoint-restart penalty for --scenario replays "
+             "(default: migration.py's 120 s; the golden straggler "
+             "fixture was recorded with 20)",
+    )
+    ap.add_argument(
         "--json", metavar="PATH", default=None,
         help="write BENCH_sched.json-style output to PATH (--budget only: "
              "the trend file keys events/sec by policy name, which is only "
@@ -428,9 +580,20 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if (args.json or args.check) and not args.budget:
         ap.error("--json/--check track the budget-mode series; add --budget")
-    if args.hetero and args.straggler:
-        ap.error("--hetero and --straggler are separate variants")
-    if args.budget:
+    if sum((args.hetero, args.straggler, args.elastic)) > 1:
+        ap.error("--hetero/--straggler/--elastic are separate variants")
+    if args.scenario is None and (
+        args.policy != "A-SRPT" or args.migration_penalty is not None
+    ):
+        ap.error("--policy/--migration-penalty apply to --scenario replays")
+    if args.scenario is not None:
+        if args.budget or args.hetero or args.straggler or args.elastic:
+            ap.error("--scenario replays one file; drop the variant flags")
+        run = lambda: sched_scale_scenario(  # noqa: E731
+            args.scenario, policy=args.policy,
+            migration_penalty=args.migration_penalty,
+        )
+    elif args.budget:
         if args.full:
             ap.error("--budget is fixed-size; drop --full (or use "
                      "--hetero/--full for the big sweeps)")
@@ -439,6 +602,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         )
     elif args.hetero:
         run = lambda: sched_scale_hetero(full=args.full)  # noqa: E731
+    elif args.elastic:
+        run = lambda: sched_scale_elastic(full=args.full)  # noqa: E731
     elif args.straggler:
         run = lambda: sched_scale_straggler(full=args.full)  # noqa: E731
     else:

@@ -37,7 +37,7 @@ class FaultAwareASRPT(ASRPTPolicy):
         self.hb = HeartbeatMonitor(timeout=60.0)
         self._marked = False
 
-    def schedule(self, t, cluster):
+    def plan_pass(self, t, cluster):
         for m in range(self.cluster_spec.num_servers):
             if not (m == self.fail_server and t >= self.fail_at):
                 self.hb.beat(m, t)
@@ -47,7 +47,7 @@ class FaultAwareASRPT(ASRPTPolicy):
             for m in dead:
                 cluster.mark_server_down(m)
             self._marked = True
-        return super().schedule(t, cluster)
+        return super().plan_pass(t, cluster)
 
 
 def main() -> None:
@@ -97,6 +97,28 @@ def main() -> None:
     print(f"  classes: {[(c.name, c.count, c.gpus_per_server) for c in het.server_classes]}")
     print(f"  jobs started after failure: {len(after2)}; on dead server: {touched2}")
     assert touched2 == 0
+
+    # Elastic capacity as a first-class Scenario (ISSUE 5): server 5 is
+    # absent for the first half of the trace (ServerLeave at t=0) and
+    # joins mid-run; the epoch bump wakes the settled policy, so queued
+    # work starts on the new capacity the moment it lands.  The scenario
+    # is one serializable object — `sc.to_json()` replays anywhere via
+    # `benchmarks/sched_scale.py --scenario`.
+    from repro.core import Scenario, ServerJoin, ServerLeave
+
+    print("\nelastic capacity scenario (ServerLeave/ServerJoin events):")
+    sc = Scenario(
+        jobs=tuple(jobs),
+        cluster=cluster,
+        events=(ServerLeave(0.0, 5), ServerJoin(1800.0, 5)),
+        name="elastic-demo",
+    )
+    res3 = simulate(sc, ASRPTPolicy(make_predictor("rf", seed=0), tau=2.0))
+    on_joined = [r for r in res3.records.values() if 5 in r.servers]
+    print(f"  jobs placed on the late-joining server: {len(on_joined)}"
+          f" (earliest start t={min(r.start for r in on_joined):.0f}s)"
+          if on_joined else "  joined capacity unused (idle tail)")
+    assert all(r.start >= 1800.0 for r in on_joined)
 
 
 if __name__ == "__main__":

@@ -16,9 +16,21 @@ from .heavy_edge import (  # noqa: F401
 )
 from .cluster import ClusterState  # noqa: F401
 from .srpt import VirtualSRPT, srpt_total_completion  # noqa: F401
+from .scenario import (  # noqa: F401
+    ClusterEvent,
+    Degradation,
+    Fault,
+    SCENARIO_SCHEMA_VERSION,
+    Scenario,
+    ServerJoin,
+    ServerLeave,
+    scenario_from_legacy,
+)
 from .simulator import (  # noqa: F401
+    Allocation,
     Migration,
     Policy,
+    SchedulingPolicy,
     SimResult,
     Start,
     simulate,
@@ -36,9 +48,12 @@ from .predictor import (  # noqa: F401
 )
 from .trace import (  # noqa: F401
     TraceConfig,
+    elastic_events,
+    elastic_scenario,
     generate_trace,
     mixed_cluster_spec,
     straggler_events,
+    straggler_scenario,
     trace_stats,
 )
 from .profiles import PAPER_MODELS, make_job, job_from_model_shape  # noqa: F401

@@ -88,6 +88,7 @@ class ASRPTPolicy(MigrationMixin, Policy):
         placement_cache: bool = True,  # incremental eval + memoized mapping
         migrate: bool = False,  # checkpoint-restart off degraded servers
         migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
+        migration_queue_guard: bool = False,  # queue-aware race (migration.py)
     ):
         self.predictor = predictor
         self.comm_heavy = comm_heavy
@@ -96,6 +97,7 @@ class ASRPTPolicy(MigrationMixin, Policy):
         self.placement_cache = placement_cache
         self.migrate = migrate
         self.migration_penalty = migration_penalty
+        self.migration_queue_guard = migration_queue_guard
         self.vm = VirtualSRPT()
         self.pending: Deque[JobSpec] = deque()
         self.delayed: "OrderedDict[int, _Delayed]" = OrderedDict()
@@ -167,7 +169,7 @@ class ASRPTPolicy(MigrationMixin, Policy):
             heapq.heappop(h)  # job already started: stale entry
         return None
 
-    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+    def plan_pass(self, t: float, cluster: ClusterState) -> List[Start]:
         self._drain_vm(t)
         starts: List[Start] = []
         incremental = self._pcache is not None
@@ -336,6 +338,14 @@ class ASRPTPolicy(MigrationMixin, Policy):
                 best = dl
             break
         return best
+
+    def migration_queue_head(self, t: float) -> Optional[JobSpec]:
+        """Queue-aware migration guard hook: the next job ``plan_pass``
+        would pop.  The virtual machine is drained to ``t`` first so
+        jobs whose virtual completion already passed are visible — the
+        hook runs before the pass that would release them for real."""
+        self._drain_vm(t)
+        return self.pending[0] if self.pending else None
 
     def queue_depth(self) -> int:
         return len(self.pending) + len(self.delayed)

@@ -52,6 +52,7 @@ class QueuePolicy(MigrationMixin, Policy):
         work_conserving: bool,
         migrate: bool = False,  # checkpoint-restart off degraded servers
         migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
+        migration_queue_guard: bool = False,  # queue-aware race (migration.py)
     ):
         if key not in ("duration", "workload", "subtime"):
             raise ValueError(key)
@@ -60,6 +61,7 @@ class QueuePolicy(MigrationMixin, Policy):
         self.work_conserving = work_conserving
         self.migrate = migrate
         self.migration_penalty = migration_penalty
+        self.migration_queue_guard = migration_queue_guard
         # (-key, -arrival, -job_id, job): ascending sort puts the smallest
         # (key, arrival, job_id) — the next job to schedule — at the end.
         # Strict head-of-line uses the flat list; work-conserving buckets
@@ -109,7 +111,7 @@ class QueuePolicy(MigrationMixin, Policy):
         starts.append(Start(job, placement, a))
         cluster.allocate(job.job_id, placement, counts=dict(caps))
 
-    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+    def plan_pass(self, t: float, cluster: ClusterState) -> List[Start]:
         starts: List[Start] = []
         free = cluster.total_free
         if free == 0:
@@ -152,6 +154,23 @@ class QueuePolicy(MigrationMixin, Policy):
                 nxt = bucket[-1]
                 heapq.heappush(heads, ((-nxt[0], -nxt[1], -nxt[2]), g))
         return starts
+
+    def migration_queue_head(self, t: float) -> "JobSpec | None":
+        """Queue-aware migration guard hook: the job the next pass would
+        consider first — the tail of the strict queue, or the smallest
+        (key, arrival, job_id) across the capacity-indexed bucket tails
+        (a handful of buckets; same order the heap merge visits)."""
+        if not self.work_conserving:
+            return self.waiting[-1][3] if self.waiting else None
+        best = None
+        for bucket in self.waiting_by_g.values():
+            if not bucket:
+                continue
+            e = bucket[-1]
+            key = (-e[0], -e[1], -e[2])
+            if best is None or key < best[0]:
+                best = (key, e[3])
+        return best[1] if best is not None else None
 
     def queue_depth(self) -> int:
         return self._n_waiting if self.work_conserving else len(self.waiting)

@@ -17,6 +17,21 @@ factor of exactly ``0.0`` is a full failure and degrades to
 ``epoch`` (placement decisions depend on them) and a separate
 ``speed_version`` so policies can cheaply detect "speeds changed while
 caps stayed equal".
+
+Elastic capacity (ServerJoin/ServerLeave scenario events, scenario.py):
+``drain_server`` starts a *graceful* leave — free capacity is withdrawn
+immediately (no new allocations) but the server keeps computing, so
+running jobs are unaffected (and remain migratable off it, unlike a
+dead server whose checkpoint state is lost); ``finish_drain`` ends the
+window (the server is then down for good).  ``activate_server``
+resurrects any inactive slot — a drained, left, or failed server —
+restoring its class capacity minus GPUs still held by running jobs.  A
+server rejoining from *down* starts clean at speed 1.0 (replacement
+hardware); one rejoining from a cancelled *drain* keeps its speed
+factor (it never stopped).  Three disjoint server states follow:
+active, draining (no free caps, still computing), down (no free caps,
+not computing); ``_inactive`` is draining ∪ down — the one set the
+release/allocation paths consult.
 """
 from __future__ import annotations
 
@@ -61,6 +76,8 @@ class ClusterState:
         self._job_alloc: Dict[int, Dict[int, int]] = {}
         self.total_free: int = spec.total_gpus
         self._down: set = set()
+        self._draining: set = set()
+        self._inactive: set = set()  # _down | _draining, maintained inline
         self.epoch: int = 0
         # sparse straggler state: only servers with factor != 1.0 appear
         self._speed: Dict[int, float] = {}
@@ -116,11 +133,11 @@ class ClusterState:
 
     def release(self, job_id: int) -> None:
         cap = self._cap
-        down = self._down
+        gone = self._inactive
         total = 0
         for m, n in self._job_alloc.pop(job_id).items():
-            if m in down:
-                continue  # capacity on a failed server never returns
+            if m in gone:
+                continue  # capacity on a failed/leaving server never returns
             old = self.free[m]
             self.free[m] = old + n
             self._move_bucket(m, old, old + n)
@@ -143,7 +160,9 @@ class ClusterState:
             )
         if server_id in self._down:
             return
+        self._draining.discard(server_id)  # a drain overtaken by failure
         self._down.add(server_id)
+        self._inactive.add(server_id)
         if self._speed.pop(server_id, None) is not None:
             # a dead straggler is just dead: its speed no longer matters,
             # and dropping it lets a now-clean cluster take the fast path
@@ -154,6 +173,82 @@ class ClusterState:
         self.free[server_id] = 0
         self._move_bucket(server_id, old, 0)
         self.epoch += 1
+
+    def drain_server(self, server_id: int) -> bool:
+        """Elastic hook: begin a graceful leave (``ServerLeave``).
+
+        Free capacity is withdrawn at once (no new allocations land
+        here) and GPUs held by running jobs are forfeited as they
+        release — exactly the ``mark_server_down`` capacity semantics —
+        but the server *keeps computing*: running jobs are neither
+        re-timed nor stranded, and the simulator offers them to
+        ``plan_migrations`` while the drain window is open.  Returns
+        True when state changed (False for an already-inactive server).
+        """
+        if server_id not in self.free:
+            raise ValueError(
+                f"unknown server {server_id} "
+                f"(cluster has {self.spec.num_servers})"
+            )
+        if server_id in self._inactive:
+            return False  # already down or draining
+        self._draining.add(server_id)
+        self._inactive.add(server_id)
+        old = self.free[server_id]
+        self.total_free -= old
+        self.free[server_id] = 0
+        self._move_bucket(server_id, old, 0)
+        self.epoch += 1
+        return True
+
+    def finish_drain(self, server_id: int) -> bool:
+        """Close a drain window: the server is now gone for good.
+
+        Capacity effects all happened at ``drain_server``; this only
+        flips draining -> down (jobs still on it finish in place and can
+        no longer checkpoint-restart — their state leaves with the
+        server) and drops the speed entry like ``mark_server_down``
+        does.  No epoch bump: free capacity is unchanged.
+        """
+        if server_id not in self._draining:
+            return False
+        self._draining.discard(server_id)
+        self._down.add(server_id)
+        if self._speed.pop(server_id, None) is not None:
+            self._bw_ranks = None
+            self.speed_version += 1
+        return True
+
+    def activate_server(self, server_id: int) -> bool:
+        """Elastic hook: an inactive server slot comes online
+        (``ServerJoin``) with its class capacity minus GPUs still held
+        by running jobs (those return to ``free`` as the jobs release,
+        now that the server is active again).  Resurrects drained, left,
+        *and* failed slots — a join on a downed slot models replacement
+        hardware arriving at the same spec position (clean, speed 1.0).
+        Returns True when state changed (False if already active — a
+        no-op join triggers no scheduling pass).
+        """
+        if server_id not in self.free:
+            raise ValueError(
+                f"unknown server {server_id} "
+                f"(cluster has {self.spec.num_servers})"
+            )
+        if server_id not in self._inactive:
+            return False
+        self._down.discard(server_id)
+        self._draining.discard(server_id)
+        self._inactive.discard(server_id)
+        held = 0
+        for alloc in self._job_alloc.values():
+            held += alloc.get(server_id, 0)
+        new_free = self._cap[server_id] - held
+        old = self.free[server_id]  # 0 while inactive
+        self.free[server_id] = new_free
+        self._move_bucket(server_id, old, new_free)
+        self.total_free += new_free - old
+        self.epoch += 1
+        return True
 
     def set_server_speed(self, server_id: int, factor: float) -> bool:
         """Degradation hook: scale a server's effective speed by ``factor``.
@@ -240,6 +335,10 @@ class ClusterState:
     @property
     def downed_servers(self) -> frozenset:
         return frozenset(self._down)
+
+    @property
+    def draining_servers(self) -> frozenset:
+        return frozenset(self._draining)
 
     def snapshot_free(self) -> Dict[int, int]:
         return dict(self.free)

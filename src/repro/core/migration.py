@@ -36,6 +36,21 @@ degradation).
 With ``migrate=False`` (default) or an infinite penalty no job ever
 moves, which is what makes the finish-in-place baseline and the
 bit-identical clean-run property (tests/test_degradation.py) hold.
+
+Queue-aware race guard (``migration_queue_guard=True``): the per-job
+race above is greedy — it ignores the opportunity cost of the free
+capacity it claims, and under deep queue pressure it can lose: moving a
+long stretched job onto the only free servers makes every queued job
+behind it wait out the migrant's full occupancy.  With the guard on,
+each accepted migration is first *charged against the head of the ready
+queue* (``Policy.migration_queue_head``): when a queued job fits in the
+claimed capacity (``g_head <= g``) and its predicted duration is
+shorter than the migrant's post-move occupancy (``penalty + rem *
+alpha_new``), the migration is skipped — SRPT says the shorter queued
+job deserves those GPUs first, and the migrant keeps running in place
+(it is re-offered on every later pass, so it still moves once the
+queue drains).  The guard is opt-in: it changes schedules, and the
+PR-4 golden fixtures pin the unguarded race.
 """
 from __future__ import annotations
 
@@ -55,11 +70,15 @@ class MigrationMixin:
 
     Host classes provide ``cluster_spec`` (Policy.bind), ``_pcache`` (a
     ``PlacementCache`` or None for the reference engine), and set
-    ``migrate``/``migration_penalty`` in their constructors.
+    ``migrate``/``migration_penalty``/``migration_queue_guard`` in their
+    constructors.  The queue guard additionally needs ``predictor`` and
+    ``alpha_cache`` (both hosts have them) plus a
+    ``migration_queue_head`` implementation (see simulator.Policy).
     """
 
     migrate: bool = False
     migration_penalty: float = MIGRATION_PENALTY_DEFAULT
+    migration_queue_guard: bool = False
 
     def _map_migration(self, job, caps, speeds):
         pcache = getattr(self, "_pcache", None)
@@ -78,6 +97,16 @@ class MigrationMixin:
             return []
         penalty = self.migration_penalty
         migs: List[Migration] = []
+        # Queue-aware guard: resolve the ready-queue head once per sweep
+        # (migrations never mutate the queue, so it stays valid).  The
+        # head's predicted duration is the opportunity cost every
+        # accepted migration is charged against.
+        head = head_work = None
+        if self.migration_queue_guard:
+            head = self.migration_queue_head(t)
+            if head is not None:
+                _, a_min = self.alpha_cache.bounds(head)
+                head_work = self.predictor.predict(head) * a_min
         # Shared snapshot-or-select ladder (same protocol as A-SRPT step
         # 2): any actual migration changes the free state and resets it.
         ladder = ConsolidatingLadder(
@@ -96,9 +125,15 @@ class MigrationMixin:
                 # place still owes the rest of that downtime
                 stay += r.since - t
             move = penalty + r.iters_rem * a_new
-            if move < stay - 1e-12:
-                cluster.release(r.job.job_id)
-                cluster.allocate(r.job.job_id, placement, counts=dict(caps))
-                migs.append(Migration(r.job, placement, a_new, penalty))
-                ladder.reset()
+            if move >= stay - 1e-12:
+                continue
+            if head is not None and head.g <= g and head_work < move:
+                # the queued job fits in the claimed caps and finishes
+                # sooner than the migrant would occupy them: let the next
+                # pass start it instead (the migrant is re-offered later)
+                continue
+            cluster.release(r.job.job_id)
+            cluster.allocate(r.job.job_id, placement, counts=dict(caps))
+            migs.append(Migration(r.job, placement, a_new, penalty))
+            ladder.reset()
         return migs

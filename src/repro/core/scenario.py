@@ -1,0 +1,550 @@
+"""First-class scenarios: one composable, serializable cluster-event stream.
+
+The paper's A-SRPT is an *online* algorithm — its value is reacting to an
+arbitrary event stream.  Before this module the simulator grew one ad-hoc
+keyword per scenario kind (``faults=`` in PR 2, ``degradations=`` in
+PR 4); every new scenario (elastic capacity, maintenance drains, serving
+bursts) would have added another.  A :class:`Scenario` instead bundles
+
+* the workload (``jobs`` — a time-ordered tuple of :class:`JobSpec`),
+* the cluster it runs on (a :class:`ClusterSpec`), and
+* a single time-ordered timeline of typed :class:`ClusterEvent` s,
+
+so adding a scenario kind means adding an *event type*, not a simulator
+parameter.  ``simulate(scenario, policy)`` is the one entry point
+(simulator.py); the legacy ``simulate(jobs, spec, faults=...,
+degradations=...)`` signature survives as a thin shim that builds a
+``Scenario`` and is property-tested bit-identical (tests/test_scenario.py).
+
+Event types
+-----------
+
+``Fault(t, server)``
+    Full failure: free capacity vanishes at ``t``; GPUs held by running
+    jobs are forfeited as those jobs release; running jobs finish in
+    place (the PR-2 path).  Identical to ``Degradation(t, server, 0.0)``.
+
+``Degradation(t, server, factor)``
+    Straggler event: the server's effective compute/NIC speed is scaled
+    by ``factor`` (PR 4).  ``factor`` in (0, 1) slows, 1.0 recovers,
+    > 1.0 boosts, exactly 0.0 is a ``Fault``.
+
+``ServerLeave(t, server, drain_timeout)``
+    Elastic capacity: the server begins leaving at ``t``.  No new
+    allocations from ``t`` on; capacity is forfeited as running jobs
+    release.  ``drain_timeout`` is the graceful-drain window: while it
+    is open, jobs still running on the server are offered to
+    ``Policy.plan_migrations`` (checkpoint-restart off the leaving
+    server); at ``t + drain_timeout`` the server is gone for good
+    (remaining jobs finish in place, PR-2 style).  ``drain_timeout=0``
+    degrades to the ``Fault`` path verbatim (property-tested);
+    ``float("inf")`` keeps the drain window open forever.
+
+``ServerJoin(t, server)``
+    Elastic capacity: server ``server`` (a spec slot that previously
+    left, failed, or never came up) comes online at ``t`` with its
+    class capacity.  The epoch bump wakes settled policies so queued
+    work starts immediately.  A server absent *from the start* is
+    expressed as ``ServerLeave(0.0, m)`` — the spec stays the full
+    universe of slots.
+
+Canonical event order (the tie-break bugfix)
+--------------------------------------------
+
+Same-timestamp events used to apply in input-sequence order (faults
+before degradations, each list in caller order) — an accident of the
+legacy keywords.  ``Scenario`` instead stores its timeline canonically
+sorted by ``(t, server, kind, magnitude)`` with kind ranked
+
+    ServerJoin < Degradation < ServerLeave < Fault
+
+so at one instant, per server: capacity arrives first, speed changes
+apply next, and removals win the instant (a fault overrides a
+same-instant degradation).  Ties within a kind order by magnitude
+(``factor`` / ``drain_timeout``) ascending.  The order is deterministic
+for any input permutation — schedules no longer depend on how the
+caller happened to interleave event lists (tests/test_scenario.py pins
+this).
+
+JSON schema (version 1)
+-----------------------
+
+``Scenario.to_json()`` / ``Scenario.from_json()`` round-trip the whole
+scenario; ``Scenario.from_json(s.to_json()) == s`` and a round-tripped
+scenario replays a byte-identical schedule (property-tested).  Layout::
+
+    {
+      "schema": 1,
+      "name": "<free-form label>",
+      "cluster": {
+        "num_servers": 8, "gpus_per_server": 4,
+        "b_inter": 1.25e9, "b_intra": 3e11,
+        // heterogeneous specs instead carry the class list:
+        "server_classes": [
+          {"count": 3, "gpus_per_server": 8, "b_inter": 1.25e10,
+           "b_intra": 0.0, "name": "gen-a"}, ...
+        ]
+      },
+      "jobs": [ <job>, ... ],      // time-ordered
+      "events": [ <event>, ... ]   // canonical order (see above)
+    }
+
+A ``<job>`` is the frozen-trace format ``tests/golden/trace.json``
+already uses (that file is a documented instance of the ``jobs`` array)::
+
+    {"job_id": 0, "n_iters": 37, "arrival": 12.5, "group_id": 3,
+     "user_id": 7, "allreduce": "rar", "model_name": "qwen3_32b",
+     "stages": [[p_f, p_b, d_in, d_out, h, k], ...]}
+
+An ``<event>`` carries its kind tag plus the per-kind fields::
+
+    {"kind": "fault", "t": 600.0, "server": 0}
+    {"kind": "degradation", "t": 400.0, "server": 1, "factor": 0.25}
+    {"kind": "leave", "t": 900.0, "server": 2, "drain_timeout": 120.0}
+    {"kind": "join",  "t": 1200.0, "server": 2}
+
+``drain_timeout`` serializes ``float("inf")`` as JSON ``null`` (strict
+JSON has no Infinity).  Unknown kinds or fields fail ``from_dict`` with
+a ``ValueError`` naming the offender — the schema is versioned via the
+top-level ``"schema"`` integer, bumped on incompatible change.
+
+CLI: ``python -m repro.core.scenario validate FILE`` checks a scenario
+file against the schema; ``validate-jobs FILE`` checks a bare jobs
+array (e.g. ``tests/golden/trace.json``).  CI runs both plus an
+end-to-end replay via ``benchmarks/sched_scale.py --scenario``.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Type
+
+from .job import ClusterSpec, JobSpec, ServerClass, StageSpec
+
+SCENARIO_SCHEMA_VERSION = 1
+
+# Frozen-trace job layout (tests/golden/trace.json is an instance).
+_STAGE_FIELDS = ("p_f", "p_b", "d_in", "d_out", "h", "k")
+_JOB_FIELDS = (
+    "job_id", "n_iters", "arrival", "group_id", "user_id", "allreduce",
+    "model_name",
+)
+_CLASS_FIELDS = ("count", "gpus_per_server", "b_inter", "b_intra", "name")
+
+
+# ---------------------------------------------------------------------------
+# Typed cluster events
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ClusterEvent:
+    """One timed change to the cluster, applied just before the scheduling
+    pass at ``t`` (all same-timestamp events drain first — simulator.py)."""
+
+    t: float
+    server: int
+
+    def __post_init__(self) -> None:
+        # `not (x >= 0)` rejects NaN as well as negatives: json.load
+        # happily parses NaN/Infinity, and a NaN time would silently
+        # corrupt the simulator's event-heap ordering
+        if not (self.t >= 0.0 and math.isfinite(self.t)):
+            raise ValueError(f"event time must be finite >= 0, got {self.t}")
+        if self.server < 0:
+            raise ValueError(f"server id must be >= 0, got {self.server}")
+
+
+@dataclass(frozen=True)
+class Fault(ClusterEvent):
+    """Full server failure (== ``Degradation(factor=0.0)``); PR-2 path."""
+
+
+@dataclass(frozen=True)
+class Degradation(ClusterEvent):
+    """Speed change: effective compute/NIC scale by ``factor`` (PR 4)."""
+
+    factor: float = 1.0
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not (self.factor >= 0.0 and math.isfinite(self.factor)):
+            raise ValueError(
+                f"speed factor must be finite >= 0, got {self.factor}"
+            )
+
+
+@dataclass(frozen=True)
+class ServerJoin(ClusterEvent):
+    """Elastic capacity: the server slot comes online with class caps."""
+
+
+@dataclass(frozen=True)
+class ServerLeave(ClusterEvent):
+    """Elastic capacity: graceful drain; ``drain_timeout=0`` == ``Fault``."""
+
+    drain_timeout: float = 0.0
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        # inf is legal (open-ended window); NaN and negatives are not
+        if not self.drain_timeout >= 0.0:
+            raise ValueError(
+                f"drain_timeout must be >= 0, got {self.drain_timeout}"
+            )
+
+
+# Canonical same-timestamp order (see module docstring): joins first,
+# then speed changes, removals win the instant.
+_KIND_RANK: Dict[type, int] = {
+    ServerJoin: 0,
+    Degradation: 1,
+    ServerLeave: 2,
+    Fault: 3,
+}
+_KIND_TAG: Dict[type, str] = {
+    Fault: "fault",
+    Degradation: "degradation",
+    ServerJoin: "join",
+    ServerLeave: "leave",
+}
+_TAG_KIND: Dict[str, type] = {v: k for k, v in _KIND_TAG.items()}
+
+
+def event_sort_key(ev: ClusterEvent) -> Tuple[float, int, int, float]:
+    """Total order over events: ``(t, server, kind rank, magnitude)``.
+
+    Custom :class:`ClusterEvent` subclasses (policy-defined events that
+    reach ``Policy.on_event`` without engine-side state changes) rank
+    after the built-ins at one ``(t, server)``.
+    """
+    kind = type(ev)
+    if kind is Degradation:
+        mag = ev.factor
+    elif kind is ServerLeave:
+        mag = ev.drain_timeout
+    else:
+        mag = 0.0
+    return (ev.t, ev.server, _KIND_RANK.get(kind, len(_KIND_RANK)), mag)
+
+
+def event_to_dict(ev: ClusterEvent) -> dict:
+    kind = type(ev)
+    tag = _KIND_TAG.get(kind)
+    if tag is None:
+        raise ValueError(
+            f"only built-in event kinds serialize (schema "
+            f"{SCENARIO_SCHEMA_VERSION}); {kind.__name__} is "
+            f"policy-defined — keep such scenarios in-process"
+        )
+    d: dict = {"kind": tag, "t": ev.t, "server": ev.server}
+    if kind is Degradation:
+        d["factor"] = ev.factor
+    elif kind is ServerLeave:
+        # strict JSON has no Infinity: an open-ended drain window is null
+        d["drain_timeout"] = (
+            None if ev.drain_timeout == float("inf") else ev.drain_timeout
+        )
+    return d
+
+
+# Per-kind fields beyond the common (kind, t, server) — from_dict rejects
+# anything else, so a typo'd field (e.g. "drain_timout") fails loudly
+# instead of silently taking the default.
+_KIND_EXTRA_FIELDS: Dict[str, frozenset] = {
+    "fault": frozenset(),
+    "degradation": frozenset({"factor"}),
+    "join": frozenset(),
+    "leave": frozenset({"drain_timeout"}),
+}
+
+
+def event_from_dict(d: Mapping) -> ClusterEvent:
+    try:
+        tag = d["kind"]
+    except KeyError:
+        raise ValueError(f"event missing 'kind': {d!r}") from None
+    kind: Optional[Type[ClusterEvent]] = _TAG_KIND.get(tag)
+    if kind is None:
+        raise ValueError(
+            f"unknown event kind {tag!r} (schema {SCENARIO_SCHEMA_VERSION} "
+            f"knows {sorted(_TAG_KIND)})"
+        )
+    unknown = set(d) - {"kind", "t", "server"} - _KIND_EXTRA_FIELDS[tag]
+    if unknown:
+        raise ValueError(
+            f"event {tag!r} has unknown field(s) {sorted(unknown)}: {d!r}"
+        )
+    try:
+        t, server = float(d["t"]), int(d["server"])
+    except KeyError as exc:
+        raise ValueError(f"event {tag!r} missing field {exc}") from None
+    if kind is Degradation:
+        try:
+            return Degradation(t, server, factor=float(d["factor"]))
+        except KeyError:
+            raise ValueError(
+                f"degradation event missing 'factor': {d!r}"
+            ) from None
+    if kind is ServerLeave:
+        timeout = d.get("drain_timeout", 0.0)
+        return ServerLeave(
+            t, server,
+            drain_timeout=float("inf") if timeout is None else float(timeout),
+        )
+    return kind(t, server)
+
+
+# ---------------------------------------------------------------------------
+# Job + cluster (de)serialization — the frozen-trace format, now documented
+# ---------------------------------------------------------------------------
+
+
+def job_to_dict(job: JobSpec) -> dict:
+    d = {f: getattr(job, f) for f in _JOB_FIELDS}
+    d["stages"] = [
+        [getattr(st, f) for f in _STAGE_FIELDS] for st in job.stages
+    ]
+    return d
+
+
+def job_from_dict(d: Mapping) -> JobSpec:
+    unknown = set(d) - set(_JOB_FIELDS) - {"stages"}
+    if unknown:
+        raise ValueError(
+            f"job record has unknown field(s) {sorted(unknown)}"
+        )
+    try:
+        stages = tuple(
+            StageSpec(**dict(zip(_STAGE_FIELDS, s))) for s in d["stages"]
+        )
+        return JobSpec(stages=stages, **{f: d[f] for f in _JOB_FIELDS})
+    except KeyError as exc:
+        raise ValueError(f"job record missing field {exc}") from None
+
+
+def jobs_to_dicts(jobs: Sequence[JobSpec]) -> List[dict]:
+    return [job_to_dict(job) for job in jobs]
+
+
+def jobs_from_dicts(data: Sequence[Mapping]) -> List[JobSpec]:
+    return [job_from_dict(d) for d in data]
+
+
+def cluster_to_dict(spec: ClusterSpec) -> dict:
+    if spec.is_heterogeneous:
+        return {
+            "b_intra": spec.b_intra,
+            "server_classes": [
+                {f: getattr(c, f) for f in _CLASS_FIELDS}
+                for c in spec.server_classes
+            ],
+        }
+    return {
+        "num_servers": spec.num_servers,
+        "gpus_per_server": spec.gpus_per_server,
+        "b_inter": spec.b_inter,
+        "b_intra": spec.b_intra,
+    }
+
+
+def cluster_from_dict(d: Mapping) -> ClusterSpec:
+    unknown = set(d) - {
+        "num_servers", "gpus_per_server", "b_inter", "b_intra",
+        "server_classes",
+    }
+    if unknown:
+        raise ValueError(
+            f"cluster spec has unknown field(s) {sorted(unknown)}"
+        )
+    try:
+        if d.get("server_classes"):
+            classes = []
+            for c in d["server_classes"]:
+                bad = set(c) - set(_CLASS_FIELDS)
+                if bad:
+                    raise ValueError(
+                        f"server class has unknown field(s) {sorted(bad)}"
+                    )
+                classes.append(
+                    ServerClass(**{f: c[f] for f in _CLASS_FIELDS if f in c})
+                )
+            return ClusterSpec.heterogeneous(classes, b_intra=d["b_intra"])
+        return ClusterSpec(
+            num_servers=d["num_servers"],
+            gpus_per_server=d["gpus_per_server"],
+            b_inter=d["b_inter"],
+            b_intra=d["b_intra"],
+        )
+    except KeyError as exc:
+        raise ValueError(f"cluster spec missing field {exc}") from None
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """Workload + cluster + one canonical timeline of typed events.
+
+    ``events`` is re-sorted into the canonical ``(t, server, kind,
+    magnitude)`` order on construction, so two scenarios built from any
+    permutation of the same events compare (and replay) equal.  Event
+    server ids are validated against the spec here — failing at
+    construction beats failing mid-simulation.
+    """
+
+    jobs: Tuple[JobSpec, ...]
+    cluster: ClusterSpec
+    events: Tuple[ClusterEvent, ...] = ()
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "jobs", tuple(self.jobs))
+        events = tuple(sorted(self.events, key=event_sort_key))
+        object.__setattr__(self, "events", events)
+        n = self.cluster.num_servers
+        for ev in events:
+            if ev.server >= n:
+                raise ValueError(
+                    f"{type(ev).__name__} targets server {ev.server}, "
+                    f"cluster has {n}"
+                )
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": SCENARIO_SCHEMA_VERSION,
+            "name": self.name,
+            "cluster": cluster_to_dict(self.cluster),
+            "jobs": jobs_to_dicts(self.jobs),
+            "events": [event_to_dict(ev) for ev in self.events],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Scenario":
+        version = d.get("schema")
+        if version != SCENARIO_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported scenario schema {version!r} "
+                f"(this build reads {SCENARIO_SCHEMA_VERSION})"
+            )
+        unknown = set(d) - {"schema", "name", "cluster", "jobs", "events"}
+        if unknown:
+            raise ValueError(
+                f"scenario has unknown section(s) {sorted(unknown)}"
+            )
+        try:
+            cluster = d["cluster"]
+            jobs = d["jobs"]
+        except KeyError as exc:
+            raise ValueError(f"scenario missing section {exc}") from None
+        return cls(
+            jobs=tuple(jobs_from_dicts(jobs)),
+            cluster=cluster_from_dict(cluster),
+            events=tuple(
+                event_from_dict(ev) for ev in d.get("events", ())
+            ),
+            name=d.get("name", ""),
+        )
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+    def dump(self, path) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json(indent=2))
+            fh.write("\n")
+
+    @classmethod
+    def load(cls, path) -> "Scenario":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+
+def scenario_from_legacy(
+    jobs: Sequence[JobSpec],
+    cluster_spec: ClusterSpec,
+    faults: Optional[Sequence[Tuple[float, int]]] = None,
+    degradations: Optional[Sequence[Tuple[float, int, float]]] = None,
+    name: str = "",
+) -> Scenario:
+    """The legacy ``simulate(jobs, spec, faults=, degradations=)`` shim.
+
+    Fault tuples become :class:`Fault` events, degradation triples become
+    :class:`Degradation` events; the canonical ``Scenario`` ordering
+    replaces the old input-sequence interleaving (same-(t, server)
+    collisions now resolve deterministically — see module docstring).
+    """
+    events: List[ClusterEvent] = [
+        Fault(float(t), int(m)) for t, m in faults or ()
+    ]
+    events.extend(
+        Degradation(float(t), int(m), factor=float(f))
+        for t, m, f in degradations or ()
+    )
+    return Scenario(
+        jobs=tuple(jobs), cluster=cluster_spec, events=tuple(events),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI: schema validation (wired into CI's scenario-schema step)
+# ---------------------------------------------------------------------------
+
+
+def _main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.scenario",
+        description="Validate scenario / frozen-trace JSON files "
+                    "against the documented schema.",
+    )
+    ap.add_argument(
+        "command", choices=("validate", "validate-jobs"),
+        help="'validate' checks a full scenario file; 'validate-jobs' "
+             "checks a bare jobs array (e.g. tests/golden/trace.json)",
+    )
+    ap.add_argument("path", help="JSON file to check")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.command == "validate":
+            sc = Scenario.load(args.path)
+            print(
+                f"{args.path}: ok (schema {SCENARIO_SCHEMA_VERSION}, "
+                f"name={sc.name!r}, {len(sc.jobs)} jobs, "
+                f"{len(sc.events)} events, "
+                f"{sc.cluster.num_servers} servers / "
+                f"{sc.cluster.total_gpus} GPUs)"
+            )
+        else:
+            with open(args.path) as fh:
+                jobs = jobs_from_dicts(json.load(fh))
+            if any(
+                jobs[i].arrival > jobs[i + 1].arrival
+                for i in range(len(jobs) - 1)
+            ):
+                raise ValueError("jobs array is not arrival-ordered")
+            print(
+                f"{args.path}: ok ({len(jobs)} jobs, "
+                f"max g={max(j.g for j in jobs)})"
+            )
+    except (ValueError, TypeError, OSError, json.JSONDecodeError) as exc:
+        print(f"{args.path}: INVALID — {exc}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

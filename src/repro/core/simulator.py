@@ -6,24 +6,35 @@ advance event-to-event — the schedule produced is identical while remaining
 tractable for 10^5-job traces.  ``tests/test_asrpt.py`` cross-checks against
 a literal slotted execution on small instances.
 
+``simulate(scenario, policy)`` is the one entry point: a
+:class:`~repro.core.scenario.Scenario` bundles the workload, the cluster
+spec, and a single canonical timeline of typed cluster events (faults,
+degradations, elastic ServerJoin/ServerLeave — see scenario.py).  The
+legacy ``simulate(jobs, spec, faults=..., degradations=...)`` signature
+is kept as a thin shim that builds a ``Scenario``; it is property-tested
+bit-identical (tests/test_scenario.py) and the golden fixtures
+(tests/golden/) pin it byte-for-byte.  Same-timestamp events apply in
+the scenario's canonical ``(t, server, kind, magnitude)`` order — not in
+caller interleaving order (the PR-5 tie-break fix; scenario.py
+documents the ranking).
+
 Hot-path design (trace scale):
 
-* policies *own* their allocations: ``schedule`` allocates on the live
+* policies *own* their allocations: ``plan_pass`` allocates on the live
   ``ClusterState`` and the simulator only releases on completion.  (The old
   protocol had each pass allocate, undo, and the simulator re-allocate —
   three O(placement) dict walks per start, and the undo releases defeated
   the release-epoch change tracking policies use to skip recomputation.)
 * wake-ups are epoch-tagged: at most one *live* wake event exists at a
   time; superseded wakes stay in the heap but are recognised as stale by
-  their epoch and skipped without a scheduling pass.  The old
-  ``scheduled_wakes`` set grew without bound on long traces.
+  their epoch and skipped without a scheduling pass.
 * all events at the same timestamp are drained before a single scheduling
   pass runs.
 
 Policies observe only online information: arrivals as they happen, true
 iteration counts only at completion (fed to the predictor).
 
-Degradation events (stragglers): ``degradations=[(t, server, factor)]``
+Degradation events (stragglers): a ``Degradation(t, server, factor)``
 scales a server's effective speed mid-run (see cluster.py / timing.py).
 Running jobs touching the server are *re-timed*: their remaining
 iterations are brought to ``t`` under the old alpha, a new alpha is
@@ -31,35 +42,80 @@ evaluated under the updated speed map, and the completion event is
 re-issued.  Completion events are therefore epoch-tagged per job (like
 wakes): superseded completions stay in the heap and are dropped on pop.
 A ``factor == 0.0`` event takes the PR-2 fault path verbatim (capacity
-forfeited, running jobs finish in place, no re-timing) — ``faults=`` is
-now sugar for factor-0.0 degradations.  After re-timing, the policy's
-``plan_migrations`` hook may checkpoint-restart affected jobs onto
-fresh capacity (see migration.py); the simulator re-times migrated jobs
-with the restart penalty and updates their records in place.
+forfeited, running jobs finish in place, no re-timing) — ``Fault`` is
+the same event, and the legacy ``faults=`` keyword is sugar for it.
+After re-timing, the policy's ``plan_migrations`` hook may
+checkpoint-restart affected jobs onto fresh capacity (see migration.py);
+the simulator re-times migrated jobs with the restart penalty and
+updates their records in place.
+
+Elastic capacity: a ``ServerLeave(t, server, drain_timeout)`` starts a
+graceful drain — no new allocations; while the window is open, jobs
+still running on the leaving server join the migration watch (a
+migrating policy can checkpoint-restart them off before the server
+disappears; for an undegraded drain the race only moves a job whose
+fresh placement beats its current one by more than the penalty).  At
+``t + drain_timeout`` the server is gone for good — jobs still on it
+finish in place, PR-2 style.  ``drain_timeout == 0`` *is* the fault
+path (property-tested equal).  A ``ServerJoin(t, server)`` brings an
+inactive slot online (class capacity minus GPUs still held by running
+jobs); the epoch bump wakes settled policies so queued work starts on
+the new capacity in the same pass.
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    Union,
+    runtime_checkable,
+)
 
 import numpy as np
 
 from .cluster import ClusterState
 from .job import ClusterSpec, JobSpec
+from .scenario import (
+    ClusterEvent,
+    Degradation,
+    Fault,
+    Scenario,
+    ServerJoin,
+    ServerLeave,
+    scenario_from_legacy,
+)
 from . import timing
 
-# Completions free capacity and faults remove it before arrivals/wakes at
-# the same timestamp trigger the scheduling pass.
-_COMPLETION, _FAULT, _ARRIVAL, _WAKE = 0, 1, 2, 3
+# Completions free capacity and cluster events (faults, degradations,
+# joins/leaves) change it before arrivals/wakes at the same timestamp
+# trigger the scheduling pass.
+_COMPLETION, _CLUSTER, _ARRIVAL, _WAKE = 0, 1, 2, 3
 
 
 @dataclass(slots=True)
-class Start:
+class Allocation:
+    """One placement decision returned by ``Policy.plan_pass``.
+
+    The policy has already called ``cluster.allocate`` for it (policies
+    own their allocations); the simulator only computes the completion
+    and releases on it.
+    """
+
     job: JobSpec
     placement: Dict[int, np.ndarray]
     alpha: float
+
+
+# Historical name (PR 1-4); same type.
+Start = Allocation
 
 
 @dataclass(slots=True)
@@ -67,9 +123,9 @@ class Migration:
     """A checkpoint-restart decision returned by ``Policy.plan_migrations``.
 
     The policy has already released the job's old allocation and allocated
-    ``placement`` (policies own their allocations, as with ``Start``); the
-    simulator re-times the job: remaining iterations resume at ``alpha``
-    after ``penalty`` seconds of checkpoint-restart downtime.
+    ``placement`` (policies own their allocations, as with ``Allocation``);
+    the simulator re-times the job: remaining iterations resume at
+    ``alpha`` after ``penalty`` seconds of checkpoint-restart downtime.
     """
 
     job: JobSpec
@@ -111,6 +167,19 @@ class _Running:
     epoch: int = 0
 
 
+@dataclass(slots=True)
+class _DrainDeadline:
+    """Internal event: a ServerLeave drain window closes (not part of the
+    scenario schema — synthesized when the leave is applied).  ``gen``
+    is the per-server drain generation at synthesis: a join cancelling
+    the drain and a later leave re-opening it would otherwise let this
+    stale deadline close the *new* window early (like wake/completion
+    events, stale entries stay in the heap and are dropped on pop)."""
+
+    server: int
+    gen: int
+
+
 @dataclass
 class SimResult:
     records: Dict[int, JobRecord] = field(default_factory=dict)
@@ -144,17 +213,79 @@ class SimResult:
     def events_per_sec(self) -> float:
         return self.n_events / self.wall_s if self.wall_s > 0 else float("nan")
 
+    def schedule_digest(self) -> str:
+        """sha256 over every per-job record — the byte-identity fingerprint
+        the golden harness (tests/test_golden.py) and ``sched_scale
+        --scenario`` replays compare.  ``repr`` of the floats keeps the
+        digest exact (shortest round-trip repr) and platform-stable for
+        the matmul-free engines."""
+        h = hashlib.sha256()
+        for jid in sorted(self.records):
+            r = self.records[jid]
+            h.update(
+                (
+                    f"{jid}:{r.start!r}:{r.completion!r}:{r.alpha!r}:"
+                    f"{r.servers}:{r.migrations}\n"
+                ).encode()
+            )
+        return h.hexdigest()
 
-class Policy:
-    """Scheduling policy interface (see asrpt.py / baselines.py).
 
-    ``schedule`` must ``cluster.allocate`` every returned start — the
-    allocation is kept (the simulator releases it at the job's completion).
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """The formal policy contract ``simulate`` drives (third-party
+    policies implement this; ``Policy`` below is the in-tree base with
+    default no-ops).  Lifecycle per simulation:
+
+    1. ``bind(cluster_spec)`` once, before any event;
+    2. per event timestamp, after state changes apply:
+       ``on_arrival``/``on_completion`` for job events, ``on_event`` for
+       every cluster event (fault/degradation/join/leave);
+    3. ``plan_migrations(t, cluster, candidates)`` — only while migration
+       candidates exist and ``migrate`` is truthy;
+    4. ``plan_pass(t, cluster)`` — the scheduling pass; returns
+       ``Allocation`` s the policy has already allocated on ``cluster``;
+    5. ``next_wakeup(t)`` — optional future self-wake.
     """
 
-    # Opt-in for the degradation migration hook: the simulator maintains
-    # the straggler watchlist and calls ``plan_migrations`` only when this
-    # is truthy (MigrationMixin exposes it as a constructor arg).
+    migrate: bool
+
+    def bind(self, cluster_spec: ClusterSpec) -> None: ...
+
+    def on_arrival(self, t: float, job: JobSpec) -> None: ...
+
+    def on_completion(self, t: float, job: JobSpec) -> None: ...
+
+    def on_event(
+        self, t: float, event: ClusterEvent, cluster: ClusterState
+    ) -> None: ...
+
+    def plan_pass(self, t: float, cluster: ClusterState) -> List[Allocation]: ...
+
+    def plan_migrations(
+        self, t: float, cluster: ClusterState, candidates: List["_Running"]
+    ) -> List[Migration]: ...
+
+    def next_wakeup(self, t: float) -> Optional[float]: ...
+
+    def queue_depth(self) -> int: ...
+
+
+class Policy:
+    """Scheduling policy base class (see asrpt.py / baselines.py).
+
+    ``plan_pass`` must ``cluster.allocate`` every returned allocation —
+    the allocation is kept (the simulator releases it at the job's
+    completion).  ``schedule`` remains from the pre-protocol API both as
+    a caller-facing alias and as an override point: a subclass that only
+    defines ``schedule`` is still dispatched through it (the simulator
+    binds the override when one exists); new code overrides
+    ``plan_pass``.
+    """
+
+    # Opt-in for the degradation/drain migration hook: the simulator
+    # maintains the migration watchlist and calls ``plan_migrations`` only
+    # when this is truthy (MigrationMixin exposes it as a constructor arg).
     migrate: bool = False
 
     def bind(self, cluster_spec: ClusterSpec) -> None:
@@ -166,8 +297,24 @@ class Policy:
     def on_completion(self, t: float, job: JobSpec) -> None:
         pass
 
-    def schedule(self, t: float, cluster: ClusterState) -> List[Start]:
+    def on_event(
+        self, t: float, event: ClusterEvent, cluster: ClusterState
+    ) -> None:
+        """Cluster-event lifecycle hook: called for every scenario event
+        at its timestamp, after the cluster state change applied (and
+        for no-op events — e.g. a repeated speed factor — so policies
+        see the full timeline).  Policies needing custom reactions
+        (telemetry, learned schedulers re-planning on capacity churn)
+        override this; the default relies on the epoch-based change
+        tracking every pass already does.
+        """
+
+    def plan_pass(self, t: float, cluster: ClusterState) -> List[Allocation]:
         raise NotImplementedError
+
+    def schedule(self, t: float, cluster: ClusterState) -> List[Allocation]:
+        """Pre-protocol alias for ``plan_pass`` (PR 1-4 name)."""
+        return self.plan_pass(t, cluster)
 
     def next_wakeup(self, t: float) -> Optional[float]:
         return None
@@ -175,17 +322,26 @@ class Policy:
     def plan_migrations(
         self, t: float, cluster: ClusterState, candidates: List["_Running"]
     ) -> List[Migration]:
-        """Degradation hook: while any job is running on degraded
-        capacity, called before every scheduling pass with those jobs as
-        read-only views (so capacity freed by completions since the
-        degradation event is still exploitable).  A migrating policy
-        releases the old allocation, allocates the new placement, and
-        returns a ``Migration`` per moved job (see migration.py); the
-        default never migrates.  Only called when ``self.migrate`` is
-        truthy (non-migrating policies skip the watchlist bookkeeping
+        """Migration hook: while any job is running on degraded or
+        draining capacity, called before every scheduling pass with
+        those jobs as read-only views (so capacity freed by completions
+        since the triggering event is still exploitable).  A migrating
+        policy releases the old allocation, allocates the new placement,
+        and returns a ``Migration`` per moved job (see migration.py);
+        the default never migrates.  Only called when ``self.migrate``
+        is truthy (non-migrating policies skip the watchlist bookkeeping
         entirely); never called on clean runs.
         """
         return []
+
+    def migration_queue_head(self, t: float) -> Optional[JobSpec]:
+        """Head of the policy's ready queue (the next job a pass would
+        start), or None.  Consulted by the queue-aware migration race
+        guard (migration.py): a checkpoint-restart claims free capacity
+        that the queue head may deserve first.  The base returns None —
+        policies without a visible queue never block migrations.
+        """
+        return None
 
     def queue_depth(self) -> int:
         """Jobs held by the policy (pending + delayed); for engine stats."""
@@ -193,37 +349,85 @@ class Policy:
 
 
 def simulate(
-    jobs: List[JobSpec],
-    cluster_spec: ClusterSpec,
-    policy: Policy,
+    jobs: Union[Scenario, List[JobSpec]],
+    cluster_spec: Optional[Union[ClusterSpec, Policy]] = None,
+    policy: Optional[Policy] = None,
     validate: bool = True,
     faults: Optional[Sequence[Tuple[float, int]]] = None,
     degradations: Optional[Sequence[Tuple[float, int, float]]] = None,
 ) -> SimResult:
-    """Run ``policy`` over ``jobs``; returns per-job records + engine stats.
+    """Run a policy over a scenario; returns per-job records + engine stats.
+
+    Preferred form::
+
+        simulate(scenario, policy)              # Scenario from scenario.py
+
+    Legacy shim (bit-identical; builds the equivalent ``Scenario``)::
+
+        simulate(jobs, cluster_spec, policy, faults=..., degradations=...)
 
     ``validate=False`` skips the per-start placement re-validation (safety
     net for policy bugs) — benchmarks use it; tests keep it on.
 
-    ``faults``: (time, server_id) failure injections — the server is marked
-    down at that time (free capacity vanishes immediately; GPUs held by
-    running jobs are forfeited on release, see ClusterState).  The epoch
-    bump wakes incremental policies out of their settled state.  Jobs
-    whose GPU demand exceeds the *degraded* cluster capacity can never
-    start; the end-of-run unfinished-jobs check reports them.
+    ``faults``: (time, server_id) failure injections — sugar for
+    :class:`Fault` events (capacity vanishes; GPUs held by running jobs
+    are forfeited on release; the epoch bump wakes incremental policies).
+    Jobs whose GPU demand exceeds the degraded capacity can never start;
+    the end-of-run unfinished-jobs check reports them.
 
-    ``degradations``: (time, server_id, speed_factor) straggler events.
-    ``factor`` in (0, 1) slows the server (compute + NIC stretch by
-    ``1/factor``), 1.0 restores it, > 1.0 models a boost, and exactly
-    0.0 is a full failure — identical to a ``faults`` entry at the same
-    time (the two sequences share one event stream).  Running jobs
-    touching a ``factor > 0`` change are re-timed at the event and
+    ``degradations``: (time, server_id, speed_factor) straggler events —
+    sugar for :class:`Degradation`.  ``factor`` in (0, 1) slows the
+    server (compute + NIC stretch by ``1/factor``), 1.0 restores it,
+    > 1.0 models a boost, and exactly 0.0 is a full failure.  Running
+    jobs touching a ``factor > 0`` change are re-timed at the event and
     offered to ``policy.plan_migrations``; a repeated factor equal to
     the server's current speed is a no-op and triggers no scheduling
     pass, so an all-1.0 schedule is bit-identical to the clean run.
+
+    Same-timestamp events apply in the scenario's canonical
+    ``(t, server, kind, magnitude)`` order, not input order — see
+    scenario.py for the documented tie-break.
     """
+    if isinstance(jobs, Scenario):
+        if faults is not None or degradations is not None:
+            raise TypeError(
+                "faults=/degradations= belong to the legacy signature; "
+                "encode them as Scenario events instead"
+            )
+        if policy is not None and cluster_spec is not None:
+            raise TypeError(
+                "simulate(scenario, policy) takes no cluster spec — the "
+                "scenario carries its own cluster"
+            )
+        pol = policy if policy is not None else cluster_spec
+        if not isinstance(pol, Policy) and not isinstance(
+            pol, SchedulingPolicy
+        ):
+            raise TypeError(
+                f"simulate(scenario, policy): policy implementing "
+                f"SchedulingPolicy required, got {type(pol).__name__}"
+            )
+        return _simulate_scenario(jobs, pol, validate)
+    if not isinstance(policy, Policy) and not isinstance(
+        policy, SchedulingPolicy
+    ):
+        raise TypeError(
+            f"simulate(jobs, cluster_spec, policy): policy implementing "
+            f"SchedulingPolicy required, got {type(policy).__name__}"
+        )
+    scenario = scenario_from_legacy(
+        jobs, cluster_spec, faults=faults, degradations=degradations
+    )
+    return _simulate_scenario(scenario, policy, validate)
+
+
+def _simulate_scenario(
+    scenario: Scenario, policy: Policy, validate: bool
+) -> SimResult:
     import time as _time
 
+    jobs = scenario.jobs
+    cluster_spec = scenario.cluster
     for job in jobs:
         if job.g > cluster_spec.total_gpus:
             raise ValueError(
@@ -238,29 +442,37 @@ def simulate(
     wall0 = _time.perf_counter()
     seq = itertools.count()
     # (time, kind, seq-or-epoch, payload); kind breaks time ties
-    # (completions/faults before arrivals before wakes), seq keeps sorts
-    # stable.  Payload: (JobSpec, completion-epoch) for completions, the
-    # JobSpec for arrivals, (server id, factor) for faults/degradations,
-    # None for wakes.
+    # (completions/cluster events before arrivals before wakes), seq keeps
+    # sorts stable.  Payload: (JobSpec, completion-epoch) for completions,
+    # the JobSpec for arrivals, the typed ClusterEvent (or an internal
+    # _DrainDeadline) for cluster events, None for wakes.  Scenario events
+    # take consecutive seq numbers in their canonical order, so the
+    # documented tie-break survives the heap.
     events: List[Tuple[float, int, int, object]] = [
         (job.arrival, _ARRIVAL, next(seq), job) for job in jobs
     ]
-    for fault_t, server_id in faults or ():
-        events.append((fault_t, _FAULT, next(seq), (server_id, 0.0)))
-    track_running = False  # any factor > 0 event => re-timing bookkeeping
-    for deg_t, server_id, factor in degradations or ():
-        if factor < 0.0:
-            raise ValueError(f"speed factor must be >= 0, got {factor}")
-        if factor > 0.0:
+    migrate_capable = bool(getattr(policy, "migrate", False))
+    # Running-job bookkeeping is needed when anything can re-time a job
+    # (factor > 0 degradations) or feed the migration watch (drain
+    # windows, which only matter to migration-capable policies).  Clean
+    # and fault-only runs skip the registry entirely (measured ~10-20%
+    # of the cheap baselines' event cost at 5k jobs).
+    track_running = False
+    offer_migrations = False
+    for ev in scenario.events:
+        events.append((ev.t, _CLUSTER, next(seq), ev))
+        kind = type(ev)
+        if kind is Degradation and ev.factor > 0.0:
             track_running = True
-        events.append((deg_t, _FAULT, next(seq), (server_id, factor)))
+            offer_migrations = migrate_capable
+        elif (
+            kind is ServerLeave
+            and ev.drain_timeout > 0.0
+            and migrate_capable
+        ):
+            track_running = True
+            offer_migrations = True
     heapq.heapify(events)
-    # watchlist + plan_migrations only for policies that opted in: the
-    # hook of a non-migrating policy returns [] unconditionally, so the
-    # per-pass candidate bookkeeping would be pure overhead
-    offer_migrations = track_running and bool(
-        getattr(policy, "migrate", False)
-    )
 
     n_completed = 0
     n_events = 0
@@ -268,34 +480,44 @@ def simulate(
     n_passes = 0
     n_migrations = 0
     # job_id -> live bookkeeping (placement, remaining iterations, the
-    # epoch of the one non-stale completion event).  Only maintained when
-    # a factor > 0 event exists: re-timing is the sole producer of stale
-    # completions, so clean/fault-only runs skip the registry entirely
-    # (measured ~10-20% of the cheap baselines' event cost at 5k jobs).
+    # epoch of the one non-stale completion event); see track_running.
     running: Dict[int, _Running] = {}
-    # Jobs currently running on degraded (factor < 1) capacity: they are
-    # (re-)offered to ``plan_migrations`` on every scheduling pass while
-    # the set is non-empty — a saturated cluster often has nowhere to
-    # migrate *at* the degradation event, but completions free capacity
-    # moments later.  Empty on clean runs (the hook is never called).
-    straggler_watch: set = set()
+    # Jobs currently running on *risky* capacity — degraded (factor < 1)
+    # or draining (ServerLeave window open): they are (re-)offered to
+    # ``plan_migrations`` on every scheduling pass while the set is
+    # non-empty — a saturated cluster often has nowhere to migrate *at*
+    # the triggering event, but completions free capacity moments later.
+    # Empty on clean runs (the hook is never called).
+    migration_watch: set = set()
     # Single live wake: stale wake events carry an older epoch and are
     # dropped on pop without triggering a scheduling pass.
     wake_epoch = 0
     wake_time: Optional[float] = None
+    # Per-server drain generation (see _DrainDeadline).
+    drain_gen: Dict[int, int] = {}
 
     heappop, heappush = heapq.heappop, heapq.heappush
-    schedule = policy.schedule
+    # Canonical pass entry is ``plan_pass``; a pre-protocol subclass that
+    # only overrides ``schedule`` (the PR 1-4 name) must still be
+    # dispatched through its override, so bind through ``schedule``
+    # exactly when it is overridden (zero extra indirection otherwise;
+    # pure-protocol policies may not define ``schedule`` at all).
+    cls_sched = getattr(type(policy), "schedule", None)
+    if cls_sched is None or cls_sched is Policy.schedule:
+        plan_pass = policy.plan_pass
+    else:
+        plan_pass = policy.schedule
     queue_depth = policy.queue_depth
     next_wakeup = policy.next_wakeup
     on_arrival = policy.on_arrival
     on_completion = policy.on_completion
+    on_event = policy.on_event
     release = cluster.release
     while events:
         t = events[0][0]
         live = False  # any non-stale event at this timestamp?
         speed_changed: List[int] = []  # servers re-sped at t (factor > 0)
-        downed: List[int] = []  # servers killed at t (factor == 0)
+        downed: List[int] = []  # servers killed at t (fault/leave/deadline)
         while events and events[0][0] == t:
             _, kind, tag, payload = heappop(events)
             n_events += 1
@@ -306,7 +528,7 @@ def simulate(
                     if r is None or ep != r.epoch:
                         continue  # superseded by a re-timing: stale entry
                     del running[job.job_id]
-                    straggler_watch.discard(job.job_id)
+                    migration_watch.discard(job.job_id)
                 release(job.job_id)
                 on_completion(t, job)
                 n_completed += 1
@@ -314,21 +536,94 @@ def simulate(
             elif kind == _ARRIVAL:
                 on_arrival(t, payload)
                 live = True
-            elif kind == _FAULT:
-                server_id, factor = payload
-                if factor == 0.0:
+            elif kind == _CLUSTER:
+                ev_kind = type(payload)
+                if ev_kind is _DrainDeadline:
+                    # internal: the leave window closed — the server is
+                    # down for good (jobs still on it finish in place and
+                    # drop off the migration watch via the downed prune).
+                    # A deadline from a superseded drain (cancelled by a
+                    # join, window re-opened by a later leave) carries an
+                    # older generation and is dropped.
+                    if payload.gen == drain_gen.get(
+                        payload.server
+                    ) and cluster.finish_drain(payload.server):
+                        if track_running:
+                            downed.append(payload.server)
+                        live = True
+                    continue  # not a scenario event: no on_event call
+                if ev_kind is Fault or (
+                    ev_kind is Degradation and payload.factor == 0.0
+                ):
                     # full failure: the PR-2 fault path verbatim (capacity
                     # forfeited; running jobs finish in place, un-re-timed)
-                    cluster.mark_server_down(server_id)
+                    cluster.mark_server_down(payload.server)
                     if track_running:
-                        downed.append(server_id)
+                        downed.append(payload.server)
                     live = True
-                elif cluster.set_server_speed(server_id, factor):
-                    speed_changed.append(server_id)
+                elif ev_kind is Degradation:
+                    if cluster.set_server_speed(
+                        payload.server, payload.factor
+                    ):
+                        speed_changed.append(payload.server)
+                        live = True
+                    # else: factor equals the current speed — a no-op
+                    # (neither re-timing nor a scheduling pass; keeps
+                    # all-1.0 degradation schedules identical to clean)
+                elif ev_kind is ServerLeave:
+                    if payload.drain_timeout <= 0.0:
+                        # immediate leave == the fault path (property-
+                        # tested); the slot stays rejoinable via ServerJoin
+                        cluster.mark_server_down(payload.server)
+                        if track_running:
+                            downed.append(payload.server)
+                        live = True
+                    elif cluster.drain_server(payload.server):
+                        live = True
+                        m = payload.server
+                        gen = drain_gen.get(m, 0) + 1
+                        drain_gen[m] = gen
+                        if offer_migrations:
+                            down = cluster.downed_servers
+                            for jid, r in running.items():
+                                # dead-straddlers can't checkpoint-restart
+                                # (state on the dead server is gone)
+                                if m in r.placement and down.isdisjoint(
+                                    r.placement
+                                ):
+                                    migration_watch.add(jid)
+                        if payload.drain_timeout != float("inf"):
+                            heappush(
+                                events,
+                                (
+                                    t + payload.drain_timeout,
+                                    _CLUSTER,
+                                    next(seq),
+                                    _DrainDeadline(m, gen),
+                                ),
+                            )
+                elif ev_kind is ServerJoin:
+                    if cluster.activate_server(payload.server):
+                        live = True
+                        if migration_watch:
+                            # a join cancelling a drain un-risks the
+                            # server: drop watched jobs that no longer
+                            # touch degraded or draining capacity
+                            sp = cluster.speed_factors
+                            dr = cluster.draining_servers
+                            for jid in list(migration_watch):
+                                p = running[jid].placement
+                                if (
+                                    not sp or sp.keys().isdisjoint(p)
+                                ) and (not dr or dr.isdisjoint(p)):
+                                    migration_watch.discard(jid)
+                else:
+                    # custom ClusterEvent subclass: no engine-side state
+                    # change — it reaches the policy via on_event (the
+                    # extensibility point), and triggers a pass so the
+                    # policy's reaction can schedule immediately
                     live = True
-                # else: factor equals the current speed — a no-op event
-                # (neither re-timing nor a scheduling pass; keeps all-1.0
-                # degradation schedules identical to clean runs)
+                on_event(t, payload, cluster)
             else:  # _WAKE: no state change; just triggers a scheduling pass.
                 if tag == wake_epoch:
                     wake_time = None
@@ -337,24 +632,25 @@ def simulate(
         if not live:
             continue
 
-        if downed and straggler_watch:
+        if downed and migration_watch:
             # A job whose placement touches a *dead* server can never
             # checkpoint-restart (its checkpoint state lived there): drop
             # it from the watch — it finishes in place, PR-2 style.
             dead = set(downed)
             for jid in [
-                j for j in straggler_watch
+                j for j in migration_watch
                 if not dead.isdisjoint(running[j].placement)
             ]:
-                straggler_watch.discard(jid)
+                migration_watch.discard(jid)
 
         if speed_changed:
             # Re-time every running job touching a re-sped server under the
             # final (post-drain) speed map; jobs left on degraded capacity
-            # join the straggler watchlist.
+            # join the migration watchlist.
             changed = set(speed_changed)
             speeds = cluster.speed_factors
             down = cluster.downed_servers
+            draining = cluster.draining_servers
             for jid, r in running.items():
                 if changed.isdisjoint(r.placement):
                     continue
@@ -389,24 +685,30 @@ def simulate(
                     )
                 # (dead-straddlers never reach here — the `continue`
                 # above — so no downed-server check is needed)
-                if (
-                    offer_migrations
-                    and speeds
-                    and not speeds.keys().isdisjoint(r.placement)
+                if offer_migrations and (
+                    (speeds and not speeds.keys().isdisjoint(r.placement))
+                    or (
+                        draining
+                        and not draining.isdisjoint(r.placement)
+                    )
                 ):
-                    straggler_watch.add(jid)
+                    migration_watch.add(jid)
                 else:
-                    straggler_watch.discard(jid)
+                    migration_watch.discard(jid)
 
-        if straggler_watch:
+        if migration_watch:
             speeds = cluster.speed_factors
-            if not speeds:
-                # every straggler recovered or died (a downed server's jobs
-                # finish in place at their last re-timed alpha — PR-2)
-                straggler_watch.clear()
+            draining = cluster.draining_servers
+            if not speeds and not draining:
+                # every watched job's risk resolved: stragglers recovered
+                # or died (a downed server's jobs finish in place at their
+                # last re-timed alpha — PR-2) and drain windows closed
+                migration_watch.clear()
             else:
+                risky = set(speeds)
+                risky.update(draining)
                 candidates: List[_Running] = []
-                for jid in sorted(straggler_watch):
+                for jid in sorted(migration_watch):
                     r = running[jid]
                     if t > r.since:
                         # bring remaining-iteration bookkeeping to t so the
@@ -439,10 +741,10 @@ def simulate(
                         events,
                         (completion, _COMPLETION, next(seq), (job, r.epoch)),
                     )
-                    if speeds.keys().isdisjoint(mig.placement):
-                        straggler_watch.discard(job.job_id)
+                    if risky.isdisjoint(mig.placement):
+                        migration_watch.discard(job.job_id)
 
-        for start in schedule(t, cluster):
+        for start in plan_pass(t, cluster):
             job = start.job
             if validate:
                 timing.validate_placement(job, start.placement)
@@ -467,11 +769,11 @@ def simulate(
                 # a job *started* onto degraded capacity (a straggler can
                 # still hold the most free GPUs) is as migratable as one
                 # caught there by the event; placements never touch downed
-                # servers, so no dead-server check is needed here
+                # or draining servers (zero free), so neither needs a check
                 if offer_migrations:
                     sp = cluster.speed_factors
                     if sp and not sp.keys().isdisjoint(start.placement):
-                        straggler_watch.add(job.job_id)
+                        migration_watch.add(job.job_id)
             heappush(events, (completion, _COMPLETION, next(seq), (job, 0)))
         n_passes += 1
         depth = queue_depth()

@@ -11,6 +11,13 @@ scheduling problem:
   fraction of early-terminated runs (user kills / failed exploration), which
   is what makes iteration counts *uncertain* and prediction non-trivial;
 * Poisson arrivals with diurnal modulation over the horizon.
+
+Scenario-level samplers (``straggler_scenario``, ``elastic_scenario``,
+``elastic_events``) bundle a sampled trace with a cluster spec and a
+typed event timeline into one serializable
+:class:`~repro.core.scenario.Scenario` — the simulate() input since
+ISSUE 5 — so a single seed pins workload, cluster, and events, and the
+whole thing replays via ``benchmarks/sched_scale.py --scenario``.
 """
 from __future__ import annotations
 
@@ -21,6 +28,13 @@ import numpy as np
 
 from .job import ClusterSpec, JobSpec, RAR, ServerClass, TAR
 from .profiles import PAPER_MODELS, SINGLE_GPU_MODELS, make_job
+from .scenario import (
+    ClusterEvent,
+    Degradation,
+    Scenario,
+    ServerJoin,
+    ServerLeave,
+)
 
 # Mixed-generation server SKUs (gpus/server, NIC B/s, intra B/s): production
 # GPU clusters run several accelerator generations side by side (Hu et al.,
@@ -122,6 +136,89 @@ def straggler_events(
         )
     events.sort()
     return events
+
+
+def elastic_events(
+    servers: Sequence[int],
+    join_at: Optional[float],
+    leave_at: float = 0.0,
+    drain_timeout: float = 0.0,
+) -> List[ClusterEvent]:
+    """Elastic-capacity timeline: ``servers`` leave at ``leave_at`` and
+    (unless ``join_at`` is None — permanently lost capacity) rejoin at
+    ``join_at``.  ``leave_at=0.0`` with the default immediate
+    ``drain_timeout=0.0`` expresses "absent from the start" — the
+    ``ClusterSpec`` stays the full universe of server slots and the
+    scenario carves the live subset out of it (see scenario.py).
+    """
+    if join_at is not None and join_at <= leave_at:
+        # equality is rejected too: the canonical (t, server, kind)
+        # order applies joins *before* leaves at one instant, so a
+        # same-time pair would leave the servers down for good
+        raise ValueError(
+            f"join_at {join_at} precedes or coincides with "
+            f"leave_at {leave_at}"
+        )
+    events: List[ClusterEvent] = [
+        ServerLeave(float(leave_at), int(m), drain_timeout=drain_timeout)
+        for m in servers
+    ]
+    if join_at is not None:
+        events.extend(ServerJoin(float(join_at), int(m)) for m in servers)
+    return events
+
+
+def straggler_scenario(
+    cfg: "TraceConfig",
+    cluster: Optional[ClusterSpec] = None,
+    n_stragglers: int = 4,
+    event_seed: int = 0,
+    name: str = "",
+    **straggler_kw,
+) -> Scenario:
+    """Sample a full degradation scenario: trace + mixed cluster +
+    ``straggler_events`` timeline, bundled as one serializable
+    :class:`Scenario` (``cluster`` defaults to ``mixed_cluster_spec``
+    seeded like the trace, so one seed pins everything)."""
+    if cluster is None:
+        cluster = mixed_cluster_spec(seed=cfg.seed)
+    events = [
+        Degradation(t, m, factor=f)
+        for t, m, f in straggler_events(
+            cluster.num_servers, cfg.horizon, n_stragglers=n_stragglers,
+            seed=event_seed, **straggler_kw,
+        )
+    ]
+    return Scenario(
+        jobs=tuple(generate_trace(cfg)), cluster=cluster,
+        events=tuple(events), name=name or f"straggler-{cfg.seed}",
+    )
+
+
+def elastic_scenario(
+    cfg: "TraceConfig",
+    cluster: Optional[ClusterSpec] = None,
+    elastic_servers: Sequence[int] = (0, 1, 2, 3),
+    join_frac: Optional[float] = 0.5,
+    drain_timeout: float = 0.0,
+    name: str = "",
+) -> Scenario:
+    """Sample an elastic-capacity scenario: ``elastic_servers`` are absent
+    from the start and join at ``join_frac * cfg.horizon`` (None = never —
+    the static-degraded baseline the recovered flow time is measured
+    against in ``sched_scale --elastic``)."""
+    if cluster is None:
+        cluster = mixed_cluster_spec(seed=cfg.seed)
+    join_at = None if join_frac is None else join_frac * cfg.horizon
+    return Scenario(
+        jobs=tuple(generate_trace(cfg)), cluster=cluster,
+        events=tuple(
+            elastic_events(
+                elastic_servers, join_at, drain_timeout=drain_timeout
+            )
+        ),
+        name=name or f"elastic-{cfg.seed}",
+    )
 
 
 @dataclass

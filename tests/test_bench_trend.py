@@ -1,0 +1,132 @@
+"""benchmarks/bench_trend.py: BENCH_sched.json artifact aggregation."""
+import json
+import os
+import time
+
+import pytest
+
+pytestmark = pytest.mark.sched
+
+bench_trend = pytest.importorskip(
+    "benchmarks.bench_trend",
+    reason="benchmarks namespace package needs the repo root on sys.path",
+)
+
+
+def _write(path, eps, mtime=None):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(
+        json.dumps(
+            {"schema": 1, "bench": "sched_scale_budget",
+             "events_per_sec": eps, "rows": []}
+        )
+    )
+    if mtime is not None:
+        os.utime(path, (mtime, mtime))
+
+
+def test_trend_series_ordering_and_gaps(tmp_path):
+    now = time.time()
+    _write(
+        tmp_path / "run1" / "BENCH_sched.json",
+        {"A-SRPT": 100.0, "SPJF": 50.0}, mtime=now - 100,
+    )
+    _write(
+        tmp_path / "run2" / "BENCH_sched.json",
+        {"A-SRPT": 110.0, "NewPolicy": 7.0}, mtime=now - 50,
+    )
+    (tmp_path / "run3").mkdir()
+    corrupt = tmp_path / "run3" / "BENCH_sched.json"
+    corrupt.write_text("{not json")
+    os.utime(corrupt, (now - 25, now - 25))
+    _write(
+        tmp_path / "run4" / "BENCH_sched.json",
+        {"A-SRPT": 120.0, "SPJF": 55.0}, mtime=now,
+    )
+
+    files = bench_trend.discover([str(tmp_path)])
+    assert [f.parent.name for f in files] == ["run1", "run2", "run3", "run4"]
+    labels, series = bench_trend.load_series(files)
+    # the corrupt artifact is skipped, order is mtime-ascending
+    assert labels == [
+        "run1/BENCH_sched.json",
+        "run2/BENCH_sched.json",
+        "run4/BENCH_sched.json",
+    ]
+    assert series["A-SRPT"] == [100.0, 110.0, 120.0]
+    assert series["SPJF"] == [50.0, None, 55.0]  # absent run padded
+    assert series["NewPolicy"] == [None, 7.0, None]
+
+    ratios = bench_trend.latest_vs_first(series)
+    assert ratios["A-SRPT"] == 1.2
+    assert ratios["SPJF"] == 1.1
+    assert ratios["NewPolicy"] is None  # single point: no trend
+
+    md = bench_trend.to_markdown(labels, series)
+    lines = md.splitlines()
+    assert lines[0].startswith("| policy |")
+    assert any(line.startswith("| A-SRPT | 100 | 110 | 120 |") for line in lines)
+
+    out = bench_trend.to_trend_json(labels, series)
+    assert out["schema"] == 1 and out["artifacts"] == labels
+    # round-trips through strict JSON (None -> null)
+    assert json.loads(json.dumps(out)) == out
+
+
+def test_trend_main_end_to_end(tmp_path, capsys):
+    _write(tmp_path / "BENCH_sched_a.json", {"A-SRPT": 10.0})
+    out_json = tmp_path / "trend.json"
+    rc = bench_trend.main([str(tmp_path), "--json", str(out_json)])
+    assert rc == 0
+    assert "A-SRPT" in capsys.readouterr().out
+    assert json.loads(out_json.read_text())["events_per_sec"] == {
+        "A-SRPT": [10.0]
+    }
+
+
+def test_trend_no_artifacts(tmp_path):
+    assert bench_trend.main([str(tmp_path)]) == 1
+    with pytest.raises(FileNotFoundError):
+        bench_trend.discover([str(tmp_path / "missing")])
+
+
+def test_generated_at_overrides_mtime(tmp_path):
+    """Downloaded artifacts all share a download mtime; the recorded
+    generated_at run timestamp must win the ordering."""
+    now = time.time()
+    a = tmp_path / "runA" / "BENCH_sched.json"
+    b = tmp_path / "runB" / "BENCH_sched.json"
+    a.parent.mkdir()
+    b.parent.mkdir()
+    # runA ran LATER but was written to disk FIRST
+    a.write_text(json.dumps({
+        "schema": 1, "generated_at": "2026-07-28T12:00:00+00:00",
+        "events_per_sec": {"A-SRPT": 200.0}, "rows": [],
+    }))
+    b.write_text(json.dumps({
+        "schema": 1, "generated_at": "2026-07-28T09:00:00+00:00",
+        "events_per_sec": {"A-SRPT": 100.0}, "rows": [],
+    }))
+    os.utime(a, (now - 100, now - 100))
+    os.utime(b, (now, now))
+    labels, series = bench_trend.load_series(bench_trend.discover([str(tmp_path)]))
+    assert labels == ["runB/BENCH_sched.json", "runA/BENCH_sched.json"]
+    assert series["A-SRPT"] == [100.0, 200.0]
+    assert bench_trend.latest_vs_first(series)["A-SRPT"] == 2.0
+
+
+def test_naive_generated_at_is_utc(tmp_path):
+    f = tmp_path / "BENCH_sched.json"
+    f.write_text("{}")
+    naive = bench_trend._run_timestamp(f, {"generated_at": "2026-07-28T12:00:00"})
+    aware = bench_trend._run_timestamp(
+        f, {"generated_at": "2026-07-28T12:00:00+00:00"}
+    )
+    assert naive == aware
+
+
+def test_latest_vs_first_requires_policy_in_newest_artifact():
+    # dropped from the newest run: no trend headline (a stale point must
+    # not read as the current ratio)
+    assert bench_trend.latest_vs_first({"P": [50.0, 55.0, None]})["P"] is None
+    assert bench_trend.latest_vs_first({"P": [50.0, None, 60.0]})["P"] == 1.2

@@ -557,3 +557,74 @@ def test_alpha_speeds_reference_equals_array():
     a_ref = timing.alpha_reference(job, placement, cluster, speeds=speeds)
     assert a_arr == a_ref
     assert a_arr > timing.alpha(job, placement, cluster)
+
+
+# ---------------------------------------------------------------------------
+# queue-aware migration race guard (ISSUE 5 satellite; ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+def test_migration_queue_guard_deep_queue():
+    """The deep-queue case where the PR-4 greedy race migrates and loses.
+
+    One long job straddles a straggler; a queue of short jobs arrives at
+    the degradation instant.  Greedy moves the long job onto the only
+    free server — every short job then waits out its full occupancy.
+    The queue-aware guard charges the claim against the queue head
+    (shorter predicted duration than the migrant's penalty + remaining
+    time) and skips; the shorts run immediately and the long job still
+    migrates once the queue drains.  Net: guarded flow strictly lower.
+    """
+    cluster = _hom_cluster(n=2)
+    long_job = make_simple_job(job_id=0, replicas=(4,), p=1.0, n_iters=200)
+    shorts = [
+        make_simple_job(job_id=1 + i, replicas=(4,), p=1.0, n_iters=5,
+                        arrival=10.0)
+        for i in range(6)
+    ]
+    jobs = [long_job] + shorts
+    events = [(10.0, 0, 0.5)]  # the long job's server slows at t=10
+
+    def spjf(guard):
+        return BASELINES["SPJF"](
+            make_predictor("perfect"), migrate=True, migration_penalty=20.0,
+            migration_queue_guard=guard,
+        )
+
+    greedy = simulate(jobs, cluster, spjf(False), degradations=events)
+    guarded = simulate(jobs, cluster, spjf(True), degradations=events)
+    # greedy migrates at t=10 (queue full), claiming the free server
+    assert greedy.records[0].migrations == 1
+    assert greedy.records[0].start == 0.0
+    # the guard defers: shorts run first, the long job moves afterwards
+    assert guarded.records[0].migrations == 1
+    first_short_done_guarded = min(
+        guarded.records[j.job_id].completion for j in shorts
+    )
+    first_short_done_greedy = min(
+        greedy.records[j.job_id].completion for j in shorts
+    )
+    assert first_short_done_guarded < first_short_done_greedy
+    assert guarded.total_flow_time < greedy.total_flow_time
+
+
+def test_migration_queue_guard_noop_when_queue_empty():
+    """With nothing queued the guard never blocks: schedules match the
+    unguarded race bit for bit (a lone job can't compete with itself)."""
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(4,), p=1.0, n_iters=200)
+    events = [(10.0, 0, 0.25)]
+    base = simulate(
+        [job], cluster, _asrpt(migrate=True, migration_penalty=20.0),
+        degradations=events,
+    )
+    guarded = simulate(
+        [job], cluster,
+        _asrpt(migrate=True, migration_penalty=20.0,
+               migration_queue_guard=True),
+        degradations=events,
+    )
+    # the guard is invisible on an empty queue (and this exercises
+    # migration_queue_head's vm drain on the A-SRPT side)
+    assert base.records[0].migrations == 1
+    assert_identical(base, guarded)

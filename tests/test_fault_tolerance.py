@@ -197,10 +197,10 @@ class TestSchedulerReaction:
         )
 
         class FailingASRPT(ASRPTPolicy):
-            def schedule(self, t, cluster):
+            def plan_pass(self, t, cluster):
                 if t >= 100.0 and cluster.free.get(3, 0) > 0:
                     cluster.mark_server_down(3)  # failure detected
-                return super().schedule(t, cluster)
+                return super().plan_pass(t, cluster)
 
         jobs = [
             make_simple_job(job_id=i, replicas=(2,), p=0.5, h_mb=1,

@@ -25,7 +25,6 @@ Regenerate after a *deliberate* schedule change:
 
 and commit both fixture files with the PR that changed the schedule.
 """
-import hashlib
 import json
 import pathlib
 
@@ -37,17 +36,22 @@ from repro.core import (  # noqa: E402
     ASRPTPolicy,
     BASELINES,
     ClusterSpec,
+    Degradation,
+    Scenario,
     ServerClass,
     TraceConfig,
     generate_trace,
     make_predictor,
     simulate,
 )
-from repro.core.job import JobSpec, StageSpec  # noqa: E402
+from repro.core.scenario import jobs_from_dicts, jobs_to_dicts  # noqa: E402
 
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
 TRACE_PATH = GOLDEN_DIR / "trace.json"
 EXPECTED_PATH = GOLDEN_DIR / "expected.json"
+SCENARIO_PATH = GOLDEN_DIR / "scenario_straggler.json"
+# the committed Scenario fixture replays this expected.json entry
+SCENARIO_OF = "A-SRPT (migrate) @het+straggler"
 
 # Frozen trace recipe — only used by --regen; the committed trace.json is
 # what tests consume, so numpy RNG stream changes cannot shift fixtures.
@@ -58,13 +62,6 @@ TRACE_CFG = TraceConfig(
     single_gpu_frac=0.4,
     max_gpus_per_job=16,
 )
-
-_STAGE_FIELDS = ("p_f", "p_b", "d_in", "d_out", "h", "k")
-_JOB_FIELDS = (
-    "job_id", "n_iters", "arrival", "group_id", "user_id", "allreduce",
-    "model_name",
-)
-
 
 def _hom_cluster() -> ClusterSpec:
     return ClusterSpec(
@@ -133,40 +130,30 @@ SCENARIOS = {
 
 
 def dump_jobs(jobs) -> list:
-    out = []
-    for job in jobs:
-        d = {f: getattr(job, f) for f in _JOB_FIELDS}
-        d["stages"] = [
-            [getattr(st, f) for f in _STAGE_FIELDS] for st in job.stages
-        ]
-        out.append(d)
-    return out
+    return jobs_to_dicts(jobs)
 
 
 def load_jobs() -> list:
-    data = json.loads(TRACE_PATH.read_text())
-    jobs = []
-    for d in data:
-        stages = tuple(
-            StageSpec(**dict(zip(_STAGE_FIELDS, s))) for s in d["stages"]
-        )
-        jobs.append(
-            JobSpec(stages=stages, **{f: d[f] for f in _JOB_FIELDS})
-        )
-    return jobs
+    # the frozen trace is a documented instance of the Scenario jobs
+    # array (repro.core.scenario); loading through the one shared loader
+    # keeps the schema honest
+    return jobs_from_dicts(json.loads(TRACE_PATH.read_text()))
 
 
 def schedule_digest(result) -> str:
-    h = hashlib.sha256()
-    for jid in sorted(result.records):
-        r = result.records[jid]
-        h.update(
-            (
-                f"{jid}:{r.start!r}:{r.completion!r}:{r.alpha!r}:"
-                f"{r.servers}:{r.migrations}\n"
-            ).encode()
-        )
-    return h.hexdigest()
+    return result.schedule_digest()
+
+
+def straggler_scenario_fixture(jobs) -> Scenario:
+    """The straggler golden case as a first-class Scenario (committed at
+    ``tests/golden/scenario_straggler.json``; CI replays it through
+    ``sched_scale --scenario``)."""
+    return Scenario(
+        jobs=tuple(jobs),
+        cluster=_het_cluster(),
+        events=tuple(Degradation(t, m, factor=f) for t, m, f in _STRAGGLERS),
+        name="golden-straggler",
+    )
 
 
 def run_scenario(name: str, jobs):
@@ -210,6 +197,18 @@ def test_golden_schedule(name, golden_jobs, expected):
     assert got["n_migrations"] == want["n_migrations"], name
 
 
+def test_scenario_fixture_replays_straggler_golden(golden_jobs, expected):
+    """The committed Scenario file (jobs + cluster + events in one JSON)
+    loads through the schema and replays the straggler golden schedule
+    byte for byte — the serialization layer cannot drift from the
+    engine."""
+    sc = Scenario.load(SCENARIO_PATH)
+    assert sc == straggler_scenario_fixture(golden_jobs)
+    res = simulate(sc, _mean(migrate=True, migration_penalty=20.0))
+    assert res.schedule_digest() == expected[SCENARIO_OF]["sha256"]
+    assert res.total_flow_time == expected[SCENARIO_OF]["total_flow"]
+
+
 def test_frozen_trace_matches_recipe_stats():
     """Sanity on the committed trace itself (not the RNG): job count and
     GPU-demand clamp of the recipe hold."""
@@ -228,6 +227,7 @@ def _regen() -> None:
     jobs = load_jobs()  # fixtures must reflect the round-tripped trace
     expected = {name: run_scenario(name, jobs) for name in SCENARIOS}
     EXPECTED_PATH.write_text(json.dumps(expected, indent=2) + "\n")
+    straggler_scenario_fixture(jobs).dump(SCENARIO_PATH)
     for name, row in expected.items():
         print(f"{name}: flow={row['total_flow']!r} "
               f"depth={row['peak_depth']} migs={row['n_migrations']}")

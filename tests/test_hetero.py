@@ -366,7 +366,7 @@ class _LinearScanWCS(QueuePolicy):
             self.waiting, (-self._key(job), -job.arrival, -job.job_id, job)
         )
 
-    def schedule(self, t, cluster):
+    def plan_pass(self, t, cluster):
         starts = []
         waiting = self.waiting
         if not waiting or cluster.total_free == 0:

@@ -1,0 +1,880 @@
+"""Scenario/ClusterEvent API (ISSUE 5): serialization, shim equivalence,
+canonical event order, and elastic capacity.
+
+Anchor properties:
+
+* **Round trip** — ``Scenario.from_json(s.to_json()) == s`` for sampled
+  scenarios (all event kinds, including ``inf`` drain windows), and a
+  round-tripped scenario replays a *byte-identical* schedule.
+* **Legacy shim** — ``simulate(jobs, spec, faults=, degradations=)``
+  produces schedules bit-identical to ``simulate(Scenario(...),
+  policy)`` (the old keywords are sugar for event construction).
+* **Tie-break** — same-timestamp events on the same server apply in the
+  documented canonical order, independent of input interleaving (the
+  PR-5 bugfix: schedules used to depend on caller list order).
+* **Elastic capacity** — ``ServerLeave(drain_timeout=0)`` is the PR-2
+  fault path verbatim; ``ServerJoin`` restores capacity (class caps
+  minus held GPUs), wakes settled policies, and recovers flow time,
+  end to end under A-SRPT and a queue baseline.
+"""
+import math
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.sched
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ASRPTPolicy,
+    BASELINES,
+    ClusterSpec,
+    Degradation,
+    Fault,
+    Scenario,
+    SchedulingPolicy,
+    ServerClass,
+    ServerJoin,
+    ServerLeave,
+    TraceConfig,
+    elastic_events,
+    elastic_scenario,
+    generate_trace,
+    make_predictor,
+    scenario_from_legacy,
+    simulate,
+    straggler_scenario,
+)
+from repro.core.cluster import ClusterState
+from repro.core.scenario import event_from_dict, event_sort_key
+from repro.core.simulator import Allocation, Policy, Start
+
+from conftest import make_simple_job
+
+INF = float("inf")
+
+
+def assert_identical(ra, rb):
+    assert ra.schedule_digest() == rb.schedule_digest()
+    assert set(ra.records) == set(rb.records)
+    for jid, a in ra.records.items():
+        b = rb.records[jid]
+        assert (a.start, a.completion, a.alpha, a.servers, a.migrations) == (
+            b.start, b.completion, b.alpha, b.servers, b.migrations
+        ), jid
+
+
+def _hom_cluster(n=6):
+    return ClusterSpec(
+        num_servers=n, gpus_per_server=4, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+def _het_cluster():
+    return ClusterSpec.heterogeneous(
+        [
+            ServerClass(count=3, gpus_per_server=8, b_inter=12.5e9, name="a"),
+            ServerClass(count=3, gpus_per_server=8, b_inter=1.25e9, name="b"),
+            ServerClass(
+                count=3, gpus_per_server=4, b_inter=1.25e9, b_intra=50e9,
+                name="c",
+            ),
+        ],
+        b_intra=300e9,
+    )
+
+
+def _trace(seed, n_jobs=100, horizon=1500.0, max_g=16):
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=horizon,
+            seed=seed,
+            single_gpu_frac=0.4,
+            max_gpus_per_job=max_g,
+        )
+    )
+
+
+def _asrpt(**kw):
+    return ASRPTPolicy(make_predictor("mean"), tau=2.0, **kw)
+
+
+def _sample_events(rng, num_servers, horizon=1500.0):
+    """All four event kinds with random same-timestamp collisions."""
+    events = []
+    times = [float(rng.uniform(10.0, horizon)) for _ in range(6)]
+    times += times[:2]  # force same-t collisions
+    for i, t in enumerate(times):
+        m = int(rng.integers(0, num_servers))
+        kind = int(rng.integers(0, 4))
+        if kind == 0:
+            events.append(Fault(t, m))
+        elif kind == 1:
+            events.append(
+                Degradation(t, m, factor=float(rng.choice([0.0, 0.25, 0.5, 1.0])))
+            )
+        elif kind == 2:
+            events.append(
+                ServerLeave(
+                    t, m,
+                    drain_timeout=float(rng.choice([0.0, 60.0, INF])),
+                )
+            )
+        else:
+            events.append(ServerJoin(t, m))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# canonical event order + serialization unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_events_stored_in_canonical_order():
+    sc = Scenario(
+        jobs=(make_simple_job(),),
+        cluster=_hom_cluster(),
+        events=(
+            Degradation(10.0, 1, factor=0.5),
+            Fault(10.0, 1),
+            ServerLeave(10.0, 0, drain_timeout=5.0),
+            ServerJoin(10.0, 1),
+            Fault(5.0, 3),
+        ),
+    )
+    # (t, server, kind-rank join<degradation<leave<fault, magnitude)
+    assert sc.events == (
+        Fault(5.0, 3),
+        ServerLeave(10.0, 0, drain_timeout=5.0),
+        ServerJoin(10.0, 1),
+        Degradation(10.0, 1, factor=0.5),
+        Fault(10.0, 1),
+    )
+    assert sorted(sc.events, key=event_sort_key) == list(sc.events)
+
+
+def test_scenario_validates_event_servers():
+    with pytest.raises(ValueError, match="targets server 9"):
+        Scenario(
+            jobs=(make_simple_job(),),
+            cluster=_hom_cluster(n=4),
+            events=(Fault(1.0, 9),),
+        )
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        Degradation(1.0, 0, factor=-0.5)
+    with pytest.raises(ValueError):
+        ServerLeave(1.0, 0, drain_timeout=-1.0)
+    with pytest.raises(ValueError):
+        Fault(-1.0, 0)
+    with pytest.raises(ValueError, match="unknown event kind"):
+        event_from_dict({"kind": "maintenance", "t": 1.0, "server": 0})
+    with pytest.raises(ValueError, match="missing"):
+        event_from_dict({"kind": "degradation", "t": 1.0, "server": 0})
+
+
+def test_infinite_drain_timeout_serializes_as_null():
+    ev = ServerLeave(3.0, 1, drain_timeout=INF)
+    sc = Scenario(
+        jobs=(make_simple_job(),), cluster=_hom_cluster(), events=(ev,)
+    )
+    text = sc.to_json()
+    assert "Infinity" not in text
+    back = Scenario.from_json(text)
+    assert back.events == (ev,)
+    assert math.isinf(back.events[0].drain_timeout)
+
+
+def test_schema_version_enforced():
+    sc = Scenario(jobs=(make_simple_job(),), cluster=_hom_cluster())
+    d = sc.to_dict()
+    d["schema"] = 99
+    with pytest.raises(ValueError, match="unsupported scenario schema"):
+        Scenario.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# anchor property: JSON round trip (equality + byte-identical replay)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_scenario_json_roundtrip(seed, hetero):
+    rng = np.random.default_rng(seed)
+    cluster = _het_cluster() if hetero else _hom_cluster()
+    sc = Scenario(
+        jobs=tuple(_trace(seed, n_jobs=60, max_g=16)),
+        cluster=cluster,
+        events=tuple(_sample_events(rng, cluster.num_servers)),
+        name=f"roundtrip-{seed}",
+    )
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    # and the serialization is canonical: dumping again is a fixpoint
+    assert back.to_json() == sc.to_json()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_roundtripped_scenario_replays_byte_identical(seed):
+    rng = np.random.default_rng(seed)
+    cluster = _hom_cluster()
+    # degradations + faults only: keep every job startable (leaves could
+    # strand capacity below the largest job's demand)
+    events = tuple(
+        Degradation(
+            float(rng.uniform(50.0, 1200.0)),
+            int(rng.integers(0, cluster.num_servers)),
+            factor=float(rng.choice([0.0, 0.25, 0.5])),
+        )
+        for _ in range(3)
+    )
+    sc = Scenario(
+        jobs=tuple(_trace(seed, n_jobs=80)), cluster=cluster, events=events
+    )
+    back = Scenario.from_json(sc.to_json())
+    ra = simulate(sc, _asrpt(migrate=True, migration_penalty=30.0))
+    rb = simulate(back, _asrpt(migrate=True, migration_penalty=30.0))
+    assert_identical(ra, rb)
+
+
+# ---------------------------------------------------------------------------
+# anchor property: the legacy shim is bit-identical
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_legacy_shim_bit_identical(seed, use_baseline):
+    rng = np.random.default_rng(seed)
+    cluster = _hom_cluster()
+    faults = [(float(rng.uniform(100.0, 800.0)), 0)]
+    degradations = [
+        (float(rng.uniform(100.0, 800.0)), 2, 0.25),
+        (float(rng.uniform(100.0, 800.0)), 3, 0.5),
+    ]
+    jobs = _trace(seed, n_jobs=80)
+
+    def mk():
+        if use_baseline:
+            return BASELINES["WCS-SubTime"](
+                make_predictor("mean"), migrate=True, migration_penalty=20.0
+            )
+        return _asrpt(migrate=True, migration_penalty=20.0)
+
+    legacy = simulate(
+        jobs, cluster, mk(), faults=faults, degradations=degradations
+    )
+    sc = scenario_from_legacy(
+        jobs, cluster, faults=faults, degradations=degradations
+    )
+    explicit = simulate(sc, mk())
+    assert_identical(legacy, explicit)
+
+
+def test_scenario_rejects_legacy_keywords():
+    sc = Scenario(jobs=(make_simple_job(),), cluster=_hom_cluster())
+    with pytest.raises(TypeError, match="legacy signature"):
+        simulate(sc, _asrpt(), faults=[(1.0, 0)])
+    with pytest.raises(TypeError, match="SchedulingPolicy"):
+        simulate(sc, None)
+
+
+# ---------------------------------------------------------------------------
+# tie-break bugfix: same-timestamp same-server events are order-stable
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_same_timestamp_tiebreak_input_order_irrelevant(seed):
+    rng = np.random.default_rng(seed)
+    cluster = _hom_cluster()
+    jobs = _trace(seed, n_jobs=60)
+    t = float(rng.uniform(100.0, 800.0))
+    m = int(rng.integers(0, cluster.num_servers))
+    # a fault and a slowdown landing on the same server at the same
+    # instant, plus a same-instant slowdown elsewhere
+    events = [
+        Fault(t, m),
+        Degradation(t, m, factor=0.5),
+        Degradation(t, (m + 1) % cluster.num_servers, factor=0.25),
+    ]
+    digests = set()
+    for order in (events, events[::-1], [events[1], events[2], events[0]]):
+        sc = Scenario(jobs=tuple(jobs), cluster=cluster, events=tuple(order))
+        res = simulate(sc, _asrpt(migrate=True, migration_penalty=30.0))
+        digests.add(res.schedule_digest())
+    assert len(digests) == 1
+    # the documented ranking: the fault wins the instant (the server is
+    # down afterwards, whatever the input interleaving)
+    state = ClusterState(cluster)
+    for ev in sc.events:
+        if isinstance(ev, Fault):
+            state.mark_server_down(ev.server)
+        elif isinstance(ev, Degradation):
+            state.set_server_speed(ev.server, ev.factor)
+    assert m in state.downed_servers
+
+
+def test_legacy_keyword_interleaving_is_canonicalized(cluster):
+    """faults= and degradations= hitting one (t, server) produce the same
+    schedule whichever keyword order the caller used (previously the
+    fault list was always applied first)."""
+    jobs = _trace(3, n_jobs=50)
+    t, m = 300.0, 1
+    ra = simulate(
+        jobs, cluster, _asrpt(), faults=[(t, m)],
+        degradations=[(t, m, 0.5)],
+    )
+    rb = simulate(
+        jobs, cluster, _asrpt(), degradations=[(t, m, 0.5), (t, m, 0.0)]
+    )
+    assert_identical(ra, rb)
+
+
+# ---------------------------------------------------------------------------
+# elastic capacity: ServerLeave
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_leave_zero_timeout_equals_fault_path(seed, migrate):
+    """Acceptance: drain_timeout=0 leaves are the PR-2 fault path."""
+    rng = np.random.default_rng(seed)
+    cluster = _hom_cluster()
+    jobs = _trace(seed, n_jobs=80)
+    t = float(rng.uniform(50.0, 1200.0))
+    m = int(rng.integers(0, cluster.num_servers))
+
+    def mk():
+        return _asrpt(migrate=migrate, migration_penalty=0.0)
+
+    via_fault = simulate(jobs, cluster, mk(), faults=[(t, m)])
+    sc = Scenario(
+        jobs=tuple(jobs), cluster=cluster,
+        events=(ServerLeave(t, m, drain_timeout=0.0),),
+    )
+    via_leave = simulate(sc, mk())
+    assert_identical(via_fault, via_leave)
+
+
+def test_graceful_drain_semantics():
+    """During a drain window: no new allocations on the leaving server,
+    running jobs finish in place, capacity is forfeited on release."""
+    cluster = _hom_cluster(n=2)
+    running = make_simple_job(job_id=0, replicas=(4,), n_iters=50, p=1.0)
+    late = make_simple_job(
+        job_id=1, replicas=(4,), n_iters=5, p=1.0, arrival=10.0
+    )
+    sc = Scenario(
+        jobs=(running, late), cluster=cluster,
+        events=(ServerLeave(5.0, 0, drain_timeout=INF),),
+    )
+    res = simulate(sc, _asrpt())
+    r0, r1 = res.records[0], res.records[1]
+    assert r0.start == 0.0
+    # job 0 keeps its placement to completion (finish in place, un-re-timed)
+    clean = simulate([running], cluster, _asrpt())
+    assert r0.completion == clean.records[0].completion
+    # job 1 can only use the surviving server
+    assert r1.servers == (1,) or 0 not in r1.servers
+
+
+def test_drain_window_offers_migration_candidates():
+    """While a drain window is open, jobs on the leaving server are
+    offered to plan_migrations; after the deadline they are not."""
+    offers = []
+
+    class Spy(ASRPTPolicy):
+        def plan_migrations(self, t, cluster, candidates):
+            offers.append((t, [r.job.job_id for r in candidates]))
+            return []
+
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(4,), n_iters=100, p=1.0)
+    poker = make_simple_job(
+        job_id=1, replicas=(1,), n_iters=1, p=0.1, arrival=20.0
+    )
+    sc = Scenario(
+        jobs=(job, poker), cluster=cluster,
+        events=(ServerLeave(5.0, 0, drain_timeout=30.0),),
+    )
+    simulate(sc, Spy(make_predictor("mean"), tau=2.0, migrate=True))
+    watched = [t for t, jids in offers if 0 in jids]
+    assert watched and all(5.0 <= t <= 35.0 for t in watched)
+    # after the deadline (t=35) the job finishes in place, unwatched
+    assert not [t for t, jids in offers if t > 35.0 and 0 in jids]
+
+
+def test_drain_window_migration_moves_job_off_leaving_server():
+    """A migration-capable policy checkpoint-restarts off a draining
+    server when the fresh placement wins the race: an undegraded drain
+    alone never beats the penalty (stay keeps full speed), but once the
+    draining server also degrades, moving wins."""
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(4,), n_iters=200, p=1.0)
+    sc = Scenario(
+        jobs=(job,), cluster=cluster,
+        events=(
+            ServerLeave(10.0, 0, drain_timeout=INF),
+            Degradation(12.0, 0, factor=0.25),
+        ),
+    )
+    res = simulate(
+        sc, _asrpt(migrate=True, migration_penalty=10.0)
+    )
+    rec = res.records[0]
+    assert rec.migrations == 1
+    assert rec.servers == (1,)
+
+
+# ---------------------------------------------------------------------------
+# elastic capacity: ServerJoin
+# ---------------------------------------------------------------------------
+
+
+def test_join_restores_capacity_and_wakes_policy():
+    """A job too big for the initial live capacity starts the moment the
+    absent server joins (epoch bump wakes the settled policy)."""
+    cluster = _hom_cluster(n=2)
+    big = make_simple_job(job_id=0, replicas=(3, 3), n_iters=10, p=0.5)
+    sc = Scenario(
+        jobs=(big,), cluster=cluster,
+        events=(ServerLeave(0.0, 1), ServerJoin(40.0, 1)),
+    )
+    res = simulate(sc, _asrpt())
+    rec = res.records[0]
+    assert rec.start == 40.0  # nothing but the join could start it
+    assert set(rec.servers) == {0, 1}
+
+
+def test_join_restores_class_capacity_minus_held():
+    state = ClusterState(_hom_cluster(n=2))
+    state.allocate(7, {0: np.array([2])}, counts={0: 2})
+    state.mark_server_down(0)
+    assert state.free[0] == 0 and state.total_free == 4
+    assert state.activate_server(0)
+    # 4-GPU class cap minus the 2 GPUs job 7 still holds
+    assert state.free[0] == 2 and state.total_free == 6
+    state.release(7)  # server active again: held GPUs return
+    assert state.free[0] == 4 and state.total_free == 8
+    assert not state.activate_server(0)  # no-op join
+
+
+def test_join_after_leave_recovers_flow_under_both_policy_kinds():
+    """Acceptance: the elastic scenario runs end to end under A-SRPT and
+    a queue baseline, and joining capacity mid-trace recovers flow time
+    vs the static-degraded cluster."""
+    cfg = TraceConfig(
+        n_jobs=120, horizon=1500.0, seed=7, single_gpu_frac=0.4,
+        max_gpus_per_job=8,
+    )
+    cluster = _hom_cluster(n=6)
+    static = elastic_scenario(
+        cfg, cluster, elastic_servers=(0, 1), join_frac=None
+    )
+    elastic = elastic_scenario(
+        cfg, cluster, elastic_servers=(0, 1), join_frac=0.3
+    )
+    assert elastic.events[-1] == ServerJoin(0.3 * cfg.horizon, 1)
+    for mk in (
+        lambda: _asrpt(),
+        lambda: BASELINES["WCS-SubTime"](make_predictor("mean")),
+    ):
+        r_static = simulate(static, mk())
+        r_elastic = simulate(elastic, mk())
+        assert len(r_elastic.records) == len(static.jobs)
+        assert (
+            r_elastic.total_flow_time < r_static.total_flow_time
+        ), type(mk()).__name__
+        # joined capacity is actually used
+        used = {
+            m for r in r_elastic.records.values() for m in r.servers
+        }
+        assert {0, 1} & used
+
+
+def test_join_resurrects_faulted_server():
+    """A join on a *failed* slot models replacement hardware: capacity
+    returns and is used again."""
+    cluster = _hom_cluster(n=2)
+    jobs = [
+        make_simple_job(job_id=i, replicas=(4,), n_iters=10, p=0.5,
+                        arrival=float(10 * i))
+        for i in range(8)
+    ]
+    sc = Scenario(
+        jobs=tuple(jobs), cluster=cluster,
+        events=(Fault(5.0, 0), ServerJoin(50.0, 0)),
+    )
+    res = simulate(sc, _asrpt())
+    used_after_join = {
+        m
+        for r in res.records.values()
+        if r.start >= 50.0
+        for m in r.servers
+    }
+    assert 0 in used_after_join
+    # and between the fault and the join, nothing lands on server 0
+    assert not any(
+        0 in r.servers
+        for r in res.records.values()
+        if 5.0 <= r.start < 50.0
+    )
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_elastic_scenario_runs_on_mixed_cluster(seed):
+    """End-to-end elastic churn on a heterogeneous cluster with a
+    migration-capable policy (events + drains compose with stragglers).
+    """
+    cluster = _het_cluster()
+    jobs = _trace(seed, n_jobs=60, max_g=8)
+    events = (
+        ServerLeave(0.0, 0),
+        Degradation(200.0, 4, factor=0.5),
+        ServerJoin(400.0, 0),
+        ServerLeave(600.0, 5, drain_timeout=100.0),
+        Degradation(700.0, 4, factor=1.0),
+    )
+    sc = Scenario(jobs=tuple(jobs), cluster=cluster, events=events)
+    res = simulate(sc, _asrpt(migrate=True, migration_penalty=30.0))
+    assert len(res.records) == len(jobs)
+
+
+# ---------------------------------------------------------------------------
+# policy protocol
+# ---------------------------------------------------------------------------
+
+
+def test_policies_satisfy_protocol():
+    assert isinstance(_asrpt(), SchedulingPolicy)
+    assert isinstance(
+        BASELINES["SPJF"](make_predictor("mean")), SchedulingPolicy
+    )
+    assert not isinstance(object(), SchedulingPolicy)
+
+
+def test_on_event_hook_sees_full_timeline():
+    seen = []
+
+    class Hooked(ASRPTPolicy):
+        def on_event(self, t, event, cluster):
+            seen.append((t, type(event).__name__, event.server))
+
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(2,), n_iters=5, p=0.5)
+    events = (
+        Degradation(2.0, 1, factor=0.5),
+        Degradation(3.0, 1, factor=0.5),  # no-op repeat: still reported
+        Fault(4.0, 1),
+    )
+    sc = Scenario(jobs=(job,), cluster=cluster, events=events)
+    simulate(sc, Hooked(make_predictor("mean"), tau=2.0))
+    assert seen == [
+        (2.0, "Degradation", 1),
+        (3.0, "Degradation", 1),
+        (4.0, "Fault", 1),
+    ]
+
+
+def test_third_party_policy_via_protocol():
+    """A from-scratch policy implementing the protocol (no in-tree base
+    beyond ``Policy``'s defaults) runs end to end with typed results."""
+
+    class Greedy(Policy):
+        """Start everything that fits, in arrival order, on one server."""
+
+        def __init__(self):
+            self.queue = []
+
+        def on_arrival(self, t, job):
+            self.queue.append(job)
+
+        def plan_pass(self, t, cluster):
+            from repro.core import timing
+            from repro.core.heavy_edge import select_servers
+
+            starts = []
+            for job in list(self.queue):
+                if job.g > cluster.total_free:
+                    break
+                caps = select_servers(
+                    cluster.free, job.g, consolidate=True,
+                    spec=self.cluster_spec,
+                )
+                placement = {}
+                left = job.g
+                vid = 0
+                for m, c in caps:
+                    take = min(c, left)
+                    vec = np.zeros(job.num_stages, dtype=np.int64)
+                    for _ in range(take):
+                        # fill stages round-robin replica by replica
+                        s = 0
+                        acc = 0
+                        for si, stg in enumerate(job.stages):
+                            if vid < acc + stg.k:
+                                s = si
+                                break
+                            acc += stg.k
+                        vec[s] += 1
+                        vid += 1
+                    placement[m] = vec
+                    left -= take
+                a = timing.alpha(job, placement, self.cluster_spec)
+                starts.append(Allocation(job, placement, a))
+                cluster.allocate(job.job_id, placement, counts=dict(caps))
+                self.queue.remove(job)
+            return starts
+
+    sc = Scenario(
+        jobs=tuple(
+            make_simple_job(job_id=i, replicas=(2,), n_iters=5, p=0.5,
+                            arrival=float(i))
+            for i in range(4)
+        ),
+        cluster=_hom_cluster(n=2),
+    )
+    pol = Greedy()
+    assert isinstance(pol, SchedulingPolicy)
+    res = simulate(sc, pol)
+    assert len(res.records) == 4
+
+
+def test_legacy_schedule_alias_still_callable():
+    """Pre-protocol callers used policy.schedule(t, cluster); the alias
+    delegates to plan_pass."""
+    pol = BASELINES["SPJF"](make_predictor("mean"))
+    spec = _hom_cluster(n=2)
+    pol.bind(spec)
+    state = ClusterState(spec)
+    pol.on_arrival(0.0, make_simple_job(job_id=0, replicas=(2,)))
+    starts = pol.schedule(0.0, state)
+    assert len(starts) == 1 and isinstance(starts[0], Start)
+
+
+# ---------------------------------------------------------------------------
+# trace-level samplers
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_scenario_sampler_roundtrips():
+    cfg = TraceConfig(n_jobs=40, horizon=800.0, seed=3, max_gpus_per_job=8)
+    sc = straggler_scenario(cfg, n_stragglers=2)
+    assert sc.cluster.is_heterogeneous
+    assert all(isinstance(ev, Degradation) for ev in sc.events)
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+def test_elastic_events_validation():
+    with pytest.raises(ValueError, match="precedes"):
+        elastic_events([0], join_at=5.0, leave_at=10.0)
+    evs = elastic_events([0, 1], join_at=None)
+    assert all(isinstance(ev, ServerLeave) for ev in evs)
+
+
+# ---------------------------------------------------------------------------
+# review regressions: stale drain deadlines, custom events, legacy dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_stale_drain_deadline_does_not_close_reopened_window():
+    """leave -> join (cancels the drain) -> leave again: the first
+    leave's deadline must not close the *second* window early — the job
+    stays migration-offered until the second deadline."""
+    offers = []
+
+    class Spy(ASRPTPolicy):
+        def plan_migrations(self, t, cluster, candidates):
+            offers.append((t, [r.job.job_id for r in candidates]))
+            return []
+
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(4,), n_iters=400, p=1.0)
+    pokers = tuple(
+        make_simple_job(job_id=1 + i, replicas=(1,), n_iters=1, p=0.1,
+                        arrival=a)
+        for i, a in enumerate((150.0, 200.0, 280.0))
+    )
+    sc = Scenario(
+        jobs=(job,) + pokers, cluster=cluster,
+        events=(
+            ServerLeave(10.0, 0, drain_timeout=100.0),  # deadline t=110
+            ServerJoin(50.0, 0),                        # cancels the drain
+            ServerLeave(60.0, 0, drain_timeout=200.0),  # deadline t=260
+        ),
+    )
+    simulate(sc, Spy(make_predictor("mean"), tau=2.0, migrate=True))
+    watched = [t for t, jids in offers if 0 in jids]
+    # the second window spans (60, 260): offers inside (110, 260) prove
+    # the stale t=110 deadline was dropped
+    assert any(110.0 < t < 260.0 for t in watched), watched
+    assert not any(t > 260.0 for t in watched), watched
+
+
+def test_custom_event_kind_reaches_on_event():
+    """Policy-defined ClusterEvent subclasses sort into the timeline,
+    reach on_event, trigger a pass, and refuse to serialize with a clear
+    error (schema v1 covers the built-ins only)."""
+    from dataclasses import dataclass
+
+    from repro.core import ClusterEvent
+
+    @dataclass(frozen=True)
+    class Maintenance(ClusterEvent):
+        note: str = ""
+
+    seen = []
+
+    class Hooked(ASRPTPolicy):
+        def on_event(self, t, event, cluster):
+            seen.append((t, type(event).__name__))
+
+    cluster = _hom_cluster(n=2)
+    job = make_simple_job(job_id=0, replicas=(2,), n_iters=5, p=0.5)
+    sc = Scenario(
+        jobs=(job,), cluster=cluster,
+        events=(Maintenance(2.0, 1, note="fan swap"), Fault(2.0, 1)),
+    )
+    # custom kinds rank after built-ins at one (t, server)
+    assert [type(ev).__name__ for ev in sc.events] == [
+        "Fault", "Maintenance"
+    ]
+    res = simulate(sc, Hooked(make_predictor("mean"), tau=2.0))
+    assert seen == [(2.0, "Fault"), (2.0, "Maintenance")]
+    assert len(res.records) == 1
+    with pytest.raises(ValueError, match="policy-defined"):
+        sc.to_json()
+
+
+def test_pre_protocol_schedule_override_still_dispatched():
+    """A PR 1-4-era subclass overriding only ``schedule`` keeps working:
+    the simulator dispatches through the override (regression for the
+    plan_pass rename)."""
+    calls = []
+
+    class LegacyASRPT(ASRPTPolicy):
+        def schedule(self, t, cluster):  # pre-protocol override point
+            calls.append(t)
+            return super().schedule(t, cluster)
+
+    jobs = _trace(2, n_jobs=30)
+    cluster = _hom_cluster()
+    legacy = simulate(jobs, cluster, LegacyASRPT(make_predictor("mean"), tau=2.0))
+    assert calls, "override was never dispatched"
+    modern = simulate(jobs, cluster, _asrpt())
+    assert_identical(legacy, modern)
+
+
+def test_join_cancelling_drain_prunes_migration_watch():
+    """A join that cancels a drain un-risks the server: its jobs drop
+    off the migration watch even while other servers stay degraded."""
+    offers = []
+
+    class Spy(ASRPTPolicy):
+        def plan_migrations(self, t, cluster, candidates):
+            offers.append((t, [r.job.job_id for r in candidates]))
+            return []
+
+    cluster = _hom_cluster(n=3)
+    job = make_simple_job(job_id=0, replicas=(4,), n_iters=400, p=1.0)
+    pokers = tuple(
+        make_simple_job(job_id=1 + i, replicas=(1,), n_iters=1, p=0.1,
+                        arrival=a)
+        for i, a in enumerate((20.0, 40.0))
+    )
+    sc = Scenario(
+        jobs=(job,) + pokers, cluster=cluster,
+        events=(
+            ServerLeave(5.0, 0, drain_timeout=INF),
+            Degradation(6.0, 2, factor=0.5),  # keeps the risky set alive
+            ServerJoin(10.0, 0),              # cancels the drain
+        ),
+    )
+    simulate(sc, Spy(make_predictor("mean"), tau=2.0, migrate=True))
+    # watched while draining, dropped at the join
+    assert any(0 in jids for t, jids in offers if t < 10.0)
+    assert not any(0 in jids for t, jids in offers if t >= 10.0), offers
+
+
+def test_from_dict_rejects_unknown_fields():
+    """The schema promise: typo'd fields fail loudly instead of silently
+    taking defaults (a 'drain_timout' leave would otherwise become an
+    immediate kill)."""
+    with pytest.raises(ValueError, match="drain_timout"):
+        event_from_dict(
+            {"kind": "leave", "t": 5.0, "server": 1, "drain_timout": 120.0}
+        )
+    with pytest.raises(ValueError, match="factor"):
+        event_from_dict(
+            {"kind": "fault", "t": 5.0, "server": 1, "factor": 0.5}
+        )
+    sc = Scenario(jobs=(make_simple_job(),), cluster=_hom_cluster())
+    d = sc.to_dict()
+    d["extra_section"] = []
+    with pytest.raises(ValueError, match="extra_section"):
+        Scenario.from_dict(d)
+    d = sc.to_dict()
+    d["jobs"][0]["n_iter"] = 5
+    with pytest.raises(ValueError, match="n_iter"):
+        Scenario.from_dict(d)
+    d = sc.to_dict()
+    d["cluster"]["gpus"] = 4
+    with pytest.raises(ValueError, match="gpus"):
+        Scenario.from_dict(d)
+
+
+def test_elastic_events_rejects_same_instant_join():
+    # at one instant the canonical order applies the join first, so a
+    # coinciding pair would strand the servers — rejected up front
+    with pytest.raises(ValueError, match="coincides"):
+        elastic_events([0], join_at=10.0, leave_at=10.0)
+
+
+def test_legacy_simulate_without_policy_raises_cleanly():
+    jobs = [make_simple_job(job_id=0, replicas=(2,))]
+    with pytest.raises(TypeError, match="SchedulingPolicy"):
+        simulate(jobs, _hom_cluster())
+    with pytest.raises(TypeError, match="SchedulingPolicy"):
+        simulate(jobs, _hom_cluster(), validate=False)
+
+
+def test_scenario_form_rejects_extra_cluster_spec():
+    sc = Scenario(jobs=(make_simple_job(),), cluster=_hom_cluster())
+    with pytest.raises(TypeError, match="carries its own cluster"):
+        simulate(sc, _hom_cluster(n=2), _asrpt())
+
+
+def test_nonfinite_event_fields_rejected():
+    nan = float("nan")
+    with pytest.raises(ValueError, match="finite"):
+        Fault(nan, 0)
+    with pytest.raises(ValueError):
+        Fault(INF, 0)
+    with pytest.raises(ValueError, match="finite"):
+        Degradation(1.0, 0, factor=nan)
+    with pytest.raises(ValueError):
+        ServerLeave(1.0, 0, drain_timeout=nan)
+    # a NaN-time scenario file fails from_dict instead of corrupting the
+    # event heap (json.loads parses NaN)
+    import json as _json
+
+    with pytest.raises(ValueError, match="finite"):
+        Scenario.from_dict(_json.loads(
+            '{"schema": 1, "name": "", '
+            '"cluster": {"num_servers": 1, "gpus_per_server": 4, '
+            '"b_inter": 1.0, "b_intra": 1.0}, "jobs": [], '
+            '"events": [{"kind": "fault", "t": NaN, "server": 0}]}'
+        ))
