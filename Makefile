@@ -6,7 +6,8 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-sched lint smoke bench-sched bench-hetero \
-	bench-straggler bench-elastic bench-budget bench-trend ci
+	bench-straggler bench-elastic bench-stream bench-guard \
+	bench-budget bench-trend ci
 
 test:
 	python -m pytest -x -q
@@ -51,6 +52,22 @@ bench-straggler:
 # flow_vs_static < 1 = recovered flow time).
 bench-elastic:
 	python -m benchmarks.sched_scale --elastic $(if $(FULL),--full,)
+
+# Bounded-memory streaming replay: STREAM_JOBS (default 1M) synthetic
+# jobs generated, scheduled, and aggregated lazily under an enforced
+# peak-RSS ceiling (what the CI streaming-memory job runs).  Point
+# TRACE at a CSV to replay a datacenter-style trace instead.
+STREAM_JOBS ?= 1000000
+STREAM_RSS_MB ?= 512
+bench-stream:
+	python -m benchmarks.sched_scale \
+		$(if $(TRACE),--trace $(TRACE),--stream $(STREAM_JOBS)) \
+		--max-rss-mb $(STREAM_RSS_MB)
+
+# migration_queue_guard A/B at 20k-job straggler scale
+# (flow_vs_unguarded < 1 = the queue-aware race wins).
+bench-guard:
+	python -m benchmarks.sched_scale --guard
 
 # Aggregate BENCH_sched*.json artifacts (downloaded CI runs and/or the
 # committed baseline) into a per-policy events/sec trend table.  Default

@@ -51,6 +51,19 @@ Variants:
   scenario.py) under ``--policy`` (default A-SRPT).  The row includes
   the schedule sha256, so replays double as cross-machine equivalence
   checks.
+* ``--stream [N]`` / ``sched_scale_stream`` — bounded-memory replay: an
+  ``N``-job (default 1M) synthetic trace is *generated, scheduled, and
+  folded into aggregates lazily* — no jobs list, no records dict — and
+  the row reports events/sec plus ``peak_rss_mb`` (getrusage max RSS,
+  whole process).  ``--max-rss-mb`` turns the memory claim into an
+  enforced exit code (the CI streaming-memory job runs 1M jobs under a
+  ceiling).  See benchmarks/README.md for the bounded-memory guarantee.
+* ``--trace FILE.csv`` — the same streaming replay over a real
+  datacenter-style CSV trace (Philly/PAI columns; see
+  repro.core.trace_ingest for the format and malformed-row policy).
+* ``--guard`` — migration_queue_guard A/B at the straggler variant's
+  20k-job scale: the unguarded migrate row vs the queue-aware race, with
+  ``flow_vs_unguarded`` as the verdict column.
 * ``--budget`` / ``sched_scale_budget`` — a CI-sized subset (one size,
   best-of-3 cold-start samples per policy) whose events/sec per policy is
   written to ``BENCH_sched.json`` for trend tracking; ``--check``
@@ -72,12 +85,15 @@ from repro.core import (
     ClusterSpec,
     Scenario,
     ServerClass,
+    StreamTraceConfig,
     TraceConfig,
     elastic_events,
     generate_trace,
     make_predictor,
     simulate,
     straggler_events,
+    stream_trace_source,
+    trace_jobs_source,
 )
 
 from .common import make_cluster
@@ -249,6 +265,62 @@ def sched_scale_hetero(full: bool = False) -> List[Dict]:
     return rows
 
 
+def _peak_rss_mb() -> float:
+    """Whole-process peak resident set, MB (ru_maxrss is KB on Linux)."""
+    import resource
+    import sys
+
+    kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":  # bytes there
+        kb /= 1024.0
+    return round(kb / 1024.0, 1)
+
+
+STREAM_JOBS_DEFAULT = 1_000_000
+
+
+def sched_scale_stream(
+    n_jobs: int = STREAM_JOBS_DEFAULT,
+    trace_csv: Optional[str] = None,
+    arrival_rate: Optional[float] = None,
+) -> List[Dict]:
+    """Bounded-memory streaming replay (--stream / --trace FILE.csv).
+
+    The jobs source is lazy (``stream_trace`` chunks or a CSV line
+    reader), the simulator feeds its arrival heap incrementally, and the
+    result backend folds each completed record into running aggregates —
+    so resident memory scales with the *live* job count (peak queue
+    depth), not the trace length.  ``peak_rss_mb`` on the row is the
+    measured whole-process ceiling; at the default half-utilization
+    arrival rate a million jobs stay in the tens of MB.
+
+    The policy is the cached A-SRPT engine without refine_mapping (the
+    throughput configuration); the predictor is the O(1)-per-group
+    running-mean.  With ``trace_csv`` the row replays the CSV instead of
+    the synthetic stream (same cluster, same policy).
+    """
+    cluster = make_cluster(num_servers=NUM_SERVERS)
+    if trace_csv is not None:
+        src = trace_jobs_source(trace_csv)
+        label = f"A-SRPT (stream, csv:{trace_csv})"
+    else:
+        cfg = StreamTraceConfig(
+            n_jobs=n_jobs,
+            **(
+                {} if arrival_rate is None
+                else {"arrival_rate": arrival_rate}
+            ),
+        )
+        src = stream_trace_source(cfg)
+        label = f"A-SRPT (stream, {n_jobs} synthetic)"
+    pol = ASRPTPolicy(make_predictor("mean"), tau=2.0)
+    res = simulate(src, cluster, pol, validate=False)
+    assert res.records is None  # streaming backend engaged
+    row = _row(res.n_jobs, label, res)
+    row["peak_rss_mb"] = _peak_rss_mb()
+    return [row]
+
+
 def sched_scale_straggler(full: bool = False) -> List[Dict]:
     """Degradation scenario: stragglers on the mixed cluster, stay vs move.
 
@@ -284,6 +356,44 @@ def sched_scale_straggler(full: bool = False) -> List[Dict]:
                 jobs, cluster, pol, validate=False, degradations=deg
             )
             rows.append(_row(n, "WCS-SubTime (straggler, stay)", res))
+    return rows
+
+
+def sched_scale_guard(full: bool = False) -> List[Dict]:
+    """migration_queue_guard A/B (--guard): the straggler recipe at 20k
+    jobs, migration-capable A-SRPT with the guard off vs on.
+
+    The guard races a queued job's predicted start against the migration
+    candidate's restart (migration.py): it blocks a checkpoint-restart
+    whose freed-capacity claim would merely displace queued work.
+    ``flow_vs_unguarded`` < 1.0 on the guard row means the queue-aware
+    race wins at scale and the default should flip (ROADMAP carry-over
+    from PR 4; decided by this row, see asrpt.py).
+    """
+    cluster = _hetero_cluster()
+    rows: List[Dict] = []
+    for n in STRAGGLER_SIZES:
+        jobs = _trace(n, seconds_per_job=STRAGGLER_SECONDS_PER_JOB)
+        deg = _straggler_degradations(n)
+        off = simulate(
+            jobs, cluster,
+            _asrpt(migrate=True, migration_queue_guard=False),
+            validate=False, degradations=deg,
+        )
+        orow = _row(n, "A-SRPT (straggler, migrate, guard off)", off)
+        orow["n_migrations"] = off.n_migrations
+        rows.append(orow)
+        on = simulate(
+            jobs, cluster,
+            _asrpt(migrate=True, migration_queue_guard=True),
+            validate=False, degradations=deg,
+        )
+        grow = _row(n, "A-SRPT (straggler, migrate, guard on)", on)
+        grow["n_migrations"] = on.n_migrations
+        grow["flow_vs_unguarded"] = round(
+            on.total_flow_time / off.total_flow_time, 4
+        )
+        rows.append(grow)
     return rows
 
 
@@ -540,6 +650,33 @@ def main(argv: Optional[List[str]] = None) -> int:
              "< 1 = recovered flow time), A-SRPT + WCS-SubTime",
     )
     ap.add_argument(
+        "--stream", metavar="N", nargs="?", const=STREAM_JOBS_DEFAULT,
+        default=None, type=int,
+        help="bounded-memory streaming replay of an N-job (default 1M) "
+             "synthetic trace; reports events/sec and peak_rss_mb",
+    )
+    ap.add_argument(
+        "--trace", metavar="FILE.csv", default=None,
+        help="streaming replay of a datacenter-style CSV trace "
+             "(Philly/PAI columns; see repro.core.trace_ingest)",
+    )
+    ap.add_argument(
+        "--arrival-rate", metavar="JOBS_PER_SEC", default=None, type=float,
+        help="synthetic stream arrival rate (--stream only; default "
+             "~half utilization of the 64x8 cluster)",
+    )
+    ap.add_argument(
+        "--max-rss-mb", metavar="MB", default=None, type=float,
+        help="fail (exit 1) if peak RSS exceeds this ceiling "
+             "(--stream/--trace only; the CI streaming-memory job "
+             "enforces the bounded-memory guarantee with it)",
+    )
+    ap.add_argument(
+        "--guard", action="store_true",
+        help="migration_queue_guard A/B at 20k-job straggler scale "
+             "(flow_vs_unguarded < 1 = the queue-aware race wins)",
+    )
+    ap.add_argument(
         "--scenario", metavar="FILE", default=None,
         help="replay a saved Scenario JSON (repro.core.scenario schema; "
              "see tests/golden/scenario_straggler.json) and print the "
@@ -580,8 +717,20 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if (args.json or args.check) and not args.budget:
         ap.error("--json/--check track the budget-mode series; add --budget")
-    if sum((args.hetero, args.straggler, args.elastic)) > 1:
-        ap.error("--hetero/--straggler/--elastic are separate variants")
+    if sum((args.hetero, args.straggler, args.elastic, args.guard)) > 1:
+        ap.error("--hetero/--straggler/--elastic/--guard are separate "
+                 "variants")
+    streaming = args.stream is not None or args.trace is not None
+    if args.stream is not None and args.trace is not None:
+        ap.error("--stream generates synthetically; --trace replays a "
+                 "CSV — pick one")
+    if (args.max_rss_mb is not None or args.arrival_rate is not None) \
+            and not streaming:
+        ap.error("--max-rss-mb/--arrival-rate apply to --stream/--trace")
+    if streaming and (args.budget or args.hetero or args.straggler
+                      or args.elastic or args.guard or args.full
+                      or args.scenario):
+        ap.error("--stream/--trace is its own variant; drop other flags")
     if args.scenario is None and (
         args.policy != "A-SRPT" or args.migration_penalty is not None
     ):
@@ -600,6 +749,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         run = lambda: sched_scale_budget(  # noqa: E731
             straggler=args.straggler
         )
+    elif streaming:
+        run = lambda: sched_scale_stream(  # noqa: E731
+            n_jobs=args.stream or STREAM_JOBS_DEFAULT,
+            trace_csv=args.trace,
+            arrival_rate=args.arrival_rate,
+        )
+    elif args.guard:
+        run = lambda: sched_scale_guard(full=args.full)  # noqa: E731
     elif args.hetero:
         run = lambda: sched_scale_hetero(full=args.full)  # noqa: E731
     elif args.elastic:
@@ -625,6 +782,16 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     for r in rows:
         print(json.dumps(r))
+    if args.max_rss_mb is not None:
+        peak = max(r.get("peak_rss_mb", 0.0) for r in rows)
+        if peak > args.max_rss_mb:
+            print(
+                f"::error::peak RSS {peak} MB exceeds the "
+                f"{args.max_rss_mb} MB ceiling — the bounded-memory "
+                f"guarantee regressed"
+            )
+            return 1
+        print(f"peak RSS {peak} MB <= {args.max_rss_mb} MB ceiling")
     bench = rows_to_bench_json(rows) if (args.json or args.check) else None
     if args.json:
         with open(args.json, "w") as fh:

@@ -20,10 +20,14 @@ from .scenario import (  # noqa: F401
     ClusterEvent,
     Degradation,
     Fault,
+    IterJobs,
+    JobStream,
+    JsonlJobs,
     SCENARIO_SCHEMA_VERSION,
     Scenario,
     ServerJoin,
     ServerLeave,
+    jobs_to_jsonl,
     scenario_from_legacy,
 )
 from .simulator import (  # noqa: F401
@@ -47,6 +51,7 @@ from .predictor import (  # noqa: F401
     make_predictor,
 )
 from .trace import (  # noqa: F401
+    StreamTraceConfig,
     TraceConfig,
     elastic_events,
     elastic_scenario,
@@ -54,7 +59,17 @@ from .trace import (  # noqa: F401
     mixed_cluster_spec,
     straggler_events,
     straggler_scenario,
+    stream_trace,
+    stream_trace_source,
     trace_stats,
+)
+from .trace_ingest import (  # noqa: F401
+    IngestStats,
+    TraceSchemaError,
+    ingest_scenario,
+    iter_trace_csv,
+    load_trace_csv,
+    trace_jobs_source,
 )
 from .profiles import PAPER_MODELS, make_job, job_from_model_shape  # noqa: F401
 from .ilp import exact_min_cut  # noqa: F401

@@ -69,11 +69,13 @@ class _Delayed:
         self.job = job
         self.kappa = kappa
         self.deadline = deadline
-        # (cluster.epoch, (selected caps, their speed factors)) at the last
-        # placement evaluation.  While the cluster is unchanged — or
-        # changes leave both the selected capacity vector and the speeds
-        # of those servers identical — the evaluation outcome is unchanged
-        # (the mapping is a pure function of caps + speeds).
+        # cluster.epoch and (selected caps, their speed factors, the
+        # admission a_min bound) at the last placement evaluation.  While
+        # the cluster is unchanged — or changes leave the capacity vector,
+        # those servers' speeds, and the degradation-aware bound all
+        # identical — the evaluation outcome is unchanged (the mapping is
+        # a pure function of caps + speeds; the decision additionally
+        # reads the bound).
         self.eval_epoch = -1
         self.eval_caps: Optional[tuple] = None
 
@@ -88,7 +90,12 @@ class ASRPTPolicy(MigrationMixin, Policy):
         placement_cache: bool = True,  # incremental eval + memoized mapping
         migrate: bool = False,  # checkpoint-restart off degraded servers
         migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
-        migration_queue_guard: bool = False,  # queue-aware race (migration.py)
+        # queue-aware race (migration.py).  Default stays False: the
+        # `sched_scale --guard` A/B at 20k-job straggler scale measured
+        # flow_vs_unguarded = 1.20 — deferring migrations behind a deep
+        # queue (peak ~13k) starves stretched jobs of healthy capacity.
+        migration_queue_guard: bool = False,
+        degraded_admission: bool = True,  # speed-aware alpha bounds (AlphaCache)
     ):
         self.predictor = predictor
         self.comm_heavy = comm_heavy
@@ -98,7 +105,10 @@ class ASRPTPolicy(MigrationMixin, Policy):
         self.migrate = migrate
         self.migration_penalty = migration_penalty
         self.migration_queue_guard = migration_queue_guard
-        self.vm = VirtualSRPT()
+        self.degraded_admission = degraded_admission
+        # no history: the vm's completion log is unread here, and dropping
+        # it keeps policy memory bounded by the live queue on job streams
+        self.vm = VirtualSRPT(keep_history=False)
         self.pending: Deque[JobSpec] = deque()
         self.delayed: "OrderedDict[int, _Delayed]" = OrderedDict()
         self._by_id: Dict[int, JobSpec] = {}
@@ -136,6 +146,11 @@ class ASRPTPolicy(MigrationMixin, Policy):
 
     def on_completion(self, t: float, job: JobSpec) -> None:
         self.predictor.observe(job, job.n_iters)
+        # a completed job's spec and predicted work are never read again
+        # (virtual completion precedes the real start, which precedes this);
+        # dropping them keeps policy state bounded by the live job count
+        self._by_id.pop(job.job_id, None)
+        self._pred_work.pop(job.job_id, None)
 
     def _drain_vm(self, t: float) -> None:
         vm = self.vm
@@ -173,6 +188,14 @@ class ASRPTPolicy(MigrationMixin, Policy):
         self._drain_vm(t)
         starts: List[Start] = []
         incremental = self._pcache is not None
+        # Degradation-aware admission: classify against speed-aware alpha
+        # bounds while any allocatable server is degraded (None on clean
+        # clusters — the clean AlphaCache path runs byte-identical).
+        bcluster = (
+            cluster
+            if self.degraded_admission and cluster.has_degraded
+            else None
+        )
 
         # Step 2: re-evaluate delayed communication-heavy jobs (Alg. 1 l.16-19).
         run_step2 = bool(self.delayed)
@@ -216,11 +239,17 @@ class ASRPTPolicy(MigrationMixin, Policy):
                         continue
                     caps = consolidating_caps(g)
                     sp = speeds_for(caps) if speeds_for else None
+                    # a_min joins the skip signature: the degradation-aware
+                    # bound shifts with speed changes *outside* the
+                    # selected caps, so equal (caps, speeds) alone no
+                    # longer implies an equal decision (clean runs see a
+                    # constant — skip behavior there is unchanged)
+                    _, a_min = self.alpha_cache.bounds(d.job, bcluster)
                     if not expired:
                         d.eval_epoch = cluster.epoch
-                        if (caps, sp) == d.eval_caps:
-                            continue  # same caps + speeds -> same decision
-                        d.eval_caps = (caps, sp)
+                        if (caps, sp, a_min) == d.eval_caps:
+                            continue  # same caps+speeds+bound -> same decision
+                        d.eval_caps = (caps, sp, a_min)
                     key = (d.job.config_key, g)
                     hit = memo.get(key)
                     if hit is None:
@@ -236,7 +265,7 @@ class ASRPTPolicy(MigrationMixin, Policy):
                     )
                     sp = speeds_for(caps) if speeds_for else None
                     placement, a = self._map(d.job, caps, sp)
-                _, a_min = self.alpha_cache.bounds(d.job)
+                    _, a_min = self.alpha_cache.bounds(d.job, bcluster)
                 if a < d.kappa or a / a_min <= self.comm_heavy or expired:
                     del self.delayed[jid]
                     starts.append(Start(d.job, placement, a))
@@ -254,7 +283,7 @@ class ASRPTPolicy(MigrationMixin, Policy):
             if job.g > cluster.total_free:
                 break  # head-of-line blocking (Alg. 1 line 25)
             self.pending.popleft()
-            a_max, a_min = self.alpha_cache.bounds(job)
+            a_max, a_min = self.alpha_cache.bounds(job, bcluster)
             if a_max / a_min >= self.comm_heavy:
                 if incremental:
                     caps = consolidating_caps(job.g)
@@ -277,9 +306,10 @@ class ASRPTPolicy(MigrationMixin, Policy):
                     d = _Delayed(job, kappa=a, deadline=t + delay_budget)
                     # Seed with this evaluation: caps were selected at the
                     # current cluster state, so step 2 can skip until the
-                    # state (and the resulting caps) actually changes.
+                    # state (and the resulting caps or the admission
+                    # bound) actually changes.
                     d.eval_epoch = cluster.epoch
-                    d.eval_caps = (caps, sp)
+                    d.eval_caps = (caps, sp, a_min)
                     self.delayed[job.job_id] = d
                     heapq.heappush(self._dheap, (d.deadline, job.job_id))
             else:

@@ -52,7 +52,9 @@ class QueuePolicy(MigrationMixin, Policy):
         work_conserving: bool,
         migrate: bool = False,  # checkpoint-restart off degraded servers
         migration_penalty: float = MIGRATION_PENALTY_DEFAULT,
-        migration_queue_guard: bool = False,  # queue-aware race (migration.py)
+        # queue-aware race (migration.py); stays False — see the
+        # sched_scale --guard verdict in asrpt.py
+        migration_queue_guard: bool = False,
     ):
         if key not in ("duration", "workload", "subtime"):
             raise ValueError(key)

@@ -232,10 +232,12 @@ class PerfectPredictor(IterationPredictor):
 
 
 class _GroupStats:
-    __slots__ = ("values", "stat_n", "stat_val")
+    __slots__ = ("values", "n", "total", "stat_n", "stat_val")
 
     def __init__(self) -> None:
-        self.values: List[float] = []
+        self.values: Optional[List[float]] = None  # median only (O(obs))
+        self.n = 0
+        self.total = 0.0
         # statistic memo: recurring-group arrivals between observations
         # would otherwise recompute the same mean/median per prediction
         self.stat_n = -1
@@ -243,7 +245,14 @@ class _GroupStats:
 
 
 class GroupStatPredictor(IterationPredictor):
-    """Mean/median of the group's previously observed iteration counts."""
+    """Mean/median of the group's previously observed iteration counts.
+
+    The mean statistic keeps only (count, running sum) per group — O(1)
+    per group, so memory stays bounded by the group universe on
+    million-job streams.  Iteration counts are integer-valued, so the
+    running sum is exact (no drift vs ``np.mean``).  The median keeps
+    the observation list (order statistics need it).
+    """
 
     def __init__(self, statistic: str = "mean"):
         if statistic not in ("mean", "median"):
@@ -253,19 +262,24 @@ class GroupStatPredictor(IterationPredictor):
 
     def observe(self, job: JobSpec, true_iters: int) -> None:
         if job.group_id >= 0:
-            self._groups[job.group_id].values.append(float(true_iters))
+            st = self._groups[job.group_id]
+            st.n += 1
+            st.total += float(true_iters)
+            if self.statistic == "median":
+                if st.values is None:
+                    st.values = []
+                st.values.append(float(true_iters))
 
     def predict(self, job: JobSpec) -> float:
         st = self._groups.get(job.group_id)
-        if job.group_id < 0 or st is None or not st.values:
+        if job.group_id < 0 or st is None or st.n == 0:
             return 0.0  # unseen job -> treat as instantly complete
-        n = len(st.values)
-        if st.stat_n != n:
+        if st.stat_n != st.n:
             if self.statistic == "mean":
-                st.stat_val = float(np.mean(st.values))
+                st.stat_val = st.total / st.n
             else:
                 st.stat_val = float(np.median(st.values))
-            st.stat_n = n
+            st.stat_n = st.n
         return st.stat_val
 
 

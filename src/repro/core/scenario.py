@@ -6,7 +6,8 @@ keyword per scenario kind (``faults=`` in PR 2, ``degradations=`` in
 PR 4); every new scenario (elastic capacity, maintenance drains, serving
 bursts) would have added another.  A :class:`Scenario` instead bundles
 
-* the workload (``jobs`` — a time-ordered tuple of :class:`JobSpec`),
+* the workload (``jobs`` — a time-ordered tuple of :class:`JobSpec`, or
+  a lazy :class:`JobStream` for bounded-memory million-job replays),
 * the cluster it runs on (a :class:`ClusterSpec`), and
 * a single time-ordered timeline of typed :class:`ClusterEvent` s,
 
@@ -117,8 +118,21 @@ from __future__ import annotations
 
 import json
 import math
+import os
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Type
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+    Type,
+    Union,
+)
 
 from .job import ClusterSpec, JobSpec, ServerClass, StageSpec
 
@@ -332,6 +346,129 @@ def jobs_from_dicts(data: Sequence[Mapping]) -> List[JobSpec]:
     return [job_from_dict(d) for d in data]
 
 
+# ---------------------------------------------------------------------------
+# Streaming jobs sources (bounded-memory million-job scenarios)
+# ---------------------------------------------------------------------------
+
+
+class JobStream:
+    """Lazy jobs source for ``Scenario.jobs`` — O(1) resident memory.
+
+    A stream is an iterable yielding :class:`JobSpec` s in nondecreasing
+    ``arrival`` order; the simulator pulls arrivals incrementally (each
+    job is validated as it is pulled, and an out-of-order yield fails
+    loudly — simulator.py).  A ``Scenario`` whose ``jobs`` is a
+    ``JobStream`` never materializes the workload: the stream is held
+    as-is (not tupled) and ``simulate`` defaults to the streaming
+    result backend for it.  Streaming scenarios do not serialize —
+    ``to_dict`` refuses; use :meth:`Scenario.materialize` first.
+
+    Subclasses implement ``__iter__``.  Whether iteration is replayable
+    is per-subclass: :class:`JsonlJobs` always is (it re-opens its
+    shards); :class:`IterJobs` is replayable only in factory form.
+    """
+
+    def __iter__(self) -> Iterator[JobSpec]:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise TypeError(
+            f"{type(self).__name__} is a lazy jobs source: its length is "
+            f"unknown without consuming it (materialize the scenario for "
+            f"a tuple-backed workload)"
+        )
+
+
+class IterJobs(JobStream):
+    """Wrap an iterator — or, for a replayable stream, a zero-argument
+    factory returning a fresh iterator — of time-ordered ``JobSpec`` s.
+
+    A bare iterator/generator is single-shot: iterating a second time
+    raises (the first pass consumed it), which matters for equivalence
+    tests that replay a stream — pass a factory callable there.
+    """
+
+    def __init__(
+        self,
+        source: Union[Callable[[], Iterable[JobSpec]], Iterable[JobSpec]],
+        name: str = "",
+    ):
+        self.name = name
+        if callable(source):
+            self._factory: Optional[Callable[[], Iterable[JobSpec]]] = source
+            self._iter: Optional[Iterator[JobSpec]] = None
+        else:
+            self._factory = None
+            self._iter = iter(source)
+
+    def __iter__(self) -> Iterator[JobSpec]:
+        if self._factory is not None:
+            return iter(self._factory())
+        it, self._iter = self._iter, None
+        if it is None:
+            raise RuntimeError(
+                "single-shot IterJobs already consumed; construct it from "
+                "a factory callable for a replayable stream"
+            )
+        return it
+
+
+class JsonlJobs(JobStream):
+    """JSONL-shard jobs source: one schema-v1 ``<job>`` record per line.
+
+    Shards are read lazily, in the order given; the concatenation must
+    be arrival-ordered (enforced at simulation time).  Blank lines are
+    skipped; a malformed line fails loudly with its ``path:lineno``.
+    Replayable: every iteration re-opens the shards.
+    """
+
+    def __init__(
+        self,
+        paths: Union[str, os.PathLike, Sequence[Union[str, os.PathLike]]],
+        name: str = "",
+    ):
+        if isinstance(paths, (str, os.PathLike)):
+            paths = (paths,)
+        self.paths: Tuple[str, ...] = tuple(os.fspath(p) for p in paths)
+        if not self.paths:
+            raise ValueError("JsonlJobs needs at least one shard path")
+        self.name = name
+
+    def __iter__(self) -> Iterator[JobSpec]:
+        for path in self.paths:
+            with open(path) as fh:
+                for lineno, line in enumerate(fh, 1):
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        d = json.loads(line)
+                    except json.JSONDecodeError as exc:
+                        raise ValueError(
+                            f"{path}:{lineno}: malformed JSONL job record: "
+                            f"{exc}"
+                        ) from None
+                    try:
+                        yield job_from_dict(d)
+                    except ValueError as exc:
+                        raise ValueError(
+                            f"{path}:{lineno}: {exc}"
+                        ) from None
+
+
+def jobs_to_jsonl(jobs: Iterable[JobSpec], path) -> int:
+    """Write jobs as a JSONL shard (one schema-v1 record per line, the
+    :class:`JsonlJobs` input format); streams — never holds more than
+    one job resident.  Returns the number of jobs written."""
+    n = 0
+    with open(path, "w") as fh:
+        for job in jobs:
+            fh.write(json.dumps(job_to_dict(job), allow_nan=False))
+            fh.write("\n")
+            n += 1
+    return n
+
+
 def cluster_to_dict(spec: ClusterSpec) -> dict:
     if spec.is_heterogeneous:
         return {
@@ -395,15 +532,23 @@ class Scenario:
     permutation of the same events compare (and replay) equal.  Event
     server ids are validated against the spec here — failing at
     construction beats failing mid-simulation.
+
+    ``jobs`` is either a time-ordered tuple of :class:`JobSpec` (any
+    sequence is tupled on construction) or a :class:`JobStream` — a
+    lazy source held as-is, so a scenario no longer implies O(jobs)
+    resident memory; per-job validation then happens as the simulator
+    pulls arrivals.  Stream-backed scenarios do not serialize (see
+    :meth:`to_dict` / :meth:`materialize`).
     """
 
-    jobs: Tuple[JobSpec, ...]
+    jobs: Union[Tuple[JobSpec, ...], JobStream]
     cluster: ClusterSpec
     events: Tuple[ClusterEvent, ...] = ()
     name: str = ""
 
     def __post_init__(self) -> None:
-        object.__setattr__(self, "jobs", tuple(self.jobs))
+        if not isinstance(self.jobs, JobStream):
+            object.__setattr__(self, "jobs", tuple(self.jobs))
         events = tuple(sorted(self.events, key=event_sort_key))
         object.__setattr__(self, "events", events)
         n = self.cluster.num_servers
@@ -414,9 +559,26 @@ class Scenario:
                     f"cluster has {n}"
                 )
 
+    def materialize(self) -> "Scenario":
+        """Tuple-backed copy: pulls the whole stream into memory (O(jobs);
+        the escape hatch back to the serializable, indexable form).  A
+        tuple-backed scenario returns itself."""
+        if not isinstance(self.jobs, JobStream):
+            return self
+        return Scenario(
+            jobs=tuple(self.jobs), cluster=self.cluster,
+            events=self.events, name=self.name,
+        )
+
     # -- serialization ------------------------------------------------------
 
     def to_dict(self) -> dict:
+        if isinstance(self.jobs, JobStream):
+            raise TypeError(
+                "a stream-backed Scenario does not serialize (its jobs "
+                "are not resident); call .materialize() first, or keep "
+                "the workload as JSONL shards next to the scenario"
+            )
         return {
             "schema": SCENARIO_SCHEMA_VERSION,
             "name": self.name,
@@ -483,6 +645,10 @@ def scenario_from_legacy(
     :class:`Degradation` events; the canonical ``Scenario`` ordering
     replaces the old input-sequence interleaving (same-(t, server)
     collisions now resolve deterministically — see module docstring).
+
+    A :class:`JobStream` jobs source passes through un-tupled (tupling
+    would consume — and defeat — the lazy source), so the legacy
+    signature streams exactly like ``simulate(scenario, policy)``.
     """
     events: List[ClusterEvent] = [
         Fault(float(t), int(m)) for t, m in faults or ()
@@ -492,7 +658,8 @@ def scenario_from_legacy(
         for t, m, f in degradations or ()
     )
     return Scenario(
-        jobs=tuple(jobs), cluster=cluster_spec, events=tuple(events),
+        jobs=jobs if isinstance(jobs, JobStream) else tuple(jobs),
+        cluster=cluster_spec, events=tuple(events),
         name=name,
     )
 

@@ -67,6 +67,7 @@ from __future__ import annotations
 import hashlib
 import heapq
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import (
     Dict,
@@ -87,6 +88,7 @@ from .scenario import (
     ClusterEvent,
     Degradation,
     Fault,
+    JobStream,
     Scenario,
     ServerJoin,
     ServerLeave,
@@ -180,26 +182,105 @@ class _DrainDeadline:
     gen: int
 
 
+_DIGEST_MOD = 1 << 256
+
+
+def _record_digest(jid: int, r: JobRecord) -> int:
+    """sha256 of one per-job record line, as an integer.
+
+    ``repr`` of the floats keeps the line exact (shortest round-trip
+    repr) and platform-stable for the matmul-free engines.  The
+    per-record hashes combine by *summation* mod 2^256 (see
+    ``SimResult.schedule_digest``), so the streaming backend can fold a
+    record the moment its job completes and forget it — no jid-sorted
+    walk over an O(jobs) dict."""
+    return int.from_bytes(
+        hashlib.sha256(
+            (
+                f"{jid}:{r.start!r}:{r.completion!r}:{r.alpha!r}:"
+                f"{r.servers}:{r.migrations}\n"
+            ).encode()
+        ).digest(),
+        "big",
+    )
+
+
+def _msum_add(partials: List[float], x: float) -> None:
+    """Shewchuk growth step: add ``x`` to the non-overlapping partial-sum
+    list in place.  ``math.fsum(partials)`` afterwards equals
+    ``math.fsum`` over every value ever added — exactly, in any insertion
+    order — which is what makes the streaming backend's flow-time sums
+    bit-identical to the materialized path's ``fsum`` over records."""
+    i = 0
+    for y in partials:
+        if abs(x) < abs(y):
+            x, y = y, x
+        hi = x + y
+        lo = y - (hi - x)
+        if lo:
+            partials[i] = lo
+            i += 1
+        x = hi
+    partials[i:] = [x]
+
+
 @dataclass
 class SimResult:
-    records: Dict[int, JobRecord] = field(default_factory=dict)
+    """Per-job schedule records + engine stats — or, in streaming mode,
+    incremental aggregates over the same records.
+
+    Materialized runs fill ``records`` (job_id -> :class:`JobRecord`).
+    Streaming runs (``simulate(..., stream=True)`` or a
+    :class:`~repro.core.scenario.JobStream`-backed scenario) set
+    ``records = None`` and fold each record into exact aggregates at its
+    completion, so memory stays bounded by the *live* job count.  Every
+    metric property and ``schedule_digest`` answers identically over
+    either backend (property-tested + pinned by the golden fixtures):
+    sums are order-independent correctly-rounded ``fsum`` s, and the
+    digest is a commutative per-record sum."""
+
+    records: Optional[Dict[int, JobRecord]] = field(default_factory=dict)
     # engine statistics (filled by ``simulate``; benchmarks/sched_scale.py)
     n_events: int = 0
     n_sched_passes: int = 0
     peak_queue_depth: int = 0
     n_migrations: int = 0
     wall_s: float = 0.0
+    n_jobs: int = 0
+    # streaming aggregates (used when records is None): Shewchuk partial
+    # sums, running max, and the commutative digest accumulator
+    _flow_parts: List[float] = field(default_factory=list)
+    _comp_parts: List[float] = field(default_factory=list)
+    _max_completion: float = 0.0
+    _digest_acc: int = 0
+
+    def _fold(self, jid: int, rec: JobRecord) -> None:
+        """Stream one completed record into the aggregates (after this
+        the record can be forgotten)."""
+        _msum_add(self._flow_parts, rec.completion - rec.arrival)
+        _msum_add(self._comp_parts, rec.completion)
+        if rec.completion > self._max_completion:
+            self._max_completion = rec.completion
+        self._digest_acc = (
+            self._digest_acc + _record_digest(jid, rec)
+        ) % _DIGEST_MOD
 
     @property
     def total_completion_time(self) -> float:
-        return sum(r.completion for r in self.records.values())
+        if self.records is None:
+            return math.fsum(self._comp_parts)
+        return math.fsum(r.completion for r in self.records.values())
 
     @property
     def total_flow_time(self) -> float:
-        return sum(r.completion - r.arrival for r in self.records.values())
+        if self.records is None:
+            return math.fsum(self._flow_parts)
+        return math.fsum(r.completion - r.arrival for r in self.records.values())
 
     @property
     def makespan(self) -> float:
+        if self.records is None:
+            return self._max_completion
         # guard the empty case like mean_jct (max() raises on no records)
         if not self.records:
             return 0.0
@@ -207,28 +288,28 @@ class SimResult:
 
     @property
     def mean_jct(self) -> float:
-        return self.total_flow_time / max(len(self.records), 1)
+        n = self.n_jobs if self.records is None else len(self.records)
+        return self.total_flow_time / max(n, 1)
 
     @property
     def events_per_sec(self) -> float:
         return self.n_events / self.wall_s if self.wall_s > 0 else float("nan")
 
     def schedule_digest(self) -> str:
-        """sha256 over every per-job record — the byte-identity fingerprint
-        the golden harness (tests/test_golden.py) and ``sched_scale
-        --scenario`` replays compare.  ``repr`` of the floats keeps the
-        digest exact (shortest round-trip repr) and platform-stable for
-        the matmul-free engines."""
-        h = hashlib.sha256()
-        for jid in sorted(self.records):
-            r = self.records[jid]
-            h.update(
-                (
-                    f"{jid}:{r.start!r}:{r.completion!r}:{r.alpha!r}:"
-                    f"{r.servers}:{r.migrations}\n"
-                ).encode()
-            )
-        return h.hexdigest()
+        """Byte-identity fingerprint over every per-job record — what the
+        golden harness (tests/test_golden.py) and ``sched_scale
+        --scenario`` replays compare.  Per-record sha256 values are
+        summed mod 2^256 (hex-formatted to the usual 64 chars): the sum
+        commutes, so the streaming backend folds records at completion
+        time in completion order, the materialized backend in dict
+        order, and both land on the same digest."""
+        if self.records is None:
+            acc = self._digest_acc
+        else:
+            acc = 0
+            for jid, r in self.records.items():
+                acc = (acc + _record_digest(jid, r)) % _DIGEST_MOD
+        return f"{acc:064x}"
 
 
 @runtime_checkable
@@ -355,6 +436,7 @@ def simulate(
     validate: bool = True,
     faults: Optional[Sequence[Tuple[float, int]]] = None,
     degradations: Optional[Sequence[Tuple[float, int, float]]] = None,
+    stream: Optional[bool] = None,
 ) -> SimResult:
     """Run a policy over a scenario; returns per-job records + engine stats.
 
@@ -368,6 +450,14 @@ def simulate(
 
     ``validate=False`` skips the per-start placement re-validation (safety
     net for policy bugs) — benchmarks use it; tests keep it on.
+
+    ``stream`` selects the result backend: ``True`` folds completed
+    records into incremental aggregates (``SimResult.records is None``;
+    memory bounded by the live job count), ``False`` keeps the full
+    per-job record dict.  The default (``None``) streams exactly when
+    the scenario's jobs source is a lazy
+    :class:`~repro.core.scenario.JobStream`.  Both backends produce the
+    same metrics and ``schedule_digest`` bit-for-bit.
 
     ``faults``: (time, server_id) failure injections — sugar for
     :class:`Fault` events (capacity vanishes; GPUs held by running jobs
@@ -407,7 +497,7 @@ def simulate(
                 f"simulate(scenario, policy): policy implementing "
                 f"SchedulingPolicy required, got {type(pol).__name__}"
             )
-        return _simulate_scenario(jobs, pol, validate)
+        return _simulate_scenario(jobs, pol, validate, stream)
     if not isinstance(policy, Policy) and not isinstance(
         policy, SchedulingPolicy
     ):
@@ -418,26 +508,72 @@ def simulate(
     scenario = scenario_from_legacy(
         jobs, cluster_spec, faults=faults, degradations=degradations
     )
-    return _simulate_scenario(scenario, policy, validate)
+    return _simulate_scenario(scenario, policy, validate, stream)
+
+
+def _arrival_stream(src: JobStream, total_gpus: int):
+    """Validate a lazy jobs source as it is pulled: the per-job GPU-demand
+    check the materialized path runs upfront, plus fail-loud time
+    ordering — a stream yielding out of arrival order would silently
+    corrupt the event heap."""
+    last = float("-inf")
+    for job in src:
+        if job.g > total_gpus:
+            raise ValueError(
+                f"job {job.job_id} needs {job.g} GPUs, cluster has "
+                f"{total_gpus}"
+            )
+        if job.arrival < last:
+            raise ValueError(
+                f"job stream out of time order: job {job.job_id} arrives "
+                f"at {job.arrival} after {last}"
+            )
+        last = job.arrival
+        yield job
 
 
 def _simulate_scenario(
-    scenario: Scenario, policy: Policy, validate: bool
+    scenario: Scenario,
+    policy: Policy,
+    validate: bool,
+    stream: Optional[bool] = None,
 ) -> SimResult:
     import time as _time
 
-    jobs = scenario.jobs
+    jobs_src = scenario.jobs
+    lazy = isinstance(jobs_src, JobStream)
+    if stream is None:
+        stream = lazy
     cluster_spec = scenario.cluster
-    for job in jobs:
-        if job.g > cluster_spec.total_gpus:
-            raise ValueError(
-                f"job {job.job_id} needs {job.g} GPUs, cluster has "
-                f"{cluster_spec.total_gpus}"
-            )
+    total_gpus = cluster_spec.total_gpus
+    if lazy:
+        arrivals = _arrival_stream(jobs_src, total_gpus)
+    else:
+        jobs = jobs_src
+        for job in jobs:
+            if job.g > total_gpus:
+                raise ValueError(
+                    f"job {job.job_id} needs {job.g} GPUs, cluster has "
+                    f"{total_gpus}"
+                )
+        if any(
+            jobs[i].arrival > jobs[i + 1].arrival
+            for i in range(len(jobs) - 1)
+        ):
+            # the pre-streaming heap popped arrivals by (arrival, input
+            # index); a stable sort by arrival reproduces that order
+            # exactly for an unsorted tuple workload
+            jobs = sorted(jobs, key=lambda j: j.arrival)
+        arrivals = iter(jobs)
     policy.bind(cluster_spec)
     cluster = ClusterState(cluster_spec)
     result = SimResult()
-    records = result.records
+    records = result.records  # job_id -> JobRecord (all jobs, materialized)
+    if stream:
+        # bounded working set: records holds only not-yet-completed jobs;
+        # a completed record folds into the aggregates and is dropped
+        result.records = None
+        records = {}
 
     wall0 = _time.perf_counter()
     seq = itertools.count()
@@ -447,10 +583,12 @@ def _simulate_scenario(
     # the JobSpec for arrivals, the typed ClusterEvent (or an internal
     # _DrainDeadline) for cluster events, None for wakes.  Scenario events
     # take consecutive seq numbers in their canonical order, so the
-    # documented tie-break survives the heap.
-    events: List[Tuple[float, int, int, object]] = [
-        (job.arrival, _ARRIVAL, next(seq), job) for job in jobs
-    ]
+    # documented tie-break survives the heap.  Arrivals are *not*
+    # pre-loaded: the main loop feeds them from the time-ordered iterator
+    # as the clock reaches them, keeping the heap bounded by live events —
+    # seq only breaks ties within one (t, kind), and same-t arrivals enter
+    # in stream order, so pop order is identical to the pre-loaded heap.
+    events: List[Tuple[float, int, int, object]] = []
     migrate_capable = bool(getattr(policy, "migrate", False))
     # Running-job bookkeeping is needed when anything can re-time a job
     # (factor > 0 degradations) or feed the migration watch (drain
@@ -474,6 +612,7 @@ def _simulate_scenario(
             offer_migrations = True
     heapq.heapify(events)
 
+    n_arrived = 0
     n_completed = 0
     n_events = 0
     peak_depth = 0
@@ -513,7 +652,21 @@ def _simulate_scenario(
     on_completion = policy.on_completion
     on_event = policy.on_event
     release = cluster.release
-    while events:
+    next_arrival = next(arrivals, None)
+    while events or next_arrival is not None:
+        # feed the heap every arrival at or before the earliest queued
+        # event — the source is arrival-ordered, so nothing later can
+        # precede the heap top; each push may lower the top, hence the
+        # re-check against events[0]
+        while next_arrival is not None and (
+            not events or next_arrival.arrival <= events[0][0]
+        ):
+            heappush(
+                events,
+                (next_arrival.arrival, _ARRIVAL, next(seq), next_arrival),
+            )
+            n_arrived += 1
+            next_arrival = next(arrivals, None)
         t = events[0][0]
         live = False  # any non-stale event at this timestamp?
         speed_changed: List[int] = []  # servers re-sped at t (factor > 0)
@@ -531,6 +684,8 @@ def _simulate_scenario(
                     migration_watch.discard(job.job_id)
                 release(job.job_id)
                 on_completion(t, job)
+                if stream:
+                    result._fold(job.job_id, records.pop(job.job_id))
                 n_completed += 1
                 live = True
             elif kind == _ARRIVAL:
@@ -786,9 +941,10 @@ def _simulate_scenario(
             wake_time = wake
             heappush(events, (wake, _WAKE, wake_epoch, None))
 
-    if n_completed != len(jobs):
-        missing = len(jobs) - n_completed
+    if n_completed != n_arrived:
+        missing = n_arrived - n_completed
         raise RuntimeError(f"simulation ended with {missing} unfinished jobs")
+    result.n_jobs = n_completed
     result.n_events = n_events
     result.n_sched_passes = n_passes
     result.peak_queue_depth = peak_depth
@@ -803,14 +959,52 @@ def _simulate_scenario(
 
 
 class AlphaCache:
-    """alpha_max / alpha-tilde_min per unique (stages, allreduce) config."""
+    """alpha_max / alpha-tilde_min per unique (stages, allreduce) config.
+
+    ``bounds(job)`` answers the *clean*-cluster bounds (cached per
+    config).  ``bounds(job, cluster)`` with a degraded live
+    :class:`ClusterState` folds the current per-server speed factors in
+    (ISSUE 6 satellite; open since the PR-4 straggler work):
+
+    * ``alpha_max`` — the spread worst case must cover a lone replica
+      landing on a straggler: for every *allocatable* degraded server
+      (not down, not draining) the per-class spread bound is stretched
+      by ``1/factor`` (degradation divides the whole per-stage time —
+      compute and NIC alike — by the factor; see cluster.py), and the
+      worst such value joins the clean bound in the max.
+    * ``alpha_min_tilde`` — the consolidated best case divides by the
+      best allocatable factor: a fully-degraded cluster (no clean
+      server left) can do no better than its fastest straggler, while a
+      boosted server (factor > 1) improves the estimate.
+
+    A heavily degraded cluster therefore *raises* ``a_max/a_min`` and
+    can flip a borderline job into the comm-heavy class — admission
+    then consolidates/delays it instead of spreading it across
+    stragglers on clean-cluster assumptions.  Degraded answers are
+    memoized per (cluster epoch, speed version) — any capacity or speed
+    change invalidates — and per config within that; the active-server
+    scan is O(num_servers) per invalidation, the per-config fold
+    O(#degraded).  Clean clusters never touch any of this path.
+    """
 
     def __init__(self, cluster_spec: ClusterSpec):
         self.spec = cluster_spec
         self._cache: Dict[int, Tuple[float, float]] = {}
+        # degradation-aware state: per-(config, class) spread bounds and
+        # the per-signature memo of degraded answers
+        self._class_amax: Dict[Tuple[int, int], float] = {}
+        self._deg_sig: Optional[Tuple[int, int]] = None
+        self._deg_cache: Dict[int, Tuple[float, float]] = {}
+        self._deg_active: Tuple[Tuple[int, float], ...] = ()
+        self._deg_best: float = 1.0
 
-    def bounds(self, job: JobSpec) -> Tuple[float, float]:
-        """Returns (alpha_max, alpha_min_tilde)."""
+    def bounds(
+        self, job: JobSpec, cluster: Optional[ClusterState] = None
+    ) -> Tuple[float, float]:
+        """Returns (alpha_max, alpha_min_tilde); degradation-aware when a
+        degraded live ``cluster`` is passed."""
+        if cluster is not None and cluster.has_degraded:
+            return self._degraded_bounds(job, cluster)
         key = job.config_key
         hit = self._cache.get(key)
         if hit is None:
@@ -822,4 +1016,60 @@ class AlphaCache:
             a_max = max(a_max, a_min)
             hit = (a_max, a_min)
             self._cache[key] = hit
+        return hit
+
+    def _class_alpha_max(self, job: JobSpec, cls: int) -> float:
+        key = (job.config_key, cls)
+        v = self._class_amax.get(key)
+        if v is None:
+            g, b_inter, _b_intra = self.spec.class_geom(cls)
+            v = timing.alpha_max(job, self.spec, nic_share=b_inter / g)
+            self._class_amax[key] = v
+        return v
+
+    def _degraded_bounds(
+        self, job: JobSpec, cluster: ClusterState
+    ) -> Tuple[float, float]:
+        sig = (cluster.epoch, cluster.speed_version)
+        if sig != self._deg_sig:
+            self._deg_sig = sig
+            self._deg_cache = {}
+            sp = cluster.speed_factors
+            down = cluster.downed_servers
+            drain = cluster.draining_servers
+            spec = self.spec
+            active: List[Tuple[int, float]] = []
+            best = 0.0
+            any_clean = False
+            for m in range(spec.num_servers):
+                if m in down or m in drain:
+                    continue  # takes no new allocations: not admission-visible
+                f = sp.get(m)
+                if f is None:
+                    any_clean = True
+                else:
+                    active.append((spec.class_of(m), f))
+                    if f > best:
+                        best = f
+            if any_clean and best < 1.0:
+                best = 1.0
+            self._deg_active = tuple(active)
+            self._deg_best = best
+        if not self._deg_active and self._deg_best >= 1.0:
+            # every straggler is down or draining: new placements can only
+            # land on clean capacity, so the clean bounds apply verbatim
+            return self.bounds(job)
+        key = job.config_key
+        hit = self._deg_cache.get(key)
+        if hit is None:
+            a_max, a_min = self.bounds(job)  # clean baseline (cached)
+            for cls, f in self._deg_active:
+                v = self._class_alpha_max(job, cls) / f
+                if v > a_max:
+                    a_max = v
+            if self._deg_best > 0.0:
+                a_min = a_min / self._deg_best
+            a_max = max(a_max, a_min)
+            hit = (a_max, a_min)
+            self._deg_cache[key] = hit
         return hit

@@ -23,18 +23,28 @@ from typing import Dict, List, Optional, Tuple
 
 
 class VirtualSRPT:
-    """Incremental preemptive SRPT on a unit-speed single machine."""
+    """Incremental preemptive SRPT on a unit-speed single machine.
 
-    def __init__(self) -> None:
+    ``keep_history=False`` drops the ``completion_times`` log (an
+    O(all-jobs) dict nothing in the online pipeline reads — A-SRPT only
+    consumes the ``advance`` backlog), keeping memory bounded by the
+    *live* virtual queue on million-job streams.  The offline helper
+    ``srpt_total_completion`` is the one history consumer.
+    """
+
+    def __init__(self, keep_history: bool = True) -> None:
         # (remaining_work, tiebreak_seq, job_id)
         self._heap: List[Tuple[float, int, int]] = []
         self._seq = itertools.count()
         self._now = 0.0
-        self.completion_times: Dict[int, float] = {}
+        self.completion_times: Optional[Dict[int, float]] = (
+            {} if keep_history else None
+        )
         self._unreleased: List[Tuple[float, int]] = []  # completion backlog
 
     def _complete(self, jid: int, t: float) -> None:
-        self.completion_times[jid] = t
+        if self.completion_times is not None:
+            self.completion_times[jid] = t
         self._unreleased.append((t, jid))
 
     def arrive(self, t: float, job_id: int, work: float) -> None:

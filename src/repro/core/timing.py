@@ -435,7 +435,9 @@ def validate_placement(
         )
 
 
-def alpha_max(job: JobSpec, cluster: ClusterSpec) -> float:
+def alpha_max(
+    job: JobSpec, cluster: ClusterSpec, nic_share: Optional[float] = None
+) -> float:
     """Worst-case per-iteration time (paper Sec. III-B).
 
     The job is hypothetically spread over ``g_i`` servers, one replica each,
@@ -443,14 +445,24 @@ def alpha_max(job: JobSpec, cluster: ClusterSpec) -> float:
     cluster the bound takes the worst reserved share over the server
     classes (slowest NIC relative to its per-server GPU count), keeping
     alpha_max an upper bound for every feasible placement.
+
+    ``nic_share`` overrides the reserved-share computation — the
+    degradation-aware admission bounds (simulator.AlphaCache) evaluate
+    the spread bound per server class, then stretch it by that class's
+    straggler factor (a degraded server slows compute and NIC alike, so
+    the whole per-stage time divides by the factor).
     """
-    if cluster.is_heterogeneous:
-        nic_share = min(
-            b_inter / g for g, b_inter, _b_intra in
-            (cluster.class_geom(c) for c in range(len(cluster.server_classes)))
-        )
-    else:
-        nic_share = cluster.b_inter / cluster.gpus_per_server
+    if nic_share is None:
+        if cluster.is_heterogeneous:
+            nic_share = min(
+                b_inter / g for g, b_inter, _b_intra in
+                (
+                    cluster.class_geom(c)
+                    for c in range(len(cluster.server_classes))
+                )
+            )
+        else:
+            nic_share = cluster.b_inter / cluster.gpus_per_server
     worst = 0.0
     for s, st in enumerate(job.stages):
         x_m = np.zeros(job.num_stages, dtype=np.int64)

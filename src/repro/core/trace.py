@@ -22,15 +22,16 @@ whole thing replays via ``benchmarks/sched_scale.py --scenario``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .job import ClusterSpec, JobSpec, RAR, ServerClass, TAR
-from .profiles import PAPER_MODELS, SINGLE_GPU_MODELS, make_job
+from .job import ClusterSpec, JobSpec, RAR, ServerClass, StageSpec, TAR
+from .profiles import PAPER_MODELS, SINGLE_GPU_MODELS, build_stages, make_job
 from .scenario import (
     ClusterEvent,
     Degradation,
+    IterJobs,
     Scenario,
     ServerJoin,
     ServerLeave,
@@ -392,6 +393,163 @@ def generate_trace(cfg: TraceConfig) -> List[JobSpec]:
         job.g
         job.config_key
     return jobs
+
+
+@dataclass
+class StreamTraceConfig:
+    """Recipe for :func:`stream_trace` — the bounded-memory generator.
+
+    Unlike :class:`TraceConfig` (which materializes, globally sorts, and
+    segments sessions — all O(n_jobs)), the streaming recipe draws
+    arrivals as a single Poisson process (exponential gaps, cumulative
+    sum carried across chunks — already time-ordered, no sort) against a
+    *bounded* recurrence pool of ``n_groups`` groups with Zipf-ranked
+    popularity.  Everything resident is O(n_groups + chunk), so a 10^6+
+    job trace streams through ``simulate`` without ever existing as a
+    list.
+
+    ``arrival_rate`` is jobs/second.  Keep the offered load (rate x mean
+    GPU-seconds per job) under the cluster's GPU capacity or the live
+    queue — and with it the simulator's working set — grows without
+    bound; the defaults target roughly half utilization of the
+    64-server / 512-GPU ``sched_scale --stream`` cluster (saturation
+    sets in just past 6.5 jobs/s there).
+    """
+
+    n_jobs: int = 1_000_000
+    arrival_rate: float = 6.0  # Poisson arrivals per second
+    single_gpu_frac: float = 0.9
+    n_groups: int = 4096  # bounded recurrence pool
+    group_zipf_a: float = 1.3  # popularity tail over group ranks
+    mean_iters: float = 40.0
+    sigma_iters: float = 1.0  # log-normal sigma of group means
+    early_kill_frac: float = 0.08
+    constant_group_frac: float = 0.55
+    n_users: int = 500
+    max_gpus_per_job: Optional[int] = 8  # clamp g_i (<= cluster G)
+    seed: int = 0
+    chunk: int = 8192  # vectorized draw granularity (resident bound)
+
+
+def stream_trace(cfg: StreamTraceConfig) -> Iterator[JobSpec]:
+    """Yield ``cfg.n_jobs`` time-ordered jobs in O(n_groups + chunk) memory.
+
+    Group attributes (model, config, user, allreduce, iteration-count
+    mean, constant-vs-exploration) are drawn once for the bounded pool;
+    per-chunk draws pick a group by Zipf popularity and sample the
+    job-level variation (exploration factor, early kills).  Stage tuples
+    are built once per (model, config) and shared across all their jobs.
+    Deterministic per seed.
+    """
+    if cfg.n_jobs < 0:
+        raise ValueError(f"n_jobs must be >= 0, got {cfg.n_jobs}")
+    if cfg.arrival_rate <= 0.0:
+        raise ValueError(f"arrival_rate must be > 0, got {cfg.arrival_rate}")
+    rng = np.random.default_rng(cfg.seed)
+    G = cfg.n_groups
+    model_names = list(PAPER_MODELS)
+
+    # --- bounded group pool (one vectorized draw, O(n_groups)) ------------
+    single = rng.random(G) < cfg.single_gpu_frac
+    single_model_idx = rng.integers(0, len(SINGLE_GPU_MODELS), size=G)
+    multi_model_idx = rng.integers(0, len(model_names), size=G)
+    config_u = rng.random(G)
+    user_ids = rng.integers(0, cfg.n_users, size=G)
+    rar = rng.random(G) < 0.5
+    group_means = np.exp(
+        rng.normal(np.log(cfg.mean_iters), cfg.sigma_iters, size=G)
+    )
+    constant_group = rng.random(G) < cfg.constant_group_frac
+
+    # valid multi-GPU config indices per model (respecting the clamp);
+    # mirrors generate_trace
+    multi_configs: Dict[str, List[int]] = {}
+    for name in model_names:
+        profile = PAPER_MODELS[name]
+        multi = [i for i, c in enumerate(profile.configs) if sum(c) > 1]
+        if cfg.max_gpus_per_job is not None:
+            ok = [
+                i
+                for i in multi
+                if sum(profile.configs[i]) <= cfg.max_gpus_per_job
+            ]
+            multi_configs[name] = ok if ok else [0]
+        else:
+            multi_configs[name] = multi
+
+    # resolve each group to (model, stages, allreduce); stage tuples are
+    # memoized per (model, config_idx) and shared by every job instance
+    stage_cache: Dict[Tuple[str, int], Tuple[StageSpec, ...]] = {}
+    group_model: List[str] = []
+    group_stages: List[Tuple[StageSpec, ...]] = []
+    group_allreduce: List[str] = []
+    for gid in range(G):
+        if single[gid]:
+            model = SINGLE_GPU_MODELS[int(single_model_idx[gid])]
+            config_idx = 0  # config (1,) is first for single-GPU models
+        else:
+            model = model_names[int(multi_model_idx[gid])]
+            ok = multi_configs[model]
+            config_idx = ok[int(config_u[gid] * len(ok))]
+        key = (model, config_idx)
+        stages = stage_cache.get(key)
+        if stages is None:
+            profile = PAPER_MODELS[model]
+            stages = build_stages(
+                profile, profile.configs[config_idx % len(profile.configs)]
+            )
+            stage_cache[key] = stages
+        group_model.append(model)
+        group_stages.append(stages)
+        group_allreduce.append(RAR if rar[gid] else TAR)
+
+    # Zipf-ranked group popularity (heavy-tailed recurrence without an
+    # unbounded group universe)
+    pop = np.arange(1, G + 1, dtype=np.float64) ** -cfg.group_zipf_a
+    pop /= pop.sum()
+
+    # --- chunked job stream ------------------------------------------------
+    t = 0.0
+    job_id = 0
+    remaining = cfg.n_jobs
+    while remaining > 0:
+        m = min(cfg.chunk, remaining)
+        times = t + np.cumsum(
+            rng.exponential(1.0 / cfg.arrival_rate, size=m)
+        )
+        t = float(times[-1])
+        gidx = rng.choice(G, size=m, p=pop)
+        factors = np.where(
+            constant_group[gidx],
+            1.0,
+            rng.uniform(0.85, 1.15, size=m),  # exploration variation
+        )
+        killed = rng.random(m) < cfg.early_kill_frac
+        factors = np.where(
+            killed, factors * rng.uniform(0.05, 0.5, size=m), factors
+        )
+        n_iters = np.maximum(
+            1, np.round(group_means[gidx] * factors)
+        ).astype(np.int64)
+        for i in range(m):
+            gid = int(gidx[i])
+            yield JobSpec(
+                job_id=job_id,
+                stages=group_stages[gid],
+                n_iters=int(n_iters[i]),
+                arrival=float(times[i]),
+                group_id=gid,
+                user_id=int(user_ids[gid]),
+                allreduce=group_allreduce[gid],
+                model_name=group_model[gid],
+            )
+            job_id += 1
+        remaining -= m
+
+
+def stream_trace_source(cfg: StreamTraceConfig) -> IterJobs:
+    """The streaming trace as a replayable ``Scenario.jobs`` source."""
+    return IterJobs(lambda: stream_trace(cfg), name=f"stream-{cfg.seed}")
 
 
 def trace_stats(jobs: Sequence[JobSpec]) -> dict:

@@ -628,3 +628,142 @@ def test_migration_queue_guard_noop_when_queue_empty():
     # migration_queue_head's vm drain on the A-SRPT side)
     assert base.records[0].migrations == 1
     assert_identical(base, guarded)
+
+
+# ---------------------------------------------------------------------------
+# Degradation-aware admission (ISSUE 6): AlphaCache.bounds(job, cluster)
+# ---------------------------------------------------------------------------
+
+from repro.core.asrpt import COMM_HEAVY_DEFAULT
+from repro.core.simulator import AlphaCache
+
+
+def _borderline_job(**kw):
+    """Comm-light on a clean homogeneous cluster: a_max/a_min ~ 1.18,
+    comfortably below the COMM_HEAVY threshold of 1.5 but close enough
+    that a heavy slowdown (compute stretches, comm doesn't) flips it."""
+    kw.setdefault("replicas", (2, 2))
+    kw.setdefault("p", 0.3)
+    kw.setdefault("act_mb", 4.0)
+    kw.setdefault("h_mb", 8.0)
+    return make_simple_job(**kw)
+
+
+def test_degraded_bounds_flip_borderline_classification():
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+
+    a_max, a_min = cache.bounds(job)
+    assert a_max / a_min < COMM_HEAVY_DEFAULT  # comm-light when clean
+
+    cluster = ClusterState(spec)
+    cluster.set_server_speed(0, 0.2)  # one straggler at 20% speed
+    d_max, d_min = cache.bounds(job, cluster)
+    # a clean server still exists, so the optimistic bound is untouched...
+    assert d_min == a_min
+    # ...but the pessimistic bound stretches by 1/0.2 on the straggler
+    assert d_max > a_max
+    assert d_max / d_min >= COMM_HEAVY_DEFAULT  # now comm-heavy
+
+
+def test_degraded_bounds_clean_cluster_is_identity():
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+    clean = cache.bounds(job)
+    cluster = ClusterState(spec)
+    assert cache.bounds(job, cluster) == clean
+    assert cache.bounds(job, None) == clean
+
+
+def test_degraded_bounds_all_unit_factors_match_clean():
+    """Explicit speed_factor == 1.0 entries are not degradation."""
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+    clean = cache.bounds(job)
+    cluster = ClusterState(spec)
+    for m in range(spec.num_servers):
+        cluster.set_server_speed(m, 1.0)
+    assert cache.bounds(job, cluster) == clean
+
+
+def test_degraded_bounds_ignore_down_and_draining_servers():
+    """A dead or draining straggler can't host new work, so it must not
+    poison the admission bounds."""
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+    clean = cache.bounds(job)
+
+    cluster = ClusterState(spec)
+    cluster.set_server_speed(0, 0.2)
+    assert cache.bounds(job, cluster) != clean
+    cluster.mark_server_down(0)  # killing it clears its speed factor
+    assert cache.bounds(job, cluster) == clean
+
+    cluster2 = ClusterState(spec)
+    cluster2.set_server_speed(1, 0.2)
+    cluster2.drain_server(1)  # draining keeps the factor but blocks entry
+    assert cache.bounds(job, cluster2) == clean
+
+
+def test_degraded_bounds_all_degraded_shift_amin():
+    """When every allocatable server is slow, even the optimistic bound
+    moves: a_min divides by the best surviving factor."""
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+    a_max, a_min = cache.bounds(job)
+
+    cluster = ClusterState(spec)
+    for m in range(spec.num_servers):
+        cluster.set_server_speed(m, 0.5)
+    d_max, d_min = cache.bounds(job, cluster)
+    assert d_min == pytest.approx(a_min / 0.5)
+    assert d_max == pytest.approx(a_max / 0.5)
+
+
+def test_degraded_bounds_track_recovery():
+    """Bounds are memoized per (epoch, speed_version); recovery must be
+    observed, not served stale."""
+    spec = _hom_cluster()
+    job = _borderline_job()
+    cache = AlphaCache(spec)
+    clean = cache.bounds(job)
+
+    cluster = ClusterState(spec)
+    cluster.set_server_speed(0, 0.2)
+    degraded = cache.bounds(job, cluster)
+    assert degraded != clean
+    assert cache.bounds(job, cluster) == degraded  # memo hit
+    cluster.set_server_speed(0, 1.0)  # straggler recovers
+    assert cache.bounds(job, cluster) == clean
+
+
+def test_degraded_admission_changes_schedule_only_under_degradation():
+    """End to end: ``degraded_admission`` is invisible on a clean cluster
+    (bounds fall back to the clean profile) but produces a different
+    schedule when every server is heavily slowed — the borderline jobs
+    reclassify as comm-heavy and A-SRPT places them differently."""
+    spec = _hom_cluster(n=2)
+    jobs = [
+        make_simple_job(job_id=0, replicas=(2,), n_iters=300, arrival=0.0),
+        make_simple_job(job_id=1, replicas=(2,), n_iters=300, arrival=0.0),
+        _borderline_job(job_id=2, n_iters=50, arrival=1.0),
+    ]
+    events = [(0.0, m, 0.2) for m in range(spec.num_servers)]
+
+    def policy(aware):
+        return ASRPTPolicy(
+            make_predictor("perfect", jobs), degraded_admission=aware,
+        )
+
+    clean_naive = simulate(jobs, spec, policy(False))
+    clean_aware = simulate(jobs, spec, policy(True))
+    assert_identical(clean_naive, clean_aware)
+
+    naive = simulate(jobs, spec, policy(False), degradations=events)
+    aware = simulate(jobs, spec, policy(True), degradations=events)
+    assert naive.schedule_digest() != aware.schedule_digest()

@@ -1,0 +1,219 @@
+"""Streaming == materialized (ISSUE 6 tentpole c).
+
+The streaming result backend folds each completed ``JobRecord`` into
+incremental aggregates (Shewchuk partials for the sums, a commutative
+sha256 accumulator for the digest) instead of keeping the record dict;
+the arrival heap is fed from a lazy iterator instead of pre-loaded.
+Every test here pins the contract that the two backends are
+*bit-identical*: same ``schedule_digest``, same exact flow-time /
+completion-time / makespan floats — on all 10 golden scenarios and on
+random scenarios with faults, stragglers, and elastic join/leave.
+"""
+import pytest
+
+pytestmark = pytest.mark.sched
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ASRPTPolicy,
+    BASELINES,
+    IterJobs,
+    JsonlJobs,
+    Scenario,
+    TraceConfig,
+    elastic_scenario,
+    generate_trace,
+    jobs_to_jsonl,
+    make_predictor,
+    simulate,
+    straggler_scenario,
+)
+from test_golden import SCENARIOS, load_jobs
+
+POLICY_NAMES = sorted(["A-SRPT", "SPJF", "WCS-Duration"])
+
+
+def _policy(name):
+    if name == "A-SRPT":
+        return ASRPTPolicy(make_predictor("mean"), tau=2.0)
+    return BASELINES[name](make_predictor("mean"))
+
+
+def assert_equivalent(mat, stm):
+    """Materialized result `mat` vs streaming result `stm`: the full
+    bit-identical contract."""
+    assert mat.records is not None and stm.records is None
+    assert stm.n_jobs == len(mat.records)
+    assert stm.schedule_digest() == mat.schedule_digest()
+    assert stm.total_flow_time == mat.total_flow_time
+    assert stm.total_completion_time == mat.total_completion_time
+    assert stm.makespan == mat.makespan
+    assert stm.mean_jct == mat.mean_jct
+    assert stm.peak_queue_depth == mat.peak_queue_depth
+    assert stm.n_migrations == mat.n_migrations
+    assert stm.n_events == mat.n_events
+
+
+# ---------------------------------------------------------------------------
+# all 10 golden scenarios
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden_jobs():
+    return load_jobs()
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_streaming_matches_materialized_on_goldens(name, golden_jobs):
+    cluster_fn, policy_fn, kwargs = SCENARIOS[name]
+    mat = simulate(golden_jobs, cluster_fn(), policy_fn(), **kwargs)
+    stm = simulate(
+        golden_jobs, cluster_fn(), policy_fn(), stream=True, **kwargs
+    )
+    assert_equivalent(mat, stm)
+
+
+def test_lazy_source_matches_tuple_source_on_golden(golden_jobs):
+    """Same schedule whether arrivals are pre-loaded from a tuple or
+    pulled one at a time from a JobStream."""
+    cluster_fn, policy_fn, kwargs = SCENARIOS["A-SRPT (migrate) @het+straggler"]
+    mat = simulate(golden_jobs, cluster_fn(), policy_fn(), **kwargs)
+    src = IterJobs(lambda: iter(golden_jobs), name="golden")
+    stm = simulate(src, cluster_fn(), policy_fn(), **kwargs)
+    assert_equivalent(mat, stm)
+
+
+def test_jsonl_shard_source_matches_on_golden(tmp_path, golden_jobs):
+    cluster_fn, policy_fn, kwargs = SCENARIOS["A-SRPT @het+fault"]
+    shard = tmp_path / "golden.jsonl"
+    assert jobs_to_jsonl(golden_jobs, shard) == len(golden_jobs)
+    mat = simulate(golden_jobs, cluster_fn(), policy_fn(), **kwargs)
+    stm = simulate(JsonlJobs(shard), cluster_fn(), policy_fn(), **kwargs)
+    assert_equivalent(mat, stm)
+
+
+# ---------------------------------------------------------------------------
+# property: random scenarios incl. faults / stragglers / elastic events
+# ---------------------------------------------------------------------------
+
+
+def _stream_of(scenario: Scenario) -> Scenario:
+    """The same scenario with a lazy jobs source."""
+    jobs = scenario.jobs
+    return Scenario(
+        jobs=IterJobs(lambda: iter(jobs), name="prop"),
+        cluster=scenario.cluster,
+        events=scenario.events,
+        name=scenario.name,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from(POLICY_NAMES),
+    st.sampled_from(["straggler", "elastic"]),
+)
+def test_streaming_equivalence_random_scenarios(seed, pname, kind):
+    cfg = TraceConfig(
+        n_jobs=60, horizon=900.0, seed=seed, max_gpus_per_job=8
+    )
+    if kind == "straggler":
+        scenario = straggler_scenario(cfg, event_seed=seed + 1)
+    else:
+        scenario = elastic_scenario(cfg)
+    mat = simulate(scenario, _policy(pname))
+    stm = simulate(_stream_of(scenario), _policy(pname))
+    assert_equivalent(mat, stm)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_streaming_equivalence_with_migration_under_faults(seed):
+    jobs = generate_trace(
+        TraceConfig(n_jobs=50, horizon=600.0, seed=seed, max_gpus_per_job=8)
+    )
+    cluster_fn, _, _ = SCENARIOS["A-SRPT @het"]
+    faults = [(150.0, 0), (300.0, 5)]
+    stragglers = [(100.0, 2, 0.25)]
+
+    def pol():
+        return ASRPTPolicy(
+            make_predictor("mean"), tau=2.0,
+            migrate=True, migration_penalty=20.0,
+        )
+
+    mat = simulate(
+        jobs, cluster_fn(), pol(),
+        faults=faults, degradations=stragglers,
+    )
+    stm = simulate(
+        IterJobs(lambda: iter(jobs)), cluster_fn(), pol(),
+        faults=faults, degradations=stragglers,
+    )
+    assert_equivalent(mat, stm)
+
+
+# ---------------------------------------------------------------------------
+# backend selection + stream misuse fail loud
+# ---------------------------------------------------------------------------
+
+
+def test_stream_default_tracks_jobs_source(golden_jobs):
+    cluster_fn, policy_fn, _ = SCENARIOS["A-SRPT @hom"]
+    assert simulate(golden_jobs, cluster_fn(), policy_fn()).records \
+        is not None
+    src = IterJobs(lambda: iter(golden_jobs))
+    assert simulate(src, cluster_fn(), policy_fn()).records is None
+
+
+def test_materialized_view_over_stream_source(golden_jobs):
+    """stream=False forces the record dict even from a lazy source."""
+    cluster_fn, policy_fn, _ = SCENARIOS["A-SRPT @hom"]
+    mat = simulate(golden_jobs, cluster_fn(), policy_fn())
+    via_stream_src = simulate(
+        IterJobs(lambda: iter(golden_jobs)), cluster_fn(), policy_fn(),
+        stream=False,
+    )
+    assert via_stream_src.records is not None
+    assert via_stream_src.schedule_digest() == mat.schedule_digest()
+
+
+def test_streaming_result_has_no_records_api(golden_jobs):
+    cluster_fn, policy_fn, _ = SCENARIOS["A-SRPT @hom"]
+    res = simulate(golden_jobs, cluster_fn(), policy_fn(), stream=True)
+    assert res.records is None
+    assert res.n_jobs == len(golden_jobs)
+    assert res.mean_jct > 0.0 and res.makespan > 0.0
+
+
+def test_out_of_order_stream_fails_loud(golden_jobs):
+    cluster_fn, policy_fn, _ = SCENARIOS["A-SRPT @hom"]
+    bad = [golden_jobs[5], golden_jobs[3]]  # arrival order regression
+    src = IterJobs(lambda: iter(bad))
+    with pytest.raises(ValueError, match="out of time order"):
+        simulate(src, cluster_fn(), policy_fn())
+
+
+def test_single_shot_iterjobs_second_pass_fails_loud(golden_jobs):
+    src = IterJobs(iter(golden_jobs))  # bare iterator: single-shot
+    assert sum(1 for _ in src) == len(golden_jobs)
+    with pytest.raises(RuntimeError, match="single-shot"):
+        iter(src)
+
+
+def test_scenario_stream_refuses_to_serialize(golden_jobs):
+    cluster_fn, _, _ = SCENARIOS["A-SRPT @hom"]
+    scn = Scenario(
+        jobs=IterJobs(lambda: iter(golden_jobs)), cluster=cluster_fn()
+    )
+    with pytest.raises(TypeError, match="materialize"):
+        scn.to_dict()
+    mat = scn.materialize()
+    assert isinstance(mat.jobs, tuple) and len(mat.jobs) == len(golden_jobs)
+    assert mat.to_dict()["jobs"]  # tuple-backed copy serializes

@@ -1,0 +1,272 @@
+"""Datacenter-trace CSV ingestion (ISSUE 6 tentpole a).
+
+Round-trip CSV -> JobSpec -> Scenario JSON v1, the documented
+malformed-row policy (bad timestamps, zero-GPU rows, out-of-order
+submits), alias resolution, recurrence interning, and the committed
+sample fixture under tests/golden/.
+"""
+import json
+
+import pytest
+
+pytestmark = pytest.mark.sched
+
+from repro.core import (
+    ClusterSpec,
+    IngestStats,
+    JsonlJobs,
+    Scenario,
+    TraceSchemaError,
+    ingest_scenario,
+    iter_trace_csv,
+    load_trace_csv,
+    simulate,
+    trace_jobs_source,
+)
+from repro.core.asrpt import ASRPTPolicy
+from repro.core.predictor import make_predictor
+from repro.core.profiles import PAPER_MODELS
+from repro.core.scenario import jobs_from_dicts, jobs_to_dicts
+
+SAMPLE = "tests/golden/sample_trace.csv"
+
+HEADER = "submit_time,num_gpus,duration,user,model,group\n"
+
+
+def _write(tmp_path, body, header=HEADER, name="t.csv"):
+    p = tmp_path / name
+    p.write_text(header + body)
+    return p
+
+
+def _spec(n=8):
+    return ClusterSpec(
+        num_servers=n, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+# ---------------------------------------------------------------------------
+# happy path + round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_sample_fixture_parses_clean():
+    st = IngestStats()
+    jobs = load_trace_csv(SAMPLE, stats=st)
+    assert st.n_rows == st.n_jobs == len(jobs) == 30
+    assert st.n_skipped == 0
+    assert jobs[0].arrival == 0.0 and st.last_submit == 1140.0
+    assert all(j.g >= 1 for j in jobs)
+    assert all(j.n_iters >= 1 for j in jobs)
+    arr = [j.arrival for j in jobs]
+    assert arr == sorted(arr)
+    assert [j.job_id for j in jobs] == list(range(30))
+
+
+def test_round_trip_csv_jobspec_scenario_json():
+    scn = ingest_scenario(SAMPLE, _spec())
+    rt = Scenario.from_json(scn.to_json())
+    assert rt == scn
+    # and the bare jobs array round-trips through the frozen-trace format
+    jobs = load_trace_csv(SAMPLE)
+    assert jobs_from_dicts(jobs_to_dicts(jobs)) == jobs
+
+
+def test_lazy_matches_eager_on_sorted_input():
+    lazy = list(iter_trace_csv(SAMPLE))
+    eager = load_trace_csv(SAMPLE)
+    assert lazy == eager
+
+
+def test_trace_jobs_source_is_replayable_and_simulates():
+    src = trace_jobs_source(SAMPLE)
+    assert len(list(src)) == 30
+    assert len(list(src)) == 30  # re-opens the file: second pass works
+    pol = lambda: ASRPTPolicy(make_predictor("mean"))
+    stream = simulate(Scenario(jobs=src, cluster=_spec()), pol())
+    eager = simulate(ingest_scenario(SAMPLE, _spec()), pol())
+    assert stream.schedule_digest() == eager.schedule_digest()
+    assert stream.records is None  # stream source defaults to streaming
+
+
+def test_known_model_column_is_respected():
+    jobs = load_trace_csv(SAMPLE)
+    by_model = {j.job_id: j.model_name for j in jobs}
+    # row 2 of the fixture tags bert_large explicitly
+    assert by_model[1] == "bert_large"
+    assert all(m in PAPER_MODELS for m in by_model.values())
+
+
+def test_iterations_column_wins_over_duration(tmp_path):
+    p = _write(
+        tmp_path,
+        "0.0,1,1800,alice,resnet152,,77\n",
+        header="submit_time,num_gpus,duration,user,model,group,iterations\n",
+    )
+    (job,) = load_trace_csv(p)
+    assert job.n_iters == 77
+
+
+def test_duration_divided_by_single_device_iter_time(tmp_path):
+    p = _write(tmp_path, "0.0,1,1800,alice,resnet152,\n")
+    (job,) = load_trace_csv(p)
+    assert job.n_iters == round(1800 / PAPER_MODELS["resnet152"].iter_time_1dev)
+
+
+def test_recurrence_interning(tmp_path):
+    p = _write(
+        tmp_path,
+        "0.0,2,100,dave,,sweep\n"
+        "1.0,2,100,dave,,sweep\n"
+        "2.0,2,100,erin,bert_large,\n"
+        "3.0,2,100,erin,bert_large,\n"
+        "4.0,4,100,erin,bert_large,\n",
+    )
+    jobs = load_trace_csv(p)
+    # explicit group tag: same group, same (hash-assigned) model
+    assert jobs[0].group_id == jobs[1].group_id
+    assert jobs[0].model_name == jobs[1].model_name
+    # fallback key (user, model, gpus): rows 3+4 recur, row 5 differs (g)
+    assert jobs[2].group_id == jobs[3].group_id != jobs[4].group_id
+    assert jobs[2].user_id == jobs[3].user_id == jobs[4].user_id
+
+
+def test_iso_timestamps_normalize_to_relative_seconds(tmp_path):
+    p = _write(
+        tmp_path,
+        "2017-10-03 14:00:00,1,600,alice,resnet152,\n"
+        "2017-10-03 14:05:30,1,600,bob,resnet152,\n",
+    )
+    jobs = load_trace_csv(p)
+    assert [j.arrival for j in jobs] == [0.0, 330.0]
+
+
+def test_header_aliases_resolve(tmp_path):
+    p = _write(
+        tmp_path,
+        "5.0,4,120\n",
+        header="submitted_time,plan_gpu,run_time\n",
+    )
+    (job,) = load_trace_csv(p)
+    assert job.arrival == 5.0 and job.g == 4
+
+
+# ---------------------------------------------------------------------------
+# malformed rows: fail loud, or skip-and-count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "row, needle",
+    [
+        ("not-a-time,1,600,a,,\n", "neither a float"),
+        ("-5.0,1,600,a,,\n", "negative or non-finite"),
+        ("nan,1,600,a,,\n", "negative or non-finite"),
+        ("0.0,0,600,a,,\n", "positive integer"),
+        ("0.0,-2,600,a,,\n", "positive integer"),
+        ("0.0,1.5,600,a,,\n", "positive integer"),
+        ("0.0,x,600,a,,\n", "not a number"),
+        ("0.0,1,,a,,\n", "neither iterations nor duration"),
+        ("0.0,1,-600,a,,\n", "not positive finite"),
+        ("0.0,1,inf,a,,\n", "not positive finite"),
+        ("0.0,1,600,a,no_such_model,\n", "not a known profile"),
+        (",1,600,a,,\n", "submit_time is blank"),
+    ],
+)
+def test_malformed_row_raises_with_location(tmp_path, row, needle):
+    p = _write(tmp_path, "0.0,1,600,ok,,\n" + row)
+    with pytest.raises(TraceSchemaError) as exc:
+        load_trace_csv(p)
+    msg = str(exc.value)
+    assert needle in msg
+    assert f"{p}:3:" in msg  # names file and line
+
+
+def test_skip_policy_counts_and_continues(tmp_path):
+    p = _write(
+        tmp_path,
+        "0.0,1,600,a,,\n"
+        "1.0,0,600,a,,\n"  # zero-GPU: malformed
+        "2.0,1,bad,a,,\n"  # bad duration: malformed
+        "3.0,1,600,a,,\n",
+    )
+    st = IngestStats()
+    jobs = load_trace_csv(p, on_error="skip", stats=st)
+    assert len(jobs) == 2
+    assert st.n_rows == 4 and st.n_jobs == 2 and st.n_skipped == 2
+    assert st.skipped_lines == [3, 4]
+
+
+def test_missing_required_column_is_header_error(tmp_path):
+    p = _write(tmp_path, "1,600\n", header="num_gpus,duration\n")
+    with pytest.raises(TraceSchemaError, match="missing required"):
+        list(iter_trace_csv(p))
+    p2 = _write(tmp_path, "0.0,1\n", header="submit_time,num_gpus\n",
+                name="t2.csv")
+    with pytest.raises(TraceSchemaError, match="duration"):
+        list(iter_trace_csv(p2))
+
+
+def test_empty_file_is_schema_error(tmp_path):
+    p = tmp_path / "e.csv"
+    p.write_text("")
+    with pytest.raises(TraceSchemaError, match="empty file"):
+        list(iter_trace_csv(p))
+
+
+def test_header_error_raises_even_under_skip(tmp_path):
+    p = _write(tmp_path, "1,600\n", header="num_gpus,duration\n")
+    with pytest.raises(TraceSchemaError):
+        list(iter_trace_csv(p, on_error="skip"))
+
+
+# ---------------------------------------------------------------------------
+# out-of-order submits: a file-level property, not a row defect
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_order_lazy_raises_eager_sorts(tmp_path):
+    p = _write(
+        tmp_path,
+        "10.0,1,600,a,,\n"
+        "5.0,1,600,b,,\n",
+    )
+    with pytest.raises(TraceSchemaError, match="out-of-order submit"):
+        list(iter_trace_csv(p))
+    jobs = load_trace_csv(p)  # eager path sorts
+    assert [j.arrival for j in jobs] == [5.0, 10.0]
+    assert [j.job_id for j in jobs] == [0, 1]  # ids reassigned in order
+
+
+def test_out_of_order_raises_even_under_skip_policy(tmp_path):
+    p = _write(tmp_path, "10.0,1,600,a,,\n5.0,1,600,b,,\n")
+    with pytest.raises(TraceSchemaError, match="out-of-order"):
+        list(iter_trace_csv(p, on_error="skip"))
+
+
+# ---------------------------------------------------------------------------
+# CLI + JSONL re-shard
+# ---------------------------------------------------------------------------
+
+
+def test_cli_convert_jsonl_round_trips(tmp_path):
+    from repro.core.trace_ingest import _main
+
+    out = tmp_path / "shard.jsonl"
+    assert _main(["convert", SAMPLE, "--jsonl", str(out)]) == 0
+    shard = list(JsonlJobs(out))
+    assert shard == list(iter_trace_csv(SAMPLE))
+
+
+def test_cli_convert_scenario_validates_against_schema_v1(tmp_path):
+    from repro.core.trace_ingest import _main
+
+    out = tmp_path / "scn.json"
+    assert _main(
+        ["convert", SAMPLE, "--scenario", str(out),
+         "--servers", "8", "--gpus-per-server", "8"]
+    ) == 0
+    d = json.loads(out.read_text())
+    assert d["schema"] == 1
+    scn = Scenario.from_dict(d)
+    assert len(scn.jobs) == 30
