@@ -7,7 +7,7 @@ export PYTHONPATH
 
 .PHONY: test test-sched lint smoke bench-sched bench-hetero \
 	bench-straggler bench-elastic bench-stream bench-guard \
-	bench-budget bench-trend ci
+	bench-budget bench-trend bench-fleet bench-fleet-ab ci
 
 test:
 	python -m pytest -x -q
@@ -87,5 +87,22 @@ bench-budget:
 		--json BENCH_sched.json \
 		--check benchmarks/BENCH_sched_baseline.json
 
-# What CI runs: lint + tier-1 + budget benchmark.
-ci: lint test bench-budget
+# Monte-Carlo robustness sweep (what the CI fleet-robustness job runs,
+# minus --strict: local runs stay fail-soft on the p95 flow-time check;
+# per-variant schedule-sha mismatches still exit 1).  FLEET_N variants.
+# Refresh the baseline with: make bench-fleet && cp BENCH_fleet.json
+# benchmarks/BENCH_fleet_baseline.json.
+FLEET_N ?= 64
+bench-fleet:
+	python -m benchmarks.sched_scale --fleet $(FLEET_N) \
+		--json BENCH_fleet.json \
+		--check benchmarks/BENCH_fleet_baseline.json
+
+# Interleaved fleet-vs-sequential A/B on the refined-mapping engine:
+# asserts per-variant bit-identity and prints fleet_speedup (the
+# shared-cache + batched-prewarm amortization, benchmarks/README.md).
+bench-fleet-ab:
+	python -m benchmarks.sched_scale --fleet-ab
+
+# What CI runs: lint + tier-1 + budget benchmark + fleet gate.
+ci: lint test bench-budget bench-fleet

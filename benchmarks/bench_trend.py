@@ -34,6 +34,14 @@ writes the same series machine-readably::
 
 Labels are paths relative to the common ancestor (artifact directories
 are usually named per CI run, so the run id survives into the table).
+
+CI wiring (the bench job): ``--summary "$GITHUB_STEP_SUMMARY"`` appends
+the table to the run page, and ``--min-ratio 0.7`` turns the headline
+into a gate — exit 1 when any policy's latest/first ratio drops below
+the threshold (a sustained regression, as opposed to the single-run
+fail-soft ``--check`` warnings).  Non-budget artifacts that stray into
+the download directory (e.g. the fleet distribution JSON) are skipped
+with a note, like corrupt ones.
 """
 from __future__ import annotations
 
@@ -119,6 +127,18 @@ def load_series(
         except (json.JSONDecodeError, KeyError, OSError) as exc:
             print(f"[trend] skipping {f}: {exc}")
             continue
+        bench = data.get("bench")
+        if bench not in (None, "sched_scale_budget"):
+            # e.g. a fleet artifact (BENCH_fleet.json schema) swept into
+            # the download dir — different bench, not a trend point
+            print(f"[trend] skipping {f}: bench {bench!r} is not the "
+                  f"budget series")
+            continue
+        if not isinstance(eps, dict) or not all(
+            isinstance(v, (int, float)) for v in eps.values()
+        ):
+            print(f"[trend] skipping {f}: malformed events_per_sec")
+            continue
         parsed.append((_run_timestamp(f, data), str(f), f, eps))
     parsed.sort(key=lambda e: (e[0], e[1]))
     labels: List[str] = []
@@ -198,6 +218,19 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--json", metavar="PATH", default=None,
         help="also write the series as JSON to PATH",
     )
+    ap.add_argument(
+        "--summary", metavar="FILE", default=None,
+        help="append the markdown table to FILE (CI: pass "
+             "\"$GITHUB_STEP_SUMMARY\" so the trend renders on the run "
+             "page)",
+    )
+    ap.add_argument(
+        "--min-ratio", metavar="R", default=None, type=float,
+        help="exit 1 when any policy's latest/first events-per-second "
+             "ratio drops below R (the CI trend gate uses 0.7); policies "
+             "without a ratio (single point, or absent from the latest "
+             "artifact) are noted but never fail the gate",
+    )
     args = ap.parse_args(argv)
 
     files = discover(args.paths)
@@ -208,12 +241,36 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not labels:
         print("no parseable artifacts")
         return 1
-    print(to_markdown(labels, series))
+    table = to_markdown(labels, series)
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as fh:
+            fh.write("### sched_scale events/sec trend\n\n")
+            fh.write(table)
+            fh.write("\n")
+        print(f"appended trend table to {args.summary}")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(to_trend_json(labels, series), fh, indent=2)
             fh.write("\n")
         print(f"wrote {args.json}")
+    if args.min_ratio is not None:
+        ratios = latest_vs_first(series)
+        slow = {
+            p: r for p, r in ratios.items()
+            if r is not None and r < args.min_ratio
+        }
+        for p in sorted(p for p, r in ratios.items() if r is None):
+            print(f"[trend] {p}: no latest/first ratio (single point or "
+                  f"absent from latest); gate skipped")
+        if slow:
+            for p, r in sorted(slow.items()):
+                print(
+                    f"::error::trend gate: {p} latest/first {r:.2f} < "
+                    f"{args.min_ratio} — sustained events/sec regression"
+                )
+            return 1
+        print(f"trend gate: all latest/first ratios >= {args.min_ratio}")
     return 0
 
 

@@ -71,6 +71,21 @@ Variants:
   the threshold, since shared CI runners swing tens of percent.
   ``--budget --straggler`` appends the straggler migration row to the
   trended set.
+* ``--fleet [N]`` / ``sched_scale_fleet`` — Monte-Carlo robustness
+  sweep: N seeded straggler+elastic+arrival-jitter perturbations of a
+  base scenario run through the shared-cache fleet driver
+  (repro.core.fleet).  ``--json`` writes the distribution stats +
+  per-variant schedule sha256s; ``--check`` compares against the
+  committed ``BENCH_fleet_baseline.json`` — digest mismatches at fixed
+  seed always exit 1 (bit-identity gate), p95 flow-time regressions
+  warn, or fail under ``--strict``.
+* ``--fleet-ab [N]`` / ``sched_scale_fleet_ab`` — interleaved A/B of
+  the fleet driver vs N independent sequential ``simulate()`` calls on
+  the refined-mapping engine; asserts per-variant bit-identity and
+  reports ``fleet_speedup`` (the ROADMAP 5a cold-placement
+  amortization, measured).
+* ``--strict`` — promote ``--check`` warnings to exit 1 (CI gate mode;
+  fail-soft stays the local default).
 * ``--profile [N]`` — run the selected variant under cProfile and dump
   the top-N cumulative entries (hot-path triage without ad-hoc scripts).
 """
@@ -81,15 +96,20 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import (
     ASRPTPolicy,
+    ArrivalJitterPerturbation,
     BASELINES,
     ClusterSpec,
+    ElasticPerturbation,
     Scenario,
     ServerClass,
+    StragglerPerturbation,
     StreamTraceConfig,
     TraceConfig,
     elastic_events,
     generate_trace,
     make_predictor,
+    mixed_cluster_spec,
+    run_fleet,
     simulate,
     straggler_events,
     stream_trace_source,
@@ -565,6 +585,252 @@ def sched_scale_budget(straggler: bool = False) -> List[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Scenario fleets (--fleet): Monte-Carlo robustness sweeps as a CI gate
+# ---------------------------------------------------------------------------
+
+# CI fleet regime: a 16-server mixed-generation cluster and a 300-job
+# trace at moderate load, perturbed per variant by straggler + elastic +
+# arrival-jitter samplers (repro.core.scenario).  The policy is
+# migration-capable A-SRPT *without* refine_mapping: matmul-free engines
+# produce cross-machine-stable schedule sha256s (same argument as the
+# golden fixtures), so the committed baseline's per-variant digests are
+# a hard bit-identity gate, not a tolerance band.
+FLEET_VARIANTS_DEFAULT = 64
+FLEET_JOBS = 300
+FLEET_NUM_SERVERS = 16
+FLEET_SECONDS_PER_JOB = 3 * SECONDS_PER_JOB  # moderate load, like --straggler
+
+# --fleet-ab: the shared-cache speedup measurement runs the *refined*
+# mapping engine (where cold placements dominate, ROADMAP 5a) over an
+# exploration-heavy trace: ``recur_zipf_a=8`` makes nearly every job a
+# distinct model configuration (a hyperparameter-search-style workload),
+# so each sequential variant pays the full cold-placement working set
+# while the fleet arm pays it once.  Small job count keeps 2 rounds x
+# 256 sequential variants tractable.
+FLEET_AB_VARIANTS = 256
+FLEET_AB_JOBS = 60
+FLEET_AB_NUM_SERVERS = 32
+
+
+def _fleet_ab_base() -> Scenario:
+    cluster = mixed_cluster_spec(num_servers=FLEET_AB_NUM_SERVERS, seed=0)
+    jobs = generate_trace(
+        TraceConfig(
+            n_jobs=FLEET_AB_JOBS,
+            horizon=FLEET_AB_JOBS * 3 * SECONDS_PER_JOB,
+            seed=1,
+            single_gpu_frac=0.05,
+            max_gpus_per_job=128,
+            mean_iters=400,
+            sigma_iters=1.6,
+            session_spread=120.0,
+            recur_zipf_a=8.0,  # ~all groups singletons: max config diversity
+        )
+    )
+    return Scenario(
+        jobs=tuple(jobs), cluster=cluster,
+        name=f"fleet-ab-base-{FLEET_AB_JOBS}",
+    )
+
+
+def _fleet_base(n_jobs: int = FLEET_JOBS) -> Scenario:
+    cluster = mixed_cluster_spec(num_servers=FLEET_NUM_SERVERS, seed=0)
+    jobs = _trace(n_jobs, seconds_per_job=FLEET_SECONDS_PER_JOB)
+    return Scenario(
+        jobs=tuple(jobs), cluster=cluster, name=f"fleet-base-{n_jobs}"
+    )
+
+
+def _fleet_perturbations():
+    return (
+        StragglerPerturbation(n_stragglers=3),
+        ElasticPerturbation(n_servers=2),
+        ArrivalJitterPerturbation(sigma=60.0),
+    )
+
+
+def _fleet_policy() -> ASRPTPolicy:
+    return ASRPTPolicy(
+        make_predictor("mean"), tau=2.0, refine_mapping=False, migrate=True
+    )
+
+
+def sched_scale_fleet(
+    n_variants: int = FLEET_VARIANTS_DEFAULT, seed: int = 0
+) -> Tuple[List[Dict], "object"]:
+    """Run the CI fleet regime; returns (summary rows, FleetResult)."""
+    fr = run_fleet(
+        _fleet_base(),
+        _fleet_policy,
+        _fleet_perturbations(),
+        n_variants,
+        seed=seed,
+    )
+    flow = fr.stats["total_flow_time"]
+    mig = fr.stats["n_migrations"]
+    row = {
+        "bench": "fleet",
+        "n_variants": n_variants,
+        "seed": seed,
+        "flow_mean": f"{flow['mean']:.4e}",
+        "flow_p50": f"{flow['p50']:.4e}",
+        "flow_p95": f"{flow['p95']:.4e}",
+        "makespan_p95": round(fr.stats["makespan"]["p95"], 1),
+        "migrations_mean": round(mig["mean"], 2),
+        "wall_s": round(fr.wall_s, 3),
+        "fleet_digest": fr.digest(),
+    }
+    return [row], fr
+
+
+def fleet_to_bench_json(fleet) -> Dict:
+    """``FleetResult.to_dict()`` + the run timestamp (see
+    ``rows_to_bench_json`` for why ``generated_at`` matters)."""
+    from datetime import datetime, timezone
+
+    out = fleet.to_dict()
+    out["generated_at"] = datetime.now(timezone.utc).isoformat(
+        timespec="seconds"
+    )
+    return out
+
+
+def check_fleet_regression(
+    current: Dict, baseline: Dict, threshold: float = 0.30
+) -> Tuple[List[str], List[str], List[str]]:
+    """Compare a fleet run against the committed baseline.
+
+    Returns ``(errors, warnings, notes)``:
+
+    * **errors** — per-variant schedule-sha mismatches at the same
+      ``(seed, n_variants)``.  Schedules are deterministic functions of
+      the seed on the matmul-free engine, so a mismatch is a behavior
+      change (or a broken determinism guarantee), never runner noise —
+      callers should exit nonzero even without ``--strict``.
+    * **warnings** — p95 total-flow-time more than ``threshold`` above
+      the baseline (robustness regression; ``--strict`` promotes to a
+      failure, local runs stay fail-soft).
+    * **notes** — informational lines (improvements, skipped checks on a
+      malformed or mismatched-regime baseline).
+    """
+    errors: List[str] = []
+    warnings: List[str] = []
+    notes: List[str] = []
+
+    base_dig = baseline.get("digests")
+    cur_dig = current.get("digests")
+    same_regime = (
+        baseline.get("seed") == current.get("seed")
+        and baseline.get("n_variants") == current.get("n_variants")
+    )
+    if not isinstance(base_dig, list) or not base_dig:
+        notes.append("baseline has no per-variant digests; sha check skipped")
+    elif not same_regime:
+        notes.append(
+            "baseline regime (seed/n_variants) differs; sha check skipped "
+            "— refresh BENCH_fleet_baseline.json"
+        )
+    else:
+        mismatches = [
+            i
+            for i, (b, c) in enumerate(zip(base_dig, cur_dig or []))
+            if b != c
+        ]
+        if len(base_dig) != len(cur_dig or []):
+            errors.append(
+                f"digest count mismatch: baseline {len(base_dig)} vs "
+                f"current {len(cur_dig or [])}"
+            )
+        elif mismatches:
+            head = ", ".join(f"#v{i}" for i in mismatches[:5])
+            errors.append(
+                f"{len(mismatches)}/{len(base_dig)} variant schedule "
+                f"sha256s differ from baseline at fixed seed "
+                f"(first: {head}) — determinism or behavior change"
+            )
+        else:
+            notes.append(
+                f"all {len(base_dig)} variant schedule digests match "
+                f"baseline"
+            )
+
+    try:
+        ref = float(baseline["stats"]["total_flow_time"]["p95"])
+        now = float(current["stats"]["total_flow_time"]["p95"])
+    except (KeyError, TypeError, ValueError):
+        notes.append("baseline has no p95 flow-time stats; check skipped")
+    else:
+        if ref > 0:
+            ratio = now / ref
+            if ratio > 1.0 + threshold:
+                warnings.append(
+                    f"p95 total flow time {now:.4e} is {ratio - 1:.0%} "
+                    f"above baseline {ref:.4e}"
+                )
+            else:
+                notes.append(
+                    f"p95 total flow time {now:.4e} vs baseline "
+                    f"{ref:.4e} ({ratio - 1:+.1%})"
+                )
+    return errors, warnings, notes
+
+
+def sched_scale_fleet_ab(
+    n_variants: int = FLEET_AB_VARIANTS, seed: int = 0, rounds: int = 2
+) -> List[Dict]:
+    """Interleaved fleet-vs-sequential A/B (--fleet-ab).
+
+    Both arms run ``rounds`` times in alternation (fleet, sequential,
+    fleet, ...) so host drift hits them symmetrically; each arm reports
+    its best wall time (the sampling convention of the 20k
+    cached/uncached comparison).  The sequential arm is ``run_fleet``
+    with ``share=False, prewarm=False`` — exactly ``n_variants``
+    independent ``simulate()`` calls with fresh caches.  The row asserts
+    per-variant bit-identity between the arms before reporting
+    ``fleet_speedup``.
+    """
+    base = _fleet_ab_base()
+    perts = _fleet_perturbations()
+
+    def mk():
+        return _asrpt(migrate=True)  # refine_mapping=True regime
+
+    fleet_walls: List[float] = []
+    seq_walls: List[float] = []
+    fleet_digest = seq_digest = None
+    prewarm: Dict[str, float] = {}
+    for _ in range(rounds):
+        fr = run_fleet(base, mk, perts, n_variants, seed=seed)
+        fleet_walls.append(fr.wall_s)
+        fleet_digest = fr.digest()
+        prewarm = fr.prewarm
+        sr = run_fleet(
+            base, mk, perts, n_variants, seed=seed,
+            share=False, prewarm=False,
+        )
+        seq_walls.append(sr.wall_s)
+        seq_digest = sr.digest()
+    if fleet_digest != seq_digest:
+        raise AssertionError(
+            "fleet and sequential arms disagree: "
+            f"{fleet_digest} != {seq_digest}"
+        )
+    row = {
+        "bench": "fleet_ab",
+        "n_variants": n_variants,
+        "n_jobs": FLEET_AB_JOBS,
+        "seed": seed,
+        "rounds": rounds,
+        "fleet_wall_s": round(min(fleet_walls), 3),
+        "sequential_wall_s": round(min(seq_walls), 3),
+        "fleet_speedup": round(min(seq_walls) / min(fleet_walls), 2),
+        "digests_identical": True,
+        "prewarm": prewarm,
+    }
+    return [row]
+
+
+# ---------------------------------------------------------------------------
 # BENCH_sched.json emission + fail-soft regression check (CI trend tracking)
 # ---------------------------------------------------------------------------
 
@@ -696,15 +962,46 @@ def main(argv: Optional[List[str]] = None) -> int:
              "fixture was recorded with 20)",
     )
     ap.add_argument(
+        "--fleet", metavar="N", nargs="?", const=FLEET_VARIANTS_DEFAULT,
+        default=None, type=int,
+        help="Monte-Carlo robustness sweep: N seeded "
+             "straggler+elastic+jitter perturbations of a base scenario "
+             "through the shared-cache fleet driver (default "
+             f"{FLEET_VARIANTS_DEFAULT} variants); --json writes the "
+             "BENCH_fleet.json distribution + per-variant sha256s, "
+             "--check compares against the committed fleet baseline",
+    )
+    ap.add_argument(
+        "--fleet-ab", metavar="N", nargs="?", const=FLEET_AB_VARIANTS,
+        default=None, type=int,
+        help="interleaved fleet-vs-sequential A/B at N variants (default "
+             f"{FLEET_AB_VARIANTS}) on the refined-mapping engine: "
+             "asserts per-variant bit-identity, reports fleet_speedup",
+    )
+    ap.add_argument(
+        "--seed", metavar="SEED", default=0, type=int,
+        help="fleet RNG seed (--fleet/--fleet-ab; variant i draws from "
+             "default_rng([seed, i]))",
+    )
+    ap.add_argument(
         "--json", metavar="PATH", default=None,
         help="write BENCH_sched.json-style output to PATH (--budget only: "
              "the trend file keys events/sec by policy name, which is only "
-             "unique for the single-size budget run)",
+             "unique for the single-size budget run) or BENCH_fleet.json "
+             "output (--fleet)",
     )
     ap.add_argument(
         "--check", metavar="BASELINE", default=None,
         help="fail-soft events/sec comparison vs a baseline JSON "
-             "(--budget only)",
+             "(--budget), or fleet digest + p95 flow-time comparison "
+             "(--fleet; sha mismatches always fail)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 when --check finds regressions past the threshold "
+             "(CI gate mode; the local default stays fail-soft because "
+             "shared-runner throughput swings tens of percent). Fleet "
+             "sha mismatches fail regardless of --strict.",
     )
     ap.add_argument(
         "--profile", metavar="N", nargs="?", const=25, default=None,
@@ -715,11 +1012,28 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     args = ap.parse_args(argv)
 
-    if (args.json or args.check) and not args.budget:
-        ap.error("--json/--check track the budget-mode series; add --budget")
+    fleet_mode = args.fleet is not None
+    if (args.json or args.check) and not (args.budget or fleet_mode):
+        ap.error("--json/--check track the budget-mode or fleet series; "
+                 "add --budget or --fleet")
+    if args.strict and not args.check:
+        ap.error("--strict promotes --check warnings to failures; add "
+                 "--check")
     if sum((args.hetero, args.straggler, args.elastic, args.guard)) > 1:
         ap.error("--hetero/--straggler/--elastic/--guard are separate "
                  "variants")
+    if (fleet_mode or args.fleet_ab is not None) and (
+        args.budget or args.hetero or args.straggler or args.elastic
+        or args.guard or args.full or args.scenario
+        or args.stream is not None or args.trace is not None
+    ):
+        ap.error("--fleet/--fleet-ab are their own variants; drop other "
+                 "flags")
+    if fleet_mode and args.fleet_ab is not None:
+        ap.error("--fleet runs the CI sweep; --fleet-ab the speedup A/B — "
+                 "pick one")
+    if args.seed and not (fleet_mode or args.fleet_ab is not None):
+        ap.error("--seed applies to --fleet/--fleet-ab")
     streaming = args.stream is not None or args.trace is not None
     if args.stream is not None and args.trace is not None:
         ap.error("--stream generates synthetically; --trace replays a "
@@ -735,7 +1049,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         args.policy != "A-SRPT" or args.migration_penalty is not None
     ):
         ap.error("--policy/--migration-penalty apply to --scenario replays")
-    if args.scenario is not None:
+    fleet_result: List = []  # run() closure hands the FleetResult out
+    if fleet_mode:
+        def run():
+            rows, fr = sched_scale_fleet(args.fleet, seed=args.seed)
+            fleet_result.append(fr)
+            return rows
+    elif args.fleet_ab is not None:
+        run = lambda: sched_scale_fleet_ab(  # noqa: E731
+            args.fleet_ab, seed=args.seed
+        )
+    elif args.scenario is not None:
         if args.budget or args.hetero or args.straggler or args.elastic:
             ap.error("--scenario replays one file; drop the variant flags")
         run = lambda: sched_scale_scenario(  # noqa: E731
@@ -792,7 +1116,12 @@ def main(argv: Optional[List[str]] = None) -> int:
             )
             return 1
         print(f"peak RSS {peak} MB <= {args.max_rss_mb} MB ceiling")
-    bench = rows_to_bench_json(rows) if (args.json or args.check) else None
+    bench = None
+    if args.json or args.check:
+        bench = (
+            fleet_to_bench_json(fleet_result[0]) if fleet_mode
+            else rows_to_bench_json(rows)
+        )
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(bench, fh, indent=2)
@@ -804,13 +1133,33 @@ def main(argv: Optional[List[str]] = None) -> int:
                 baseline = json.load(fh)
         except FileNotFoundError:
             print(f"::warning::no baseline at {args.check}; skipping check")
-            return 0
-        warnings, notes = check_regression(bench, baseline)
-        for line in notes:
-            print(f"[bench] {line}")
-        for line in warnings:
-            # GitHub Actions annotation; fail-soft (shared runners are noisy)
-            print(f"::warning::sched_scale regression: {line}")
+            return 1 if args.strict else 0
+        except ValueError:
+            print(f"::warning::unreadable baseline at {args.check}; "
+                  f"skipping check")
+            return 1 if args.strict else 0
+        if fleet_mode:
+            errors, warnings, notes = check_fleet_regression(bench, baseline)
+            for line in notes:
+                print(f"[fleet] {line}")
+            for line in warnings:
+                print(f"::warning::fleet regression: {line}")
+            for line in errors:
+                print(f"::error::fleet bit-identity: {line}")
+            if errors:
+                return 1  # sha mismatches fail even without --strict
+            if warnings and args.strict:
+                return 1
+        else:
+            warnings, notes = check_regression(bench, baseline)
+            for line in notes:
+                print(f"[bench] {line}")
+            for line in warnings:
+                # GitHub Actions annotation; fail-soft by default (shared
+                # runners are noisy) — --strict turns these into exit 1
+                print(f"::warning::sched_scale regression: {line}")
+            if warnings and args.strict:
+                return 1
     return 0
 
 

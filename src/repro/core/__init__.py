@@ -17,17 +17,23 @@ from .heavy_edge import (  # noqa: F401
 from .cluster import ClusterState  # noqa: F401
 from .srpt import VirtualSRPT, srpt_total_completion  # noqa: F401
 from .scenario import (  # noqa: F401
+    ArrivalJitterPerturbation,
     ClusterEvent,
     Degradation,
+    ElasticPerturbation,
     Fault,
+    FaultPerturbation,
     IterJobs,
     JobStream,
     JsonlJobs,
+    Perturbation,
     SCENARIO_SCHEMA_VERSION,
     Scenario,
     ServerJoin,
     ServerLeave,
+    StragglerPerturbation,
     jobs_to_jsonl,
+    perturb_scenario,
     scenario_from_legacy,
 )
 from .simulator import (  # noqa: F401
@@ -38,6 +44,13 @@ from .simulator import (  # noqa: F401
     SimResult,
     Start,
     simulate,
+)
+from .fleet import (  # noqa: F401
+    FleetResult,
+    FleetShared,
+    VariantResult,
+    fleet_variants,
+    run_fleet,
 )
 from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin  # noqa: F401
 from .asrpt import ASRPTPolicy  # noqa: F401

@@ -56,7 +56,7 @@ from .heavy_edge import (
 from .job import ClusterSpec, JobSpec
 from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin
 from .predictor import IterationPredictor
-from .simulator import AlphaCache, Policy, Start
+from .simulator import Policy, Start
 from .srpt import VirtualSRPT
 
 COMM_HEAVY_DEFAULT = 1.5
@@ -125,9 +125,13 @@ class ASRPTPolicy(MigrationMixin, Policy):
 
     def bind(self, cluster_spec: ClusterSpec) -> None:
         super().bind(cluster_spec)
-        self.alpha_cache = AlphaCache(cluster_spec)
+        # built through the Policy helpers so a fleet run (fleet_shared
+        # set) hands out fleet-shared caches instead of cold private ones
+        self.alpha_cache = self._make_alpha_cache(cluster_spec)
         self._pcache: Optional[PlacementCache] = (
-            PlacementCache(cluster_spec, refine=self.refine_mapping)
+            self._make_placement_cache(
+                cluster_spec, refine=self.refine_mapping
+            )
             if self.placement_cache
             else None
         )

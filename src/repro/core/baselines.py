@@ -18,11 +18,11 @@ import heapq
 from typing import Callable, Dict, List
 
 from .cluster import ClusterState
-from .heavy_edge import PlacementCache, select_servers
+from .heavy_edge import select_servers
 from .job import ClusterSpec, JobSpec
 from .migration import MIGRATION_PENALTY_DEFAULT, MigrationMixin
 from .predictor import IterationPredictor
-from .simulator import AlphaCache, Policy, Start
+from .simulator import Policy, Start
 
 
 class QueuePolicy(MigrationMixin, Policy):
@@ -74,8 +74,8 @@ class QueuePolicy(MigrationMixin, Policy):
 
     def bind(self, cluster_spec: ClusterSpec) -> None:
         super().bind(cluster_spec)
-        self.alpha_cache = AlphaCache(cluster_spec)
-        self._pcache = PlacementCache(cluster_spec)
+        self.alpha_cache = self._make_alpha_cache(cluster_spec)
+        self._pcache = self._make_placement_cache(cluster_spec)
 
     def _key(self, job: JobSpec) -> float:
         if self.key_kind == "subtime":

@@ -907,7 +907,7 @@ class PlacementCache:
 
     __slots__ = (
         "cluster", "refine", "maxsize", "hits", "misses", "_lru", "_graphs",
-        "_het", "_class_of", "_hetctx", "_seeds", "_classes_memo",
+        "_het", "_class_of", "_hetctx", "_seeds", "_classes_memo", "key_log",
     )
 
     def __init__(
@@ -915,6 +915,7 @@ class PlacementCache:
         cluster: ClusterSpec,
         refine: bool = False,
         maxsize: int = 1 << 16,
+        key_log: Optional[list] = None,
     ):
         from collections import OrderedDict
 
@@ -923,6 +924,10 @@ class PlacementCache:
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        # Optional miss recorder (fleet prewarm, repro.core.fleet): every
+        # clean-path miss appends ``(job, server_caps)`` so a scout run's
+        # working set can be replayed into another cache via ``warm``.
+        self.key_log = key_log
         self._het = cluster.is_heterogeneous
         self._lru: "OrderedDict[tuple, Tuple[Dict[int, np.ndarray], float]]" = (
             OrderedDict()
@@ -940,9 +945,12 @@ class PlacementCache:
         # across every capacity shape with the same class layout
         self._hetctx: Dict[tuple, tuple] = {}
         # (config, caps) -> seed/refine arrays shared across class layouts
-        # (the seeds never read classes); only useful on mixed clusters,
-        # where most misses are new class layouts over seen capacity shapes
-        self._seeds: Optional[Dict[tuple, list]] = {} if self._het else None
+        # (the seeds never read classes).  On mixed clusters most misses
+        # are new class layouts over seen capacity shapes; on homogeneous
+        # clusters the store mainly serves ``warm`` (entries hold exactly
+        # the arrays recomputation would produce, so pre-populating them
+        # is behavior-neutral).
+        self._seeds: Optional[Dict[tuple, list]] = {}
         # ids tuple -> classes tuple (server subsets recur heavily)
         self._classes_memo: Dict[tuple, tuple] = {}
 
@@ -1004,6 +1012,8 @@ class PlacementCache:
                 lru.move_to_end(key)
         else:
             self.misses += 1
+            if self.key_log is not None and speeds is None:
+                self.key_log.append((job, tuple(server_caps)))
             cfg_key = job.config_key
             graph = self._graphs.get(cfg_key)
             if graph is None:
@@ -1042,6 +1052,145 @@ class PlacementCache:
                 lru.popitem(last=False)
         vectors, a = hit
         return dict(zip(ids, vectors)), a
+
+    def warm(self, requests) -> Tuple[int, int]:
+        """Pre-compute missing clean entries, batching the cold refines.
+
+        ``requests``: iterable of ``(job, server_caps)`` pairs — typically
+        another cache's ``key_log`` from a cheap scout run (see
+        ``repro.core.fleet``).  Misses are grouped by ``(config,
+        slot-count, NIC-bandwidth pattern)`` and every group's distinct
+        seed rows — across all its capacity shapes and class layouts —
+        are refined in ONE ``_refine_positions_batched`` call, instead of
+        one three-seed program per ``(config, shape)`` miss.  Grouping on
+        equal slot count keeps every slice's op shapes equal to the
+        sequential path's, and the batched refine is bit-identical per
+        row (see its docstring), so a warmed entry equals what the
+        on-demand miss would compute — ``map_job`` then finishes each
+        entry (candidate alpha + best-of) through its normal path against
+        the pre-populated seed store.
+
+        Returns ``(n_entries_computed, n_batched_refine_calls)``.  On a
+        non-refine cache there is no batched program; entries are simply
+        computed via ``map_job``.
+        """
+        pending: List[tuple] = []
+        seen: set = set()
+        lru = self._lru
+        for job, server_caps in requests:
+            ids, shape = zip(*server_caps)
+            # mirror map_job's key construction (kept inline there for the
+            # hot path)
+            if self._het:
+                classes = self._classes_memo.get(ids)
+                if classes is None:
+                    if len(self._classes_memo) >= self.maxsize:
+                        self._classes_memo.clear()
+                    class_of = self._class_of
+                    classes = self._classes_memo[ids] = tuple(
+                        class_of[m] for m in ids
+                    )
+                key = (job.config_key, shape, classes)
+            else:
+                classes = None
+                key = (job.config_key, shape)
+            if key in lru or key in seen:
+                continue
+            seen.add(key)
+            pending.append((job, server_caps, shape, classes))
+        if not pending:
+            return 0, 0
+
+        n_groups = 0
+        if self.refine:
+            # (config, K, bw pattern) -> refine work; r_server depends on
+            # geometry only through the per-slot NIC bandwidths (bw_key),
+            # so one group shares a single (K,)-shaped weight vector
+            groups: Dict[tuple, list] = {}
+            group_seen: set = set()
+            for job, _sc, shape, classes in pending:
+                K = len(shape)
+                if K == 1:
+                    continue  # single-server path has no refine work
+                cfg_key = job.config_key
+                graph = self._graphs.get(cfg_key)
+                if graph is None:
+                    graph = self._graphs[cfg_key] = build_job_graph(job)
+                d = graph.dense()
+                if sum(shape) != len(d.verts):
+                    continue  # map_job raises the loud ValueError below
+                if self._seeds is not None and (
+                    len(self._seeds) >= self.maxsize
+                ):
+                    self._seeds.clear()
+                sc_key = (cfg_key, shape)
+                ent = self._seeds.get(sc_key)
+                if ent is None:
+                    # seed construction exactly as map_job's miss path
+                    # (rank ids 0..K-1 ascending; identity order when the
+                    # shape is already descending)
+                    caps = list(shape)
+                    if all(caps[p] >= caps[p + 1] for p in range(K - 1)):
+                        order = range(K)
+                    else:
+                        order = sorted(
+                            range(K), key=lambda p: (-caps[p], p)
+                        )
+                    seeds = [
+                        _heavy_edge_positions(graph, d, caps, order),
+                        _contiguous_positions(d, caps, order),
+                        _stage_aligned_positions(
+                            graph, d, list(enumerate(shape))
+                        ),
+                    ]
+                    uniq: List[np.ndarray] = []
+                    uniq_of: List[int] = []
+                    sb: Dict[bytes, int] = {}
+                    for s_arr in seeds:
+                        bkey = s_arr.tobytes()
+                        idx = sb.get(bkey)
+                        if idx is None:
+                            idx = sb[bkey] = len(uniq)
+                            uniq.append(s_arr)
+                        uniq_of.append(idx)
+                    ent = [seeds, uniq, uniq_of, {}]
+                    self._seeds[sc_key] = ent
+                if self._het:
+                    ctx = self._het_context(classes)
+                    r_server, bw_key = ctx[2], ctx[3]
+                else:
+                    r_server, bw_key = None, ()
+                if bw_key in ent[3]:
+                    continue  # refined rows already known for this pattern
+                mark = (id(ent), bw_key)
+                if mark in group_seen:
+                    continue
+                group_seen.add(mark)
+                groups.setdefault((cfg_key, K, bw_key), []).append(
+                    (ent, r_server, bw_key)
+                )
+            for (cfg_key, _K, _bw), members in groups.items():
+                d = self._graphs[cfg_key].dense()
+                n = len(d.verts)
+                slices: List[tuple] = []
+                total = 0
+                for ent, _rs, bw in members:
+                    cnt = len(ent[1])
+                    slices.append((ent, bw, total, cnt))
+                    total += cnt
+                seed_mat = np.empty((total, n), dtype=np.int64)
+                for ent, _bw, ofs, cnt in slices:
+                    for u_i, row in enumerate(ent[1]):
+                        seed_mat[ofs + u_i] = row
+                refined = _refine_positions_batched(
+                    d, seed_mat, _K, members[0][1]
+                )
+                for ent, bw, ofs, cnt in slices:
+                    ent[3][bw] = refined[ofs:ofs + cnt]
+                n_groups += 1
+        for job, server_caps, _shape, _classes in pending:
+            self.map_job(job, server_caps)
+        return len(pending), n_groups
 
 
 def consolidated_caps(job: JobSpec, cluster: ClusterSpec) -> List[Tuple[int, int]]:

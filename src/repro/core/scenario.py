@@ -116,6 +116,7 @@ end-to-end replay via ``benchmarks/sched_scale.py --scenario``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 import os
@@ -661,6 +662,184 @@ def scenario_from_legacy(
         jobs=jobs if isinstance(jobs, JobStream) else tuple(jobs),
         cluster=cluster_spec, events=tuple(events),
         name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Perturbation samplers (ISSUE 7): seeded Monte-Carlo variants of a base
+# scenario.  Each sampler is a frozen config object; ``sample_events``
+# draws a fresh batch of ClusterEvents from a caller-provided
+# ``numpy.random.Generator`` (one generator per variant keeps variants
+# independent and the whole fleet a pure function of the fleet seed), and
+# ``perturb_jobs`` may rewrite the workload (arrival jitter).  Layering
+# happens in ``perturb_scenario``; the batched fleet driver lives in
+# ``repro.core.fleet``.
+# ---------------------------------------------------------------------------
+
+
+def _scenario_horizon(base: "Scenario") -> float:
+    """Time scale the samplers draw windows against: the workload's last
+    arrival (the trace horizon for generated traces; 0 for 1-job cases)."""
+    if isinstance(base.jobs, JobStream):
+        raise TypeError(
+            "perturbation sampling needs a materialized workload; call "
+            "scenario.materialize() first"
+        )
+    return max((j.arrival for j in base.jobs), default=0.0)
+
+
+@dataclass(frozen=True)
+class Perturbation:
+    """Base sampler: no events, jobs unchanged.  Subclasses override."""
+
+    def sample_events(
+        self, base: "Scenario", rng
+    ) -> List[ClusterEvent]:
+        return []
+
+    def perturb_jobs(
+        self, jobs: Tuple[JobSpec, ...], base: "Scenario", rng
+    ) -> Tuple[JobSpec, ...]:
+        return jobs
+
+
+@dataclass(frozen=True)
+class StragglerPerturbation(Perturbation):
+    """Partial degradation on ``n_stragglers`` distinct servers: each
+    slows to a uniform factor in ``[factor_low, factor_high)`` starting
+    at a uniform fraction of the horizon inside ``start_window``;
+    ``recover`` restores full speed ``duration_frac`` of the horizon
+    later (mirrors ``trace.straggler_events``)."""
+
+    n_stragglers: int = 4
+    factor_low: float = 0.25
+    factor_high: float = 0.75
+    start_window: Tuple[float, float] = (0.2, 0.6)
+    duration_frac: float = 0.25
+    recover: bool = True
+
+    def sample_events(self, base, rng):
+        horizon = _scenario_horizon(base)
+        n = base.cluster.num_servers
+        k = min(self.n_stragglers, n)
+        servers = rng.choice(n, size=k, replace=False)
+        out: List[ClusterEvent] = []
+        for m in servers:
+            f = float(rng.uniform(self.factor_low, self.factor_high))
+            t0 = float(horizon * rng.uniform(*self.start_window))
+            out.append(Degradation(t0, int(m), factor=f))
+            if self.recover:
+                out.append(
+                    Degradation(
+                        t0 + horizon * self.duration_frac, int(m),
+                        factor=1.0,
+                    )
+                )
+        return out
+
+
+@dataclass(frozen=True)
+class ElasticPerturbation(Perturbation):
+    """Elastic capacity: ``n_servers`` distinct servers leave at
+    ``leave_frac`` of the horizon (0.0 == absent from the start, the
+    ``--elastic`` maintenance-window regime) and rejoin at a uniform
+    fraction inside ``join_window``."""
+
+    n_servers: int = 2
+    leave_frac: float = 0.0
+    join_window: Tuple[float, float] = (0.3, 0.6)
+    drain_timeout: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.join_window[0] <= self.leave_frac:
+            raise ValueError(
+                f"join_window must start after leave_frac="
+                f"{self.leave_frac}, got {self.join_window}"
+            )
+
+    def sample_events(self, base, rng):
+        horizon = _scenario_horizon(base)
+        n = base.cluster.num_servers
+        k = min(self.n_servers, n)
+        servers = rng.choice(n, size=k, replace=False)
+        out: List[ClusterEvent] = []
+        for m in servers:
+            t_join = float(horizon * rng.uniform(*self.join_window))
+            out.append(
+                ServerLeave(
+                    self.leave_frac * horizon, int(m),
+                    drain_timeout=self.drain_timeout,
+                )
+            )
+            out.append(ServerJoin(t_join, int(m)))
+        return out
+
+
+@dataclass(frozen=True)
+class FaultPerturbation(Perturbation):
+    """Permanent full failures on ``n_faults`` distinct servers, each at
+    a uniform fraction of the horizon inside ``window``."""
+
+    n_faults: int = 1
+    window: Tuple[float, float] = (0.2, 0.8)
+
+    def sample_events(self, base, rng):
+        horizon = _scenario_horizon(base)
+        n = base.cluster.num_servers
+        k = min(self.n_faults, n)
+        servers = rng.choice(n, size=k, replace=False)
+        return [
+            Fault(float(horizon * rng.uniform(*self.window)), int(m))
+            for m in servers
+        ]
+
+
+@dataclass(frozen=True)
+class ArrivalJitterPerturbation(Perturbation):
+    """Gaussian arrival jitter: every arrival shifts by N(0, sigma)
+    seconds, clamped at 0 (the simulator stable-sorts unsorted tuples by
+    arrival, so no re-sort is needed here)."""
+
+    sigma: float = 60.0
+
+    def perturb_jobs(self, jobs, base, rng):
+        if not jobs:
+            return jobs
+        offs = rng.normal(0.0, self.sigma, size=len(jobs))
+        return tuple(
+            dataclasses.replace(
+                j, arrival=max(0.0, j.arrival + float(dt))
+            )
+            for j, dt in zip(jobs, offs)
+        )
+
+
+def perturb_scenario(
+    base: Scenario,
+    perturbations: Sequence[Perturbation],
+    rng,
+    name: str = "",
+) -> Scenario:
+    """One seeded variant: base jobs/events plus every sampler's draw.
+
+    Samplers are applied in list order against ``rng`` (a
+    ``numpy.random.Generator``), so the variant is a pure function of
+    ``(base, perturbations, generator state)``.  Sampled events merge
+    with the base event stream under the canonical Scenario ordering.
+    """
+    if isinstance(base.jobs, JobStream):
+        raise TypeError(
+            "perturbation sampling needs a materialized workload; call "
+            "scenario.materialize() first"
+        )
+    jobs: Tuple[JobSpec, ...] = base.jobs
+    events: List[ClusterEvent] = list(base.events)
+    for p in perturbations:
+        jobs = p.perturb_jobs(jobs, base, rng)
+        events.extend(p.sample_events(base, rng))
+    return Scenario(
+        jobs=jobs, cluster=base.cluster, events=tuple(events),
+        name=name or base.name,
     )
 
 

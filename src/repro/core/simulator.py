@@ -369,8 +369,35 @@ class Policy:
     # when this is truthy (MigrationMixin exposes it as a constructor arg).
     migrate: bool = False
 
+    # Fleet cache sharing (repro.core.fleet): ``run_fleet`` installs a
+    # shared-cache provider here before the simulator binds the policy.
+    # Subclasses that construct an AlphaCache / PlacementCache in ``bind``
+    # do so through the helpers below, so warm cache state — pure
+    # functions of the cluster spec and the request key — is amortized
+    # across a fleet's variants while all per-run state (queues, virtual
+    # machine, allocations, degraded-bounds memos) stays per policy
+    # instance.  ``None`` (the default) builds private caches: a lone
+    # ``simulate()`` call is byte-for-byte the pre-fleet engine.
+    fleet_shared = None
+
     def bind(self, cluster_spec: ClusterSpec) -> None:
         self.cluster_spec = cluster_spec
+
+    def _make_alpha_cache(self, cluster_spec: ClusterSpec) -> "AlphaCache":
+        fs = self.fleet_shared
+        if fs is None:
+            return AlphaCache(cluster_spec)
+        return fs.alpha_cache(cluster_spec)
+
+    def _make_placement_cache(
+        self, cluster_spec: ClusterSpec, refine: bool = False
+    ):
+        fs = self.fleet_shared
+        if fs is None:
+            from .heavy_edge import PlacementCache  # avoid import cycle
+
+            return PlacementCache(cluster_spec, refine=refine)
+        return fs.placement_cache(cluster_spec, refine=refine)
 
     def on_arrival(self, t: float, job: JobSpec) -> None:
         raise NotImplementedError

@@ -130,3 +130,64 @@ def test_latest_vs_first_requires_policy_in_newest_artifact():
     # not read as the current ratio)
     assert bench_trend.latest_vs_first({"P": [50.0, 55.0, None]})["P"] is None
     assert bench_trend.latest_vs_first({"P": [50.0, None, 60.0]})["P"] == 1.2
+
+
+def test_fleet_and_malformed_artifacts_skipped(tmp_path, capsys):
+    """A fleet-schema artifact (different bench, no per-policy series)
+    or a budget artifact with a malformed events_per_sec section must be
+    skipped with a note, not crash or pollute the trend."""
+    now = time.time()
+    _write(tmp_path / "ok" / "BENCH_sched.json", {"A-SRPT": 100.0},
+           mtime=now - 10)
+    fleet = tmp_path / "fleet" / "BENCH_sched_fleet.json"
+    fleet.parent.mkdir()
+    fleet.write_text(json.dumps({
+        "schema": 1, "bench": "sched_scale_fleet",
+        "events_per_sec": {},  # even a matching key must not trend
+        "digests": ["f" * 64], "stats": {},
+    }))
+    os.utime(fleet, (now - 5, now - 5))
+    bad = tmp_path / "bad" / "BENCH_sched.json"
+    bad.parent.mkdir()
+    bad.write_text(json.dumps({
+        "schema": 1, "bench": "sched_scale_budget",
+        "events_per_sec": {"A-SRPT": "fast"},  # non-numeric
+    }))
+    os.utime(bad, (now, now))
+
+    labels, series = bench_trend.load_series(
+        bench_trend.discover([str(tmp_path)])
+    )
+    assert labels == ["ok/BENCH_sched.json"]
+    assert series == {"A-SRPT": [100.0]}
+    out = capsys.readouterr().out
+    assert "sched_scale_fleet" in out and "malformed events_per_sec" in out
+
+
+def test_min_ratio_gate(tmp_path, capsys):
+    now = time.time()
+    _write(tmp_path / "r1" / "BENCH_sched.json",
+           {"A-SRPT": 100.0, "SPJF": 50.0, "Once": 10.0}, mtime=now - 10)
+    _write(tmp_path / "r2" / "BENCH_sched.json",
+           {"A-SRPT": 65.0, "SPJF": 55.0}, mtime=now)
+
+    # A-SRPT at 0.65 < 0.7 fails the gate; "Once" (no ratio) never does
+    assert bench_trend.main([str(tmp_path), "--min-ratio", "0.7"]) == 1
+    out = capsys.readouterr().out
+    assert "::error::trend gate: A-SRPT" in out
+    assert "Once" in out and "gate skipped" in out
+
+    assert bench_trend.main([str(tmp_path), "--min-ratio", "0.6"]) == 0
+    assert "all latest/first ratios >= 0.6" in capsys.readouterr().out
+
+
+def test_summary_appends_table(tmp_path):
+    _write(tmp_path / "BENCH_sched_a.json", {"A-SRPT": 10.0})
+    summary = tmp_path / "step_summary.md"
+    summary.write_text("existing content\n")
+    rc = bench_trend.main([str(tmp_path), "--summary", str(summary)])
+    assert rc == 0
+    text = summary.read_text()
+    assert text.startswith("existing content\n")  # appended, not replaced
+    assert "### sched_scale events/sec trend" in text
+    assert "| A-SRPT |" in text

@@ -1,0 +1,248 @@
+"""Scenario fleets (ISSUE 7): shared-cache driver bit-identity + gates.
+
+The fleet driver's whole value rests on one claim: sharing placement /
+alpha caches across variants and batch-prewarming the cold refine
+working set moves *work*, never *results*.  These tests hold that claim
+against the strongest available references — the sequential
+``simulate()`` path on every golden scenario, and a cold cache on the
+exact warm request list — plus the determinism and exit-code contracts
+the CI fleet-robustness job depends on.
+"""
+import json
+
+import pytest
+
+pytestmark = pytest.mark.sched
+
+from repro.core import (  # noqa: E402
+    ASRPTPolicy,
+    ArrivalJitterPerturbation,
+    ElasticPerturbation,
+    Scenario,
+    StragglerPerturbation,
+    make_predictor,
+    run_fleet,
+    scenario_from_legacy,
+    simulate,
+)
+from repro.core.fleet import FleetShared, _ScoutShared  # noqa: E402
+from repro.core.heavy_edge import PlacementCache  # noqa: E402
+
+# pytest inserts the tests dir on sys.path (no tests/__init__.py), so
+# the golden matrix imports as a top-level module
+from test_golden import (  # noqa: E402
+    SCENARIOS,
+    _het_cluster,
+    _hom_cluster,
+    load_jobs,
+)
+
+sched_scale = pytest.importorskip(
+    "benchmarks.sched_scale",
+    reason="benchmarks namespace package needs the repo root on sys.path",
+)
+
+
+@pytest.fixture(scope="module")
+def golden_jobs():
+    return load_jobs()
+
+
+def _perturbations(n_stragglers=2, jitter=30.0, elastic=1):
+    return (
+        StragglerPerturbation(n_stragglers=n_stragglers),
+        ElasticPerturbation(n_servers=elastic),
+        ArrivalJitterPerturbation(sigma=jitter),
+    )
+
+
+def _mk_asrpt(**kw):
+    return lambda: ASRPTPolicy(make_predictor("mean"), tau=2.0, **kw)
+
+
+def test_same_seed_bit_identical(golden_jobs):
+    """The whole FleetResult — per-variant sha256s and the fleet digest
+    over them — is a pure function of (base, factory, perts, n, seed)."""
+    base = Scenario(
+        jobs=tuple(golden_jobs[:80]), cluster=_hom_cluster(), name="det"
+    )
+    mk = _mk_asrpt(refine_mapping=True, migrate=True)
+    a = run_fleet(base, mk, _perturbations(), 4, seed=7)
+    b = run_fleet(base, mk, _perturbations(), 4, seed=7)
+    assert a.digest() == b.digest()
+    assert [v.digest for v in a.variants] == [v.digest for v in b.variants]
+    assert a.stats == b.stats
+    # a different seed draws different perturbations
+    c = run_fleet(base, mk, _perturbations(), 4, seed=8)
+    assert c.digest() != a.digest()
+    # the serialized form carries the same digests
+    d = a.to_dict()
+    assert d["digests"] == [v.digest for v in a.variants]
+    assert d["fleet_digest"] == a.digest()
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_fleet_matches_sequential_on_goldens(name, golden_jobs):
+    """Shared-cache + prewarmed fleet schedules == N independent
+    ``simulate()`` calls, per variant, on every golden scenario matrix
+    entry (clean/het/faulted/degraded, cached/uncached, all policies)."""
+    cluster_fn, policy_fn, kwargs = SCENARIOS[name]
+    base = scenario_from_legacy(
+        golden_jobs, cluster_fn(),
+        faults=kwargs.get("faults"),
+        degradations=kwargs.get("degradations"),
+        name=f"golden:{name}",
+    )
+    perts = _perturbations()
+    fleet = run_fleet(base, policy_fn, perts, 2, seed=3)
+    seq = run_fleet(
+        base, policy_fn, perts, 2, seed=3, share=False, prewarm=False
+    )
+    assert [v.digest for v in fleet.variants] == [
+        v.digest for v in seq.variants
+    ], name
+    assert fleet.digest() == seq.digest()
+    # and the sequential arm really is the plain simulate() path
+    from repro.core.fleet import fleet_variants
+
+    for (_i, variant), v in zip(
+        fleet_variants(base.materialize(), perts, 2, seed=3), seq.variants
+    ):
+        res = simulate(variant, policy_fn(), validate=False)
+        assert res.schedule_digest() == v.digest, name
+
+
+def test_warm_bit_identity(golden_jobs):
+    """``PlacementCache.warm`` entries (refine batched across shapes)
+    answer ``map_job`` exactly like a cold cache computing each miss
+    on demand — placements and alpha floats byte-for-byte."""
+    cluster = _het_cluster()
+    base = Scenario(
+        jobs=tuple(golden_jobs[:120]), cluster=cluster, name="warmtest"
+    )
+    shared = FleetShared(cluster)
+    log = []
+    probe = ASRPTPolicy(
+        make_predictor("mean"), tau=2.0, refine_mapping=False, migrate=True
+    )
+    probe.fleet_shared = _ScoutShared(shared, log)
+    simulate(base, probe, validate=False)
+    assert log, "scout run recorded no placement misses"
+
+    warm_pc = shared.placement_cache(cluster, refine=True)
+    warmed, groups = warm_pc.warm(log)
+    assert warmed > 0 and groups > 0
+    def norm(result):
+        placement, a = result
+        return (
+            {s: [int(x) for x in counts] for s, counts in placement.items()},
+            a,  # exact float — no tolerance
+        )
+
+    cold_pc = PlacementCache(cluster, refine=True)
+    for job, caps in log:
+        assert norm(warm_pc.map_job(job, caps)) == norm(
+            cold_pc.map_job(job, caps)
+        )
+    # idempotent: a second warm finds everything already cached
+    assert warm_pc.warm(log) == (0, 0)
+
+
+def test_check_fleet_regression_verdicts():
+    check = sched_scale.check_fleet_regression
+    base = {
+        "seed": 0, "n_variants": 3,
+        "digests": ["a" * 64, "b" * 64, "c" * 64],
+        "stats": {"total_flow_time": {"p95": 100.0}},
+    }
+    same = json.loads(json.dumps(base))
+
+    errors, warnings, notes = check(same, base)
+    assert not errors and not warnings
+    assert any("digests match" in n for n in notes)
+
+    # p95 regression past the threshold is a warning, not an error
+    slow = json.loads(json.dumps(base))
+    slow["stats"]["total_flow_time"]["p95"] = 140.0
+    errors, warnings, _ = check(slow, base, threshold=0.30)
+    assert not errors and len(warnings) == 1
+    assert "p95" in warnings[0]
+
+    # any sha mismatch at the same regime is a hard error
+    drift = json.loads(json.dumps(base))
+    drift["digests"][1] = "d" * 64
+    errors, warnings, _ = check(drift, base)
+    assert len(errors) == 1 and "#v1" in errors[0]
+
+    # different regime: sha check skipped with a note, never an error
+    other = json.loads(json.dumps(base))
+    other["seed"] = 9
+    errors, _, notes = check(other, base)
+    assert not errors
+    assert any("regime" in n for n in notes)
+
+    # malformed baseline: notes only
+    errors, warnings, notes = check(same, {})
+    assert not errors and not warnings and len(notes) == 2
+
+
+def test_fleet_cli_exit_codes(tmp_path):
+    main = sched_scale.main
+    out = tmp_path / "BENCH_fleet.json"
+    rc = main(["--fleet", "3", "--json", str(out)])
+    assert rc == 0
+    current = json.loads(out.read_text())
+    assert current["bench"] == "sched_scale_fleet"
+    assert len(current["digests"]) == 3 and current["n_variants"] == 3
+
+    # self-check passes, strict or not
+    assert main(["--fleet", "3", "--check", str(out)]) == 0
+    assert main(["--fleet", "3", "--check", str(out), "--strict"]) == 0
+
+    # sha drift: exit 1 even without --strict
+    drift = json.loads(out.read_text())
+    drift["digests"][0] = "0" * 64
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(drift))
+    assert main(["--fleet", "3", "--check", str(bad)]) == 1
+
+    # p95 regression: warning by default, failure under --strict
+    slow = json.loads(out.read_text())
+    slow["stats"]["total_flow_time"]["p95"] /= 2.0
+    del slow["digests"]  # isolate the stats check
+    slow_p = tmp_path / "slow.json"
+    slow_p.write_text(json.dumps(slow))
+    assert main(["--fleet", "3", "--check", str(slow_p)]) == 0
+    assert main(["--fleet", "3", "--check", str(slow_p), "--strict"]) == 1
+
+    # unreadable baseline: fail-soft by default, strict fails
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{nope")
+    assert main(["--fleet", "3", "--check", str(corrupt)]) == 0
+    assert main(["--fleet", "3", "--check", str(corrupt), "--strict"]) == 1
+
+    # --strict without --check is an argparse error
+    with pytest.raises(SystemExit):
+        main(["--fleet", "3", "--strict"])
+
+
+def test_committed_fleet_baseline_matches_ci_regime():
+    """The committed baseline must be regenerable by the CI command:
+    same seed, variant count, and schema the fleet-robustness job uses
+    (`--fleet 64`); per-variant digests present for the bit-identity
+    gate."""
+    import pathlib
+
+    p = (
+        pathlib.Path(__file__).resolve().parents[1]
+        / "benchmarks" / "BENCH_fleet_baseline.json"
+    )
+    data = json.loads(p.read_text())
+    assert data["bench"] == "sched_scale_fleet"
+    assert data["seed"] == 0
+    assert data["n_variants"] == sched_scale.FLEET_VARIANTS_DEFAULT
+    assert len(data["digests"]) == data["n_variants"]
+    assert all(
+        isinstance(d, str) and len(d) == 64 for d in data["digests"]
+    )
+    assert data["stats"]["total_flow_time"]["p95"] > 0
