@@ -7,7 +7,8 @@ export PYTHONPATH
 
 .PHONY: test test-sched lint smoke bench-sched bench-hetero \
 	bench-straggler bench-elastic bench-stream bench-guard \
-	bench-budget bench-trend bench-fleet bench-fleet-ab ci
+	bench-budget bench-trend bench-fleet bench-fleet-ab \
+	bench-predict ci
 
 test:
 	python -m pytest -x -q
@@ -98,11 +99,22 @@ bench-fleet:
 		--json BENCH_fleet.json \
 		--check benchmarks/BENCH_fleet_baseline.json
 
+# Prediction-error robustness sweep (what the CI prediction-robustness
+# job runs, minus --strict): one closed-loop run per error model, gated
+# on the online forest's p95 flow staying <= 1.3x oracle (absolute —
+# always exit 1 past it) plus fail-soft per-regime drift vs the
+# committed baseline.  Refresh with: make bench-predict && cp
+# BENCH_predict.json benchmarks/BENCH_predict_baseline.json.
+bench-predict:
+	python -m benchmarks.sched_scale --predict \
+		--json BENCH_predict.json \
+		--check benchmarks/BENCH_predict_baseline.json
+
 # Interleaved fleet-vs-sequential A/B on the refined-mapping engine:
 # asserts per-variant bit-identity and prints fleet_speedup (the
 # shared-cache + batched-prewarm amortization, benchmarks/README.md).
 bench-fleet-ab:
 	python -m benchmarks.sched_scale --fleet-ab
 
-# What CI runs: lint + tier-1 + budget benchmark + fleet gate.
-ci: lint test bench-budget bench-fleet
+# What CI runs: lint + tier-1 + budget benchmark + fleet + predict gates.
+ci: lint test bench-budget bench-fleet bench-predict

@@ -27,6 +27,7 @@ from .scenario import (  # noqa: F401
     JobStream,
     JsonlJobs,
     Perturbation,
+    PredictionNoisePerturbation,
     SCENARIO_SCHEMA_VERSION,
     Scenario,
     ServerJoin,
@@ -62,6 +63,14 @@ from .predictor import (  # noqa: F401
     RandomForestPredictor,
     RandomForestRegressor,
     make_predictor,
+)
+from .prediction_loop import (  # noqa: F401
+    NoisyModel,
+    OnlineForestModel,
+    OracleModel,
+    PredictionModel,
+    ZeroColdStartModel,
+    make_prediction_model,
 )
 from .trace import (  # noqa: F401
     StreamTraceConfig,

@@ -96,6 +96,13 @@ class ASRPTPolicy(MigrationMixin, Policy):
         # queue (peak ~13k) starves stretched jobs of healthy capacity.
         migration_queue_guard: bool = False,
         degraded_admission: bool = True,  # speed-aware alpha bounds (AlphaCache)
+        # Heterogeneity-aware server *selection* (ROADMAP carry-over):
+        # score candidate capacity vectors by mapped alpha across server
+        # classes instead of only tie-breaking by NIC bandwidth within
+        # equal free counts.  Opt-in: it changes schedules, and the
+        # golden fixtures pin the default.  Only bites on heterogeneous
+        # clusters (homogeneous specs have a single class).
+        hetero_selection: bool = False,
     ):
         self.predictor = predictor
         self.comm_heavy = comm_heavy
@@ -106,6 +113,11 @@ class ASRPTPolicy(MigrationMixin, Policy):
         self.migration_penalty = migration_penalty
         self.migration_queue_guard = migration_queue_guard
         self.degraded_admission = degraded_admission
+        self.hetero_selection = hetero_selection
+        # prediction-loop opt-in (simulator.Policy / prediction_loop):
+        # derived from the predictor so plain predictors keep the legacy
+        # engine byte for byte
+        self.track_overruns = bool(getattr(predictor, "track_overruns", False))
         # no history: the vm's completion log is unread here, and dropping
         # it keeps policy memory bounded by the live queue on job streams
         self.vm = VirtualSRPT(keep_history=False)
@@ -135,6 +147,12 @@ class ASRPTPolicy(MigrationMixin, Policy):
             if self.placement_cache
             else None
         )
+        self._hetero_sel = self.hetero_selection and cluster_spec.is_heterogeneous
+        if self._hetero_sel:
+            by_cls: Dict[int, List[int]] = {}
+            for m in range(cluster_spec.num_servers):
+                by_cls.setdefault(cluster_spec.class_of(m), []).append(m)
+            self._class_servers = [by_cls[c] for c in sorted(by_cls)]
 
     # -- event hooks --------------------------------------------------------
 
@@ -175,6 +193,54 @@ class ASRPTPolicy(MigrationMixin, Policy):
             job, caps, self.cluster_spec, refine=self.refine_mapping,
             reference=True, speeds=speeds,
         )
+
+    def _scored_consolidating(
+        self, job: JobSpec, cluster: ClusterState, bw_ranks, speeds_for,
+        caps: tuple, sp,
+    ) -> tuple:
+        """Score candidate capacity vectors by mapped alpha across server
+        classes (hetero_selection).
+
+        The default most-available-first pick (``caps``, already
+        selected) competes with one class-restricted consolidation per
+        server class whose free capacity alone holds the job: on a
+        heterogeneous cluster the globally most-available servers are
+        often the *slow-NIC* class (biggest servers drain last), while a
+        comm-heavy job consolidated on fewer fast-NIC servers maps to a
+        strictly better alpha.  Every candidate goes through the same
+        memoized Heavy-Edge mapping; the lowest alpha wins, ties keep
+        the default (deterministic: candidates are visited in fixed
+        class order).  Returns ``(alpha, placement, caps, speeds)``.
+        """
+        placement, a = self._map(job, caps, sp)
+        best = (a, placement, caps, sp)
+        free = cluster.free
+        g = job.g
+        spec = self.cluster_spec
+        seen = {caps}
+        for servers in self._class_servers:
+            cfree: Dict[int, int] = {}
+            total = 0
+            for m in servers:
+                f = free.get(m, 0)
+                if f > 0:
+                    cfree[m] = f
+                    total += f
+            if total < g:
+                continue  # this class alone cannot hold the job
+            c_caps = tuple(
+                select_servers(
+                    cfree, g, consolidate=True, spec=spec, ranks=bw_ranks
+                )
+            )
+            if c_caps in seen:
+                continue
+            seen.add(c_caps)
+            c_sp = speeds_for(c_caps) if speeds_for else None
+            c_pl, c_a = self._map(job, c_caps, c_sp)
+            if c_a < best[0]:
+                best = (c_a, c_pl, c_caps, c_sp)
+        return best
 
     # -- main scheduling pass -------------------------------------------------
 
@@ -239,7 +305,9 @@ class ASRPTPolicy(MigrationMixin, Policy):
                     if not expired and d.eval_epoch == cluster.epoch:
                         # The evaluation is a pure function of the selected
                         # capacity vector; skip it when that provably
-                        # didn't change.
+                        # didn't change.  (Sound under hetero_selection
+                        # too: the epoch covers every free-count and
+                        # speed change the scored choice reads.)
                         continue
                     caps = consolidating_caps(g)
                     sp = speeds_for(caps) if speeds_for else None
@@ -251,14 +319,26 @@ class ASRPTPolicy(MigrationMixin, Policy):
                     _, a_min = self.alpha_cache.bounds(d.job, bcluster)
                     if not expired:
                         d.eval_epoch = cluster.epoch
-                        if (caps, sp, a_min) == d.eval_caps:
-                            continue  # same caps+speeds+bound -> same decision
-                        d.eval_caps = (caps, sp, a_min)
+                        if not self._hetero_sel:
+                            if (caps, sp, a_min) == d.eval_caps:
+                                continue  # same caps+speeds+bound -> same decision
+                            d.eval_caps = (caps, sp, a_min)
+                        # hetero_selection reads the *whole* free state:
+                        # an equal default pick no longer implies an equal
+                        # decision, so only the epoch skip applies
                     key = (d.job.config_key, g)
                     hit = memo.get(key)
                     if hit is None:
-                        hit = memo[key] = self._map(d.job, caps, sp)
-                    placement, a = hit
+                        if self._hetero_sel:
+                            hit = self._scored_consolidating(
+                                d.job, cluster, bw_ranks, speeds_for,
+                                caps, sp,
+                            )
+                        else:
+                            placement, a = self._map(d.job, caps, sp)
+                            hit = (a, placement, caps, sp)
+                        memo[key] = hit
+                    a, placement, caps, sp = hit
                 else:
                     caps = tuple(
                         select_servers(
@@ -268,11 +348,18 @@ class ASRPTPolicy(MigrationMixin, Policy):
                         )
                     )
                     sp = speeds_for(caps) if speeds_for else None
-                    placement, a = self._map(d.job, caps, sp)
+                    if self._hetero_sel:
+                        a, placement, caps, sp = self._scored_consolidating(
+                            d.job, cluster, bw_ranks, speeds_for, caps, sp
+                        )
+                    else:
+                        placement, a = self._map(d.job, caps, sp)
                     _, a_min = self.alpha_cache.bounds(d.job, bcluster)
                 if a < d.kappa or a / a_min <= self.comm_heavy or expired:
                     del self.delayed[jid]
-                    starts.append(Start(d.job, placement, a))
+                    starts.append(
+                        Start(d.job, placement, a, n_pred=self._n_pred(d.job))
+                    )
                     cluster.allocate(jid, placement, counts=dict(caps))
                     # free capacity changed: drop every per-state structure
                     ladder.reset()
@@ -300,10 +387,17 @@ class ASRPTPolicy(MigrationMixin, Policy):
                         )
                     )
                 sp = speeds_for(caps) if speeds_for else None
-                placement, a = self._map(job, caps, sp)
+                if self._hetero_sel:
+                    a, placement, caps, sp = self._scored_consolidating(
+                        job, cluster, bw_ranks, speeds_for, caps, sp
+                    )
+                else:
+                    placement, a = self._map(job, caps, sp)
                 delay_budget = self.tau * self._pred_work[job.job_id]
                 if a / a_min <= self.comm_heavy or delay_budget <= 0.0:
-                    starts.append(Start(job, placement, a))
+                    starts.append(
+                        Start(job, placement, a, n_pred=self._n_pred(job))
+                    )
                     cluster.allocate(job.job_id, placement, counts=dict(caps))
                     ladder.reset()
                 else:
@@ -333,7 +427,9 @@ class ASRPTPolicy(MigrationMixin, Policy):
                     )
                 sp = speeds_for(caps) if speeds_for else None
                 placement, a = self._map(job, caps, sp)
-                starts.append(Start(job, placement, a))
+                starts.append(
+                    Start(job, placement, a, n_pred=self._n_pred(job))
+                )
                 cluster.allocate(job.job_id, placement, counts=dict(caps))
                 ladder.reset()
 

@@ -59,6 +59,10 @@ class QueuePolicy(MigrationMixin, Policy):
         if key not in ("duration", "workload", "subtime"):
             raise ValueError(key)
         self.predictor = predictor
+        # prediction-loop opt-in (simulator.Policy / prediction_loop):
+        # derived from the predictor so plain predictors keep the legacy
+        # engine byte for byte
+        self.track_overruns = bool(getattr(predictor, "track_overruns", False))
         self.key_kind = key
         self.work_conserving = work_conserving
         self.migrate = migrate
@@ -110,7 +114,7 @@ class QueuePolicy(MigrationMixin, Policy):
         )
         speeds = cluster.speeds_for(caps) if cluster.has_degraded else None
         placement, a = self._pcache.map_job(job, caps, speeds=speeds)
-        starts.append(Start(job, placement, a))
+        starts.append(Start(job, placement, a, n_pred=self._n_pred(job)))
         cluster.allocate(job.job_id, placement, counts=dict(caps))
 
     def plan_pass(self, t: float, cluster: ClusterState) -> List[Start]:

@@ -55,10 +55,13 @@ class FleetShared:
     Hands out one :class:`~repro.core.heavy_edge.PlacementCache` per
     refine flag (shared instance: DenseGraph pool, seed store, and LRU
     amortize across the fleet) and per-policy ``AlphaCache`` instances
-    whose *clean* bound dicts alias one shared pool.  The degraded-bound
-    memo is deliberately per instance: its signature is ``(epoch,
-    speed_version)`` of the live cluster, which collides across variants.
-    A spec other than the fleet's gets private caches (no sharing).
+    whose *clean* bound dicts alias one shared pool.  Degraded bounds
+    share too (the PR-7 limitation, closed in ISSUE 8): the memo is
+    content-addressed by the straggler multiset + job config rather
+    than the live cluster's ``(epoch, speed_version)`` counters — those
+    only gate each instance's private scan — so variants hitting the
+    same degradation state reuse each other's folds.  A spec other than
+    the fleet's gets private caches (no sharing).
     """
 
     def __init__(self, cluster_spec: ClusterSpec):
@@ -66,6 +69,7 @@ class FleetShared:
         self._pcaches: Dict[bool, object] = {}
         self._alpha_clean: Dict[int, Tuple[float, float]] = {}
         self._alpha_class: Dict[Tuple[int, int], float] = {}
+        self._alpha_deg: Dict[tuple, Tuple[float, float]] = {}
 
     def placement_cache(self, cluster_spec: ClusterSpec, refine=False):
         from .heavy_edge import PlacementCache
@@ -85,6 +89,7 @@ class FleetShared:
         if cluster_spec == self.spec:
             ac._cache = self._alpha_clean
             ac._class_amax = self._alpha_class
+            ac._deg_cache = self._alpha_deg
         return ac
 
 
@@ -254,6 +259,13 @@ def run_fleet(
         pol = policy_factory()
         if shared is not None:
             pol.fleet_shared = shared
+        # Policy-level perturbations (e.g. PredictionNoisePerturbation)
+        # draw from their own substream — [seed, i, 1], disjoint from the
+        # event sampler's [seed, i] — so adding one never shifts the
+        # event draws (or digests) of event/job perturbations.
+        prng = np.random.default_rng([seed, i, 1])
+        for p in perturbations:
+            p.perturb_policy(pol, base, prng)
         t0 = time.perf_counter()
         res = simulate(variant, pol, validate=validate)
         row = VariantResult(

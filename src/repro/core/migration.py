@@ -119,12 +119,19 @@ class MigrationMixin:
             caps = ladder.caps_for(g)
             speeds = cluster.speeds_for(caps)
             placement, a_new = self._map_migration(r.job, caps, speeds)
-            stay = r.iters_rem * r.alpha
+            # Online information only: under the prediction loop the
+            # policy races *predicted* remaining iterations (what it
+            # believes), not the simulator's true bookkeeping — believing
+            # a job nearly done keeps it in place; an overrun re-estimate
+            # re-opens the race on a later pass.  Legacy runs
+            # (pred_rem None) keep racing true remaining work verbatim.
+            rem = r.pred_rem if r.pred_rem is not None else r.iters_rem
+            stay = rem * r.alpha
             if r.since > t:
                 # mid-restart from an earlier migration: finishing in
                 # place still owes the rest of that downtime
                 stay += r.since - t
-            move = penalty + r.iters_rem * a_new
+            move = penalty + rem * a_new
             if move >= stay - 1e-12:
                 continue
             if head is not None and head.g <= g and head_work < move:

@@ -289,6 +289,12 @@ class RandomForestPredictor(IterationPredictor):
     Features per job: [group_id, user_id, group_count, group_mean,
     group_median, group_last].  Retrains every ``retrain_every``
     observations (the paper retrains hourly/daily; 80 s for 700 k jobs).
+
+    ``max_history`` bounds the training window to the most recent N
+    completions: with in-run online retraining (prediction_loop's
+    ``OnlineForestModel``) each refit would otherwise grow linearly with
+    the stream, and real cluster recurrence drifts (arXiv 2109.01313),
+    so a sliding window keeps both cost bounded and the model fresh.
     """
 
     def __init__(
@@ -298,8 +304,10 @@ class RandomForestPredictor(IterationPredictor):
         seed: int = 0,
         max_depth: int = 16,
         n_bins: int = 1024,
+        max_history: Optional[int] = None,
     ):
         self.retrain_every = retrain_every
+        self.max_history = max_history
         self._rf = RandomForestRegressor(
             n_estimators=n_estimators,
             max_depth=max_depth,
@@ -340,6 +348,10 @@ class RandomForestPredictor(IterationPredictor):
         self._y.append(float(true_iters))
         if job.group_id >= 0:
             self._groups[job.group_id].append(float(true_iters))
+        if self.max_history is not None and len(self._y) > 2 * self.max_history:
+            # amortized O(1): trim in bulk once the buffer doubles
+            del self._X[: len(self._X) - self.max_history]
+            del self._y[: len(self._y) - self.max_history]
         self._since_retrain += 1
         if self._since_retrain >= self.retrain_every and len(self._y) >= 32:
             self._rf.fit(np.array(self._X), np.array(self._y))

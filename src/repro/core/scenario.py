@@ -690,7 +690,8 @@ def _scenario_horizon(base: "Scenario") -> float:
 
 @dataclass(frozen=True)
 class Perturbation:
-    """Base sampler: no events, jobs unchanged.  Subclasses override."""
+    """Base sampler: no events, jobs unchanged, policy untouched.
+    Subclasses override."""
 
     def sample_events(
         self, base: "Scenario", rng
@@ -701,6 +702,16 @@ class Perturbation:
         self, jobs: Tuple[JobSpec, ...], base: "Scenario", rng
     ) -> Tuple[JobSpec, ...]:
         return jobs
+
+    def perturb_policy(self, policy, base: "Scenario", rng) -> None:
+        """Policy-level perturbation hook (ISSUE 8): mutate one variant's
+        freshly constructed, not-yet-bound policy — e.g. install a noisy
+        prediction model (:class:`PredictionNoisePerturbation`).  The
+        fleet driver calls it with a *separate* rng stream from the
+        event sampler (``default_rng([seed, i, 1])``), so adding a
+        policy perturbation never shifts the event draws — and existing
+        fleet digests — of the samplers above.  Default: no-op.
+        """
 
 
 @dataclass(frozen=True)
@@ -811,6 +822,49 @@ class ArrivalJitterPerturbation(Perturbation):
                 j, arrival=max(0.0, j.arrival + float(dt))
             )
             for j, dt in zip(jobs, offs)
+        )
+
+
+@dataclass(frozen=True)
+class PredictionNoisePerturbation(Perturbation):
+    """Prediction-error injection as a first-class fleet axis (ISSUE 8):
+    installs a seeded :class:`~repro.core.prediction_loop.NoisyModel` on
+    each variant's policy via ``Policy.set_predictor``, so the
+    Monte-Carlo fleet sweeps misprediction regimes exactly like it
+    sweeps stragglers or faults.
+
+    ``mode`` selects the error family (``"lognormal"`` multiplicative
+    noise of width ``sigma``; ``"rankflip"`` sign-flipped rank order;
+    ``"coldstart"`` a ``cold_frac`` fraction of jobs predicted 0 — the
+    paper's unseen-job rule hitting a random subset).  Each variant
+    draws one noise seed from the policy rng stream, so per-job noise is
+    independent across variants yet the whole fleet stays a pure
+    function of the fleet seed.  No cluster events and no job rewrites:
+    only the policy's beliefs are perturbed.
+    """
+
+    mode: str = "lognormal"
+    sigma: float = 0.5
+    cold_frac: float = 0.3
+
+    def __post_init__(self) -> None:
+        from .prediction_loop import NOISE_MODES  # deferred: import cycle
+
+        if self.mode not in NOISE_MODES:
+            raise ValueError(
+                f"unknown noise mode {self.mode!r} (one of {NOISE_MODES})"
+            )
+
+    def perturb_policy(self, policy, base, rng) -> None:
+        from .prediction_loop import NoisyModel  # deferred: import cycle
+
+        policy.set_predictor(
+            NoisyModel(
+                self.mode,
+                sigma=self.sigma,
+                cold_frac=self.cold_frac,
+                seed=int(rng.integers(0, 2**31 - 1)),
+            )
         )
 
 

@@ -109,11 +109,21 @@ class Allocation:
     The policy has already called ``cluster.allocate`` for it (policies
     own their allocations); the simulator only computes the completion
     and releases on it.
+
+    ``n_pred`` is the predicted iteration count the decision was made
+    with (prediction_loop): when set — policies attach it only when
+    their predictor tracks overruns — the simulator watches for the job
+    running past ``t + n_pred * alpha`` and asks the policy to
+    re-estimate there.  ``None`` (the default, and what every
+    pre-prediction-loop policy produces) means nothing is watched; the
+    physical completion is always timed with the *true* ``job.n_iters``
+    either way.
     """
 
     job: JobSpec
     placement: Dict[int, np.ndarray]
     alpha: float
+    n_pred: Optional[float] = None
 
 
 # Historical name (PR 1-4); same type.
@@ -159,6 +169,14 @@ class _Running:
     carries ``epoch`` — re-timing bumps it, turning the superseded event
     into a stale heap entry.  Instances double as the read-only views
     handed to ``Policy.plan_migrations``.
+
+    ``pred_rem`` mirrors ``iters_rem`` for the *predicted* iteration
+    count (prediction_loop): decremented in lockstep at every
+    elapsed-iteration subtraction, re-set by mid-flight re-estimation.
+    ``pred_epoch`` tags the one live predicted-completion check event
+    the way ``epoch`` tags the completion — superseded checks stay in
+    the heap and are dropped on pop.  ``None`` (any start without
+    ``n_pred``) disables the watch for this job.
     """
 
     job: JobSpec
@@ -167,6 +185,8 @@ class _Running:
     iters_rem: float
     since: float
     epoch: int = 0
+    pred_rem: Optional[float] = None
+    pred_epoch: int = 0
 
 
 @dataclass(slots=True)
@@ -180,6 +200,23 @@ class _DrainDeadline:
 
     server: int
     gen: int
+
+
+@dataclass(slots=True)
+class _PredCheck:
+    """Internal event: a watched job reached its *predicted* completion
+    while still running (prediction_loop).  Rides the ``_CLUSTER`` lane
+    (after completions at the same timestamp — a job finishing exactly
+    on its prediction needs no re-estimate) but, like
+    :class:`_DrainDeadline`, never reaches ``Policy.on_event``: the
+    simulator consumes it, brings the job's bookkeeping to ``t``, asks
+    ``policy.on_overrun`` for a fresh predicted-remaining, and re-arms
+    the check there.  ``epoch`` is the job's ``pred_epoch`` at push
+    time; any re-timing bumps it, so superseded checks are dropped on
+    pop."""
+
+    job_id: int
+    epoch: int
 
 
 _DIGEST_MOD = 1 << 256
@@ -245,6 +282,9 @@ class SimResult:
     n_sched_passes: int = 0
     peak_queue_depth: int = 0
     n_migrations: int = 0
+    # mid-flight prediction re-estimates (prediction_loop): 0 for oracle
+    # and for every policy that doesn't track overruns
+    n_reestimates: int = 0
     wall_s: float = 0.0
     n_jobs: int = 0
     # streaming aggregates (used when records is None): Shewchuk partial
@@ -294,6 +334,27 @@ class SimResult:
     @property
     def events_per_sec(self) -> float:
         return self.n_events / self.wall_s if self.wall_s > 0 else float("nan")
+
+    def flow_percentile(self, q: float) -> float:
+        """Per-job flow-time percentile (linear interpolation, numpy's
+        default definition) over the materialized records — the tail
+        statistic the prediction-robustness gate compares across
+        prediction regimes.  Streaming runs fold records away, so this
+        needs ``records``; use a materialized run for tail metrics."""
+        if self.records is None:
+            raise RuntimeError(
+                "flow_percentile needs materialized records; run with "
+                "stream=False"
+            )
+        if not self.records:
+            return 0.0
+        flows = sorted(r.completion - r.arrival for r in self.records.values())
+        if len(flows) == 1:
+            return flows[0]
+        pos = (q / 100.0) * (len(flows) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(flows) - 1)
+        return flows[lo] + (pos - lo) * (flows[hi] - flows[lo])
 
     def schedule_digest(self) -> str:
         """Byte-identity fingerprint over every per-job record — what the
@@ -369,6 +430,15 @@ class Policy:
     # when this is truthy (MigrationMixin exposes it as a constructor arg).
     migrate: bool = False
 
+    # Prediction-loop opt-in (repro.core.prediction_loop): truthy when the
+    # policy's predictor wants predicted completions watched.  Policies
+    # derive it from ``predictor.track_overruns`` in their constructors
+    # (and through ``set_predictor``); the simulator keeps the running-job
+    # registry and fires ``on_overrun`` only when it is set, so every
+    # pre-prediction-loop policy runs the legacy event sequence byte for
+    # byte.
+    track_overruns: bool = False
+
     # Fleet cache sharing (repro.core.fleet): ``run_fleet`` installs a
     # shared-cache provider here before the simulator binds the policy.
     # Subclasses that construct an AlphaCache / PlacementCache in ``bind``
@@ -398,6 +468,41 @@ class Policy:
 
             return PlacementCache(cluster_spec, refine=refine)
         return fs.placement_cache(cluster_spec, refine=refine)
+
+    def set_predictor(self, predictor) -> None:
+        """Swap the iteration predictor and re-derive ``track_overruns``.
+
+        The policy-level perturbation hook
+        (``Perturbation.perturb_policy``; see
+        ``scenario.PredictionNoisePerturbation``) uses this to install a
+        per-variant prediction model on a freshly constructed, not yet
+        bound policy.
+        """
+        self.predictor = predictor
+        self.track_overruns = bool(getattr(predictor, "track_overruns", False))
+
+    def _n_pred(self, job: JobSpec) -> Optional[float]:
+        """Predicted iterations to stamp on an :class:`Allocation` —
+        ``None`` unless this policy tracks overruns (keeping legacy
+        starts, and therefore the golden schedules, untouched)."""
+        if not self.track_overruns:
+            return None
+        return float(self.predictor.predict(job))
+
+    def on_overrun(self, t: float, job: JobSpec, elapsed_iters: float) -> float:
+        """A watched job ran past its predicted completion: return the new
+        predicted *remaining* iterations.  The default delegates to the
+        predictor's ``reestimate(job, elapsed)`` (the prediction_loop
+        backoff contract, returning a new predicted total) and falls back
+        to plain doubling; the result is floored at one iteration so the
+        re-estimation loop always advances.
+        """
+        re = getattr(self.predictor, "reestimate", None)
+        if re is not None:
+            new_total = float(re(job, elapsed_iters))
+        else:
+            new_total = max(elapsed_iters, 1.0) * 2.0
+        return max(new_total - elapsed_iters, 1.0)
 
     def on_arrival(self, t: float, job: JobSpec) -> None:
         raise NotImplementedError
@@ -621,8 +726,11 @@ def _simulate_scenario(
     # (factor > 0 degradations) or feed the migration watch (drain
     # windows, which only matter to migration-capable policies).  Clean
     # and fault-only runs skip the registry entirely (measured ~10-20%
-    # of the cheap baselines' event cost at 5k jobs).
-    track_running = False
+    # of the cheap baselines' event cost at 5k jobs).  A prediction-loop
+    # policy (track_overruns) needs the registry too: predicted-
+    # completion checks live on _Running.pred_rem.
+    track_overruns = bool(getattr(policy, "track_overruns", False))
+    track_running = track_overruns
     offer_migrations = False
     for ev in scenario.events:
         events.append((ev.t, _CLUSTER, next(seq), ev))
@@ -645,6 +753,7 @@ def _simulate_scenario(
     peak_depth = 0
     n_passes = 0
     n_migrations = 0
+    n_reestimates = 0
     # job_id -> live bookkeeping (placement, remaining iterations, the
     # epoch of the one non-stale completion event); see track_running.
     running: Dict[int, _Running] = {}
@@ -679,6 +788,32 @@ def _simulate_scenario(
     on_completion = policy.on_completion
     on_event = policy.on_event
     release = cluster.release
+    on_overrun = getattr(policy, "on_overrun", None)
+
+    def push_pred_check(r: _Running) -> None:
+        """(Re-)arm the predicted-completion check for ``r``.
+
+        Bumps ``pred_epoch`` first so any in-flight check is superseded
+        even when no new one is pushed.  A check is observable only if
+        the predicted completion precedes the true one
+        (``pred_rem < iters_rem`` — both convert to time under the same
+        alpha); otherwise the job physically completes first and a check
+        would pop as a stale no-op, so it is elided.  Timed off
+        ``since``, so a job inside a migration's restart window is
+        checked only after the downtime, like its completion.
+        """
+        r.pred_epoch += 1
+        if r.pred_rem is not None and r.pred_rem < r.iters_rem:
+            heappush(
+                events,
+                (
+                    r.since + r.pred_rem * r.alpha,
+                    _CLUSTER,
+                    next(seq),
+                    _PredCheck(r.job.job_id, r.pred_epoch),
+                ),
+            )
+
     next_arrival = next(arrivals, None)
     while events or next_arrival is not None:
         # feed the heap every arrival at or before the earliest queued
@@ -720,6 +855,39 @@ def _simulate_scenario(
                 live = True
             elif kind == _CLUSTER:
                 ev_kind = type(payload)
+                if ev_kind is _PredCheck:
+                    # A watched job reached its predicted completion while
+                    # still running: bring the bookkeeping to t, ask the
+                    # policy to re-estimate the remaining work, and re-arm
+                    # the check at the new prediction.  The backoff
+                    # contract (prediction_loop) makes consecutive checks
+                    # geometrically spaced, so a job with n true
+                    # iterations fires O(log n) of these no matter how
+                    # wrong the initial prediction was.
+                    r = running.get(payload.job_id)
+                    if r is not None and payload.epoch == r.pred_epoch:
+                        if t > r.since:
+                            el = (t - r.since) / r.alpha
+                            r.iters_rem -= el
+                            if r.iters_rem < 0.0:
+                                r.iters_rem = 0.0
+                            r.pred_rem -= el
+                            r.since = t
+                        elapsed = r.job.n_iters - r.iters_rem
+                        if on_overrun is None:
+                            # protocol policy stamped n_pred but has no
+                            # hook: plain doubling of the elapsed work
+                            new_rem = max(elapsed, 1.0)
+                        else:
+                            new_rem = float(on_overrun(t, r.job, elapsed))
+                        if new_rem <= 0.0:
+                            # never trust a hook into a same-time loop
+                            new_rem = 1.0
+                        r.pred_rem = new_rem
+                        n_reestimates += 1
+                        push_pred_check(r)
+                        live = True
+                    continue  # internal event: no on_event call
                 if ev_kind is _DrainDeadline:
                     # internal: the leave window closed — the server is
                     # down for good (jobs still on it finish in place and
@@ -843,9 +1011,14 @@ def _simulate_scenario(
                     # entry died with it — shrinking the completion.
                     continue
                 if t > r.since:
-                    r.iters_rem -= (t - r.since) / r.alpha
+                    el = (t - r.since) / r.alpha
+                    r.iters_rem -= el
                     if r.iters_rem < 0.0:
                         r.iters_rem = 0.0
+                    if r.pred_rem is not None:
+                        r.pred_rem -= el
+                        if r.pred_rem < 0.0:
+                            r.pred_rem = 0.0
                     r.since = t
                 a_new = timing.alpha(
                     r.job, r.placement, cluster_spec,
@@ -865,6 +1038,10 @@ def _simulate_scenario(
                         events,
                         (completion, _COMPLETION, next(seq), (r.job, r.epoch)),
                     )
+                    if r.pred_rem is not None:
+                        # the in-flight check was timed under the old
+                        # alpha: supersede and re-arm it
+                        push_pred_check(r)
                 # (dead-straddlers never reach here — the `continue`
                 # above — so no downed-server check is needed)
                 if offer_migrations and (
@@ -895,9 +1072,16 @@ def _simulate_scenario(
                     if t > r.since:
                         # bring remaining-iteration bookkeeping to t so the
                         # stay-vs-move race compares current quantities
-                        r.iters_rem -= (t - r.since) / r.alpha
+                        # (no check re-arm needed: alpha is unchanged, so
+                        # the in-flight check's timestamp stays valid)
+                        el = (t - r.since) / r.alpha
+                        r.iters_rem -= el
                         if r.iters_rem < 0.0:
                             r.iters_rem = 0.0
+                        if r.pred_rem is not None:
+                            r.pred_rem -= el
+                            if r.pred_rem < 0.0:
+                                r.pred_rem = 0.0
                         r.since = t
                     candidates.append(r)
                 for mig in policy.plan_migrations(t, cluster, candidates):
@@ -923,6 +1107,10 @@ def _simulate_scenario(
                         events,
                         (completion, _COMPLETION, next(seq), (job, r.epoch)),
                     )
+                    if r.pred_rem is not None:
+                        # new alpha + restart downtime: supersede and
+                        # re-arm the predicted-completion check
+                        push_pred_check(r)
                     if risky.isdisjoint(mig.placement):
                         migration_watch.discard(job.job_id)
 
@@ -941,13 +1129,23 @@ def _simulate_scenario(
                 servers=tuple(sorted(start.placement)),
             )
             if track_running:
-                running[job.job_id] = _Running(
+                n_pred = start.n_pred
+                running[job.job_id] = r = _Running(
                     job=job,
                     placement=start.placement,
                     alpha=start.alpha,
                     iters_rem=float(job.n_iters),
                     since=t,
+                    pred_rem=(None if n_pred is None else float(n_pred)),
                 )
+                if r.pred_rem is not None:
+                    # arm the predicted-completion watch; a 0-predicted
+                    # (unseen) job fires it at t itself — the outer loop
+                    # re-pops the same timestamp, the backoff re-estimate
+                    # raises pred_rem to >= one iteration, and the job
+                    # proceeds without starving anyone (physical
+                    # completion uses the true n_iters regardless)
+                    push_pred_check(r)
                 # a job *started* onto degraded capacity (a straggler can
                 # still hold the most free GPUs) is as migratable as one
                 # caught there by the event; placements never touch downed
@@ -976,6 +1174,7 @@ def _simulate_scenario(
     result.n_sched_passes = n_passes
     result.peak_queue_depth = peak_depth
     result.n_migrations = n_migrations
+    result.n_reestimates = n_reestimates
     result.wall_s = _time.perf_counter() - wall0
     return result
 
@@ -1007,21 +1206,31 @@ class AlphaCache:
     A heavily degraded cluster therefore *raises* ``a_max/a_min`` and
     can flip a borderline job into the comm-heavy class — admission
     then consolidates/delays it instead of spreading it across
-    stragglers on clean-cluster assumptions.  Degraded answers are
-    memoized per (cluster epoch, speed version) — any capacity or speed
-    change invalidates — and per config within that; the active-server
-    scan is O(num_servers) per invalidation, the per-config fold
-    O(#degraded).  Clean clusters never touch any of this path.
+    stragglers on clean-cluster assumptions.  The per-instance
+    ``(cluster epoch, speed version)`` signature only gates the
+    O(num_servers) active-server *scan*; the degraded answers themselves
+    are memoized content-addressed — keyed by the sorted multiset of
+    allocatable ``(class, factor)`` stragglers, the best factor, and the
+    job config — because the fold below is a pure function of exactly
+    that key.  Content addressing is what lets
+    :class:`~repro.core.fleet.FleetShared` alias one degraded memo
+    across every variant of a fleet (the PR-7 limitation this closes):
+    two variants hitting the same straggler state — common under
+    shared samplers — reuse each other's folds, and entries survive
+    signature churn *within* a run (degrade -> recover -> re-degrade
+    re-hits the memo instead of recomputing).  Clean clusters never
+    touch any of this path.
     """
 
     def __init__(self, cluster_spec: ClusterSpec):
         self.spec = cluster_spec
         self._cache: Dict[int, Tuple[float, float]] = {}
-        # degradation-aware state: per-(config, class) spread bounds and
-        # the per-signature memo of degraded answers
+        # degradation-aware state: per-(config, class) spread bounds,
+        # the per-signature scan memo, and the content-addressed degraded
+        # answers (shareable across fleet variants; never cleared)
         self._class_amax: Dict[Tuple[int, int], float] = {}
         self._deg_sig: Optional[Tuple[int, int]] = None
-        self._deg_cache: Dict[int, Tuple[float, float]] = {}
+        self._deg_cache: Dict[tuple, Tuple[float, float]] = {}
         self._deg_active: Tuple[Tuple[int, float], ...] = ()
         self._deg_best: float = 1.0
 
@@ -1060,7 +1269,6 @@ class AlphaCache:
         sig = (cluster.epoch, cluster.speed_version)
         if sig != self._deg_sig:
             self._deg_sig = sig
-            self._deg_cache = {}
             sp = cluster.speed_factors
             down = cluster.downed_servers
             drain = cluster.draining_servers
@@ -1080,13 +1288,16 @@ class AlphaCache:
                         best = f
             if any_clean and best < 1.0:
                 best = 1.0
-            self._deg_active = tuple(active)
+            # sorted: the fold is order-independent (a max over per-class
+            # stretches), so two clusters with the same straggler multiset
+            # share memo entries regardless of which server ids degraded
+            self._deg_active = tuple(sorted(active))
             self._deg_best = best
         if not self._deg_active and self._deg_best >= 1.0:
             # every straggler is down or draining: new placements can only
             # land on clean capacity, so the clean bounds apply verbatim
             return self.bounds(job)
-        key = job.config_key
+        key = (self._deg_active, self._deg_best, job.config_key)
         hit = self._deg_cache.get(key)
         if hit is None:
             a_max, a_min = self.bounds(job)  # clean baseline (cached)

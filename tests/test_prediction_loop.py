@@ -1,0 +1,539 @@
+"""Closed prediction loop (ISSUE 8): models, backoff, golden identity.
+
+The prediction loop's foundational claim mirrors the fleet driver's:
+new machinery must move *decisions*, never *results*, unless explicitly
+armed.  These tests hold that claim three ways — a pass-through
+``PredictionModel`` wrapper replays every golden schedule byte for
+byte, an armed tracker fed *perfect* predictions still matches the
+legacy engine (checks are elided when the prediction cannot fire
+early), and the backoff re-estimator terminates in O(log n) checks for
+arbitrarily wrong predictions — plus the noise models' determinism,
+the fleet perturbation hook, hetero-aware selection, and the
+``--predict`` CLI gate contracts.
+"""
+import json
+import math
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.sched
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to seeded sampling
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (  # noqa: E402
+    ASRPTPolicy,
+    NoisyModel,
+    OnlineForestModel,
+    OracleModel,
+    PredictionModel,
+    PredictionNoisePerturbation,
+    Scenario,
+    StragglerPerturbation,
+    TraceConfig,
+    ZeroColdStartModel,
+    generate_trace,
+    make_prediction_model,
+    make_predictor,
+    mixed_cluster_spec,
+    run_fleet,
+    simulate,
+)
+from repro.core.predictor import GroupStatPredictor, PerfectPredictor
+from repro.core.simulator import AlphaCache  # noqa: E402
+from conftest import make_simple_job  # noqa: E402
+
+# pytest inserts the tests dir on sys.path (no tests/__init__.py)
+import test_golden  # noqa: E402
+from test_golden import SCENARIOS, load_jobs, run_scenario  # noqa: E402
+
+sched_scale = pytest.importorskip(
+    "benchmarks.sched_scale",
+    reason="benchmarks namespace package needs the repo root on sys.path",
+)
+
+STRAGGLER_NAME = "A-SRPT (migrate) @het+straggler"
+
+
+@pytest.fixture(scope="module")
+def golden_jobs():
+    return load_jobs()
+
+
+@pytest.fixture(scope="module")
+def expected():
+    return json.loads(
+        (pathlib.Path(__file__).resolve().parent / "golden" /
+         "expected.json").read_text()
+    )
+
+
+# ---------------------------------------------------------------------------
+# Golden byte-identity: pass-through wrappers and perfect-prediction tracking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_wrapped_predictor_matches_all_goldens(
+    name, golden_jobs, expected, monkeypatch
+):
+    """Wrapping the goldens' mean predictor in a ``track_overruns=False``
+    ``PredictionModel`` replays every committed schedule byte for byte —
+    the wrapper really is transparent, across every policy and
+    clean/het/faulted/degraded scenario."""
+    monkeypatch.setattr(
+        test_golden, "make_predictor",
+        lambda kind: PredictionModel(
+            GroupStatPredictor(kind), track_overruns=False
+        ),
+    )
+    got = run_scenario(name, golden_jobs)
+    assert got["sha256"] == expected[name]["sha256"], name
+    assert got["total_flow"] == expected[name]["total_flow"], name
+
+
+def _straggler_run(policy):
+    cluster_fn, _policy_fn, kwargs = SCENARIOS[STRAGGLER_NAME]
+    jobs = load_jobs()
+    return simulate(jobs, cluster_fn(), policy, **kwargs)
+
+
+def test_perfect_predictions_with_tracking_are_identical():
+    """Arming the tracker with *perfect* predictions changes nothing:
+    pred checks are elided when the prediction cannot fire before the
+    true completion, and the migration race sees identical remaining
+    work — held on the migration-exercising straggler golden."""
+    legacy = _straggler_run(
+        ASRPTPolicy(PerfectPredictor(), tau=2.0, migrate=True,
+                    migration_penalty=20.0)
+    )
+    tracked = _straggler_run(
+        ASRPTPolicy(
+            PredictionModel(PerfectPredictor(), track_overruns=True),
+            tau=2.0, migrate=True, migration_penalty=20.0,
+        )
+    )
+    assert tracked.schedule_digest() == legacy.schedule_digest()
+    assert tracked.n_reestimates == 0
+
+
+def test_oracle_model_is_the_perfect_predictor():
+    a = _straggler_run(
+        ASRPTPolicy(PerfectPredictor(), tau=2.0, migrate=True,
+                    migration_penalty=20.0)
+    )
+    b = _straggler_run(
+        ASRPTPolicy(OracleModel(), tau=2.0, migrate=True,
+                    migration_penalty=20.0)
+    )
+    assert a.schedule_digest() == b.schedule_digest()
+    assert b.n_reestimates == 0
+
+
+# ---------------------------------------------------------------------------
+# Backoff re-estimation: termination and the logarithmic check bound
+# ---------------------------------------------------------------------------
+
+
+def _backoff_checks(n_true: float, n_pred: float, model) -> int:
+    """Pure mirror of the simulator's re-estimation loop: a check fires
+    whenever elapsed work reaches the predicted total; the model answers
+    a new total.  Returns the check count until the prediction covers
+    the true work."""
+    total = n_pred
+    checks = 0
+    while total < n_true:
+        checks += 1
+        assert checks < 200, "backoff loop failed to terminate"
+        elapsed = total  # the job has exactly the predicted work done
+        new_total = model.reestimate(None, elapsed)
+        assert new_total > elapsed or new_total >= model.backoff_floor
+        total = max(new_total, elapsed + 1e-9)
+    return checks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(1, 10**6),
+    st.floats(0.0, 1e5),
+    st.floats(1.25, 4.0),
+)
+def test_backoff_terminates_logarithmically(n_true, n_pred, factor):
+    """Every (true, predicted) pair terminates, in at most
+    ``log_factor(n_true) + 2`` checks once the floor is reached —
+    regardless of how wrong (including 0) the initial prediction was."""
+    model = PredictionModel(
+        PerfectPredictor(), backoff_factor=factor, backoff_floor=1.0
+    )
+    checks = _backoff_checks(float(n_true), n_pred, model)
+    bound = math.log(max(n_true, 2), factor) + 2
+    assert checks <= bound
+
+
+def test_prediction_model_validation():
+    with pytest.raises(ValueError):
+        PredictionModel(PerfectPredictor(), backoff_factor=1.0)
+    with pytest.raises(ValueError):
+        PredictionModel(PerfectPredictor(), backoff_floor=0.0)
+    with pytest.raises(ValueError):
+        NoisyModel(mode="gaussian")
+    with pytest.raises(ValueError):
+        NoisyModel(mode="coldstart", cold_frac=1.5)
+    with pytest.raises(ValueError):
+        make_prediction_model("nope")
+
+
+def _small_scenario(n_jobs=120, seed=5):
+    cluster = mixed_cluster_spec(num_servers=8, seed=0)
+    jobs = [
+        j for j in generate_trace(
+            TraceConfig(
+                n_jobs=n_jobs, horizon=n_jobs * 40.0, seed=seed,
+                single_gpu_frac=0.4, max_gpus_per_job=16,
+            )
+        ) if j.g <= cluster.total_gpus
+    ]
+    return jobs, cluster
+
+
+def test_zero_cold_start_completes_with_bounded_reestimates():
+    """The acceptance worst case: every job predicted 0, scheduled ASAP,
+    yet every job completes and the per-job check count stays within the
+    log2 backoff bound."""
+    jobs, cluster = _small_scenario()
+    res = simulate(
+        jobs, cluster,
+        ASRPTPolicy(ZeroColdStartModel(), tau=2.0, refine_mapping=False),
+        validate=False,
+    )
+    assert res.n_jobs == len(jobs)
+    assert len(res.records) == len(jobs)  # every job completed
+    assert res.n_reestimates > 0
+    bound = sum(math.log2(max(j.n_iters, 2)) + 2 for j in jobs)
+    assert res.n_reestimates <= bound
+
+
+def test_online_forest_closes_the_loop():
+    """The forest model runs end to end, re-estimates its cold-start
+    mispredictions, and learns: late recurrences of seen groups predict
+    nonzero."""
+    jobs, cluster = _small_scenario()
+    model = OnlineForestModel(seed=0, retrain_every=40, n_estimators=5,
+                              max_history=500)
+    res = simulate(
+        jobs, cluster,
+        ASRPTPolicy(model, tau=2.0, refine_mapping=False),
+        validate=False,
+    )
+    assert len(res.records) == len(jobs)
+    assert res.n_reestimates > 0
+    seen = [j for j in jobs if j.group_id >= 0
+            and model.predict(j) > 0.0]
+    assert seen, "forest never learned any group"
+
+
+# ---------------------------------------------------------------------------
+# Noise models: deterministic, order-independent error injection
+# ---------------------------------------------------------------------------
+
+
+def test_noisy_model_is_a_pure_function_of_seed_and_job():
+    m1 = NoisyModel("lognormal", sigma=0.5, seed=3)
+    m2 = NoisyModel("lognormal", sigma=0.5, seed=3)
+    jobs = [make_simple_job(job_id=i, n_iters=100 + i) for i in range(20)]
+    # call order / count must not matter
+    a = [m1.predict(j) for j in jobs]
+    for j in reversed(jobs):
+        m2.predict(j)
+    b = [m2.predict(j) for j in jobs]
+    assert a == b
+    assert all(x > 0 for x in a)
+    # a different seed draws different noise
+    m3 = NoisyModel("lognormal", sigma=0.5, seed=4)
+    assert [m3.predict(j) for j in jobs] != a
+
+
+def test_rankflip_inverts_the_ordering():
+    m = NoisyModel("rankflip", scale=400.0)
+    short = make_simple_job(job_id=1, n_iters=10)
+    long = make_simple_job(job_id=2, n_iters=10_000)
+    assert m.predict(short) > m.predict(long)
+
+
+def test_coldstart_zeroes_a_fraction():
+    m = NoisyModel("coldstart", cold_frac=0.4, seed=0)
+    jobs = [make_simple_job(job_id=i, n_iters=500) for i in range(400)]
+    preds = [m.predict(j) for j in jobs]
+    zeros = sum(1 for p in preds if p == 0.0)
+    assert 0.25 < zeros / len(jobs) < 0.55
+    assert all(p in (0.0, 500.0) for p in preds)
+    # exact at cold_frac=0: byte-equal to the truth
+    exact = NoisyModel("coldstart", cold_frac=0.0)
+    assert all(exact.predict(j) == float(j.n_iters) for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# Fleet integration: PredictionNoisePerturbation + shared degraded memo
+# ---------------------------------------------------------------------------
+
+
+def _fleet_base(golden_jobs):
+    return Scenario(
+        jobs=tuple(golden_jobs[:80]),
+        cluster=mixed_cluster_spec(num_servers=8, seed=0),
+        name="predbase",
+    )
+
+
+def test_prediction_noise_perturbation_is_deterministic(golden_jobs):
+    base = _fleet_base(golden_jobs)
+    perts = (
+        StragglerPerturbation(n_stragglers=2),
+        PredictionNoisePerturbation(mode="lognormal", sigma=0.6),
+    )
+    mk = lambda: ASRPTPolicy(  # noqa: E731
+        make_predictor("mean"), tau=2.0, refine_mapping=False, migrate=True
+    )
+    a = run_fleet(base, mk, perts, 4, seed=7)
+    b = run_fleet(base, mk, perts, 4, seed=7)
+    assert a.digest() == b.digest()
+    assert run_fleet(base, mk, perts, 4, seed=8).digest() != a.digest()
+    with pytest.raises(ValueError):
+        PredictionNoisePerturbation(mode="gaussian")
+
+
+def test_policy_perturbation_rng_is_disjoint_from_event_stream(golden_jobs):
+    """Adding an *exact* prediction perturbation (coldstart, cold_frac=0
+    — predicts true counts, arms the tracker) leaves every variant's
+    schedule untouched: the policy perturbation draws from its own rng
+    substream, so event/job draws cannot shift, and exact predictions
+    elide every check."""
+    base = _fleet_base(golden_jobs)
+    mk = lambda: ASRPTPolicy(  # noqa: E731
+        make_predictor("perfect"), tau=2.0, refine_mapping=False,
+        migrate=True,
+    )
+    events_only = (StragglerPerturbation(n_stragglers=2),)
+    with_noise = events_only + (
+        PredictionNoisePerturbation(mode="coldstart", cold_frac=0.0),
+    )
+    a = run_fleet(base, mk, events_only, 3, seed=11)
+    b = run_fleet(base, mk, with_noise, 3, seed=11)
+    assert [v.digest for v in a.variants] == [v.digest for v in b.variants]
+
+
+def test_degraded_bounds_memo_is_shareable():
+    """Two AlphaCache instances aliasing one content-addressed memo give
+    the same degraded bounds as a private cache — and the second
+    instance answers from the shared memo without recomputing."""
+    from repro.core import ClusterState
+
+    spec = mixed_cluster_spec(num_servers=8, seed=0)
+    cluster = ClusterState(spec)
+    cluster.set_server_speed(0, 0.25)
+    cluster.set_server_speed(3, 0.5)
+    job = make_simple_job(job_id=1, replicas=(2, 2), n_iters=100)
+
+    private = AlphaCache(spec)
+    want = private.bounds(job, cluster)
+
+    shared: dict = {}
+    a = AlphaCache(spec)
+    a._deg_cache = shared
+    b = AlphaCache(spec)
+    b._deg_cache = shared
+    assert a.bounds(job, cluster) == want
+    assert shared, "degraded memo not populated"
+    before = dict(shared)
+    assert b.bounds(job, cluster) == want
+    assert shared == before  # b hit a's entries; no new keys
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity-aware server selection (satellite: ROADMAP carry-over)
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_selection_improves_mixed_cluster_flow():
+    cluster = mixed_cluster_spec(num_servers=10, seed=1)
+    jobs = [
+        j for j in generate_trace(
+            TraceConfig(
+                n_jobs=300, horizon=300 * 30.0, seed=7,
+                single_gpu_frac=0.3, max_gpus_per_job=16,
+            )
+        ) if j.g <= cluster.total_gpus
+    ]
+
+    def run(**kw):
+        return simulate(
+            jobs, cluster,
+            ASRPTPolicy(make_predictor("mean"), tau=2.0,
+                        refine_mapping=False, **kw),
+            validate=False,
+        )
+
+    default = run()
+    scored = run(hetero_selection=True)
+    assert len(scored.records) == len(jobs)
+    # class-aware scoring must not lose to blind consolidation here
+    assert scored.total_flow_time < default.total_flow_time
+    # off by default: omitting the flag is the golden-pinned engine
+    assert run().schedule_digest() == default.schedule_digest()
+
+
+def test_hetero_selection_noop_on_homogeneous_clusters(
+    golden_jobs, expected
+):
+    """On a homogeneous cluster the flag binds to nothing: schedules
+    equal the committed golden byte for byte even with it on."""
+    res = simulate(
+        golden_jobs, test_golden._hom_cluster(),
+        ASRPTPolicy(make_predictor("mean"), tau=2.0,
+                    hetero_selection=True),
+    )
+    assert res.schedule_digest() == expected["A-SRPT @hom"]["sha256"]
+
+
+# ---------------------------------------------------------------------------
+# --predict benchmark: verdict function + CLI exit codes + baseline regime
+# ---------------------------------------------------------------------------
+
+
+def test_check_predict_regression_verdicts():
+    check = sched_scale.check_predict_regression
+    base = {
+        "n_jobs": 2000,
+        "forest_gate": 1.3,
+        "ratios": {
+            "forest": {"flow_vs_oracle": 1.0, "p95_vs_oracle": 1.0},
+            "rankflip": {"flow_vs_oracle": 1.1, "p95_vs_oracle": 0.96},
+        },
+    }
+    same = json.loads(json.dumps(base))
+
+    errors, warnings, notes = check(same, base)
+    assert not errors and not warnings
+    assert any("gate" in n for n in notes)
+
+    # forest over the absolute gate: hard error, baseline-independent
+    hot = json.loads(json.dumps(base))
+    hot["ratios"]["forest"]["p95_vs_oracle"] = 1.44
+    errors, _, _ = check(hot, base)
+    assert len(errors) == 1 and "1.44" in errors[0]
+    errors, _, _ = check(hot, {})  # even with no baseline at all
+    assert len(errors) == 1
+
+    # missing forest regime: error (the gate cannot be skipped silently)
+    noforest = json.loads(json.dumps(base))
+    del noforest["ratios"]["forest"]
+    errors, _, _ = check(noforest, base)
+    assert errors
+
+    # drift past the threshold: warning, not error
+    drift = json.loads(json.dumps(base))
+    drift["ratios"]["rankflip"]["p95_vs_oracle"] = 1.5
+    errors, warnings, _ = check(drift, base, threshold=0.15)
+    assert not errors and len(warnings) == 1 and "rankflip" in warnings[0]
+
+    # regime mismatch / malformed baseline: notes only
+    other = json.loads(json.dumps(base))
+    other["n_jobs"] = 99
+    errors, warnings, notes = check(other, base)
+    assert not errors and not warnings
+    assert any("n_jobs" in n for n in notes)
+    errors, warnings, notes = check(same, {"ratios": None})
+    assert not errors and not warnings
+
+
+def _shrink_predict_regime(monkeypatch, gate=1e9):
+    monkeypatch.setattr(sched_scale, "PREDICT_JOBS", 120)
+    monkeypatch.setattr(sched_scale, "PREDICT_FOREST_GATE", gate)
+    monkeypatch.setattr(
+        sched_scale, "PREDICT_REGIMES",
+        (
+            ("oracle", "oracle", {}),
+            ("forest", "forest",
+             {"seed": 0, "retrain_every": 40, "n_estimators": 3,
+              "max_history": 500}),
+            ("lognormal-0.7", "lognormal", {"sigma": 0.7, "seed": 0}),
+        ),
+    )
+
+
+def test_predict_cli_exit_codes(tmp_path, monkeypatch):
+    main = sched_scale.main
+    _shrink_predict_regime(monkeypatch)  # gate wide open: exit codes only
+    out = tmp_path / "BENCH_predict.json"
+    assert main(["--predict", "--json", str(out)]) == 0
+    current = json.loads(out.read_text())
+    assert current["bench"] == "sched_scale_predict"
+    assert set(current["ratios"]) == {"forest", "lognormal-0.7"}
+    assert len(current["oracle_sha256"]) == 64
+
+    # self-check passes, strict or not
+    assert main(["--predict", "--check", str(out)]) == 0
+    assert main(["--predict", "--check", str(out), "--strict"]) == 0
+
+    # ratio drift: warning by default, failure under --strict
+    drift = json.loads(out.read_text())
+    drift["ratios"]["lognormal-0.7"]["p95_vs_oracle"] /= 10.0
+    drift_p = tmp_path / "drift.json"
+    drift_p.write_text(json.dumps(drift))
+    assert main(["--predict", "--check", str(drift_p)]) == 0
+    assert main(["--predict", "--check", str(drift_p), "--strict"]) == 1
+
+    # the absolute forest gate: exit 1 even without --strict
+    _shrink_predict_regime(monkeypatch, gate=1e-9)
+    assert main(["--predict", "--check", str(out)]) == 1
+
+    # --predict is its own variant; --json needs a tracked series
+    with pytest.raises(SystemExit):
+        main(["--predict", "--fleet", "3"])
+    with pytest.raises(SystemExit):
+        main(["--predict", "--budget"])
+    with pytest.raises(SystemExit):
+        main(["--json", "x.json"])
+
+
+def test_committed_predict_baseline_matches_ci_regime():
+    """The committed baseline must be regenerable by the CI command
+    (`--predict`): same job count, the gate value, the acceptance
+    regimes present, and the forest actually under its gate."""
+    p = (
+        pathlib.Path(__file__).resolve().parents[1]
+        / "benchmarks" / "BENCH_predict_baseline.json"
+    )
+    data = json.loads(p.read_text())
+    assert data["bench"] == "sched_scale_predict"
+    assert data["n_jobs"] == sched_scale.PREDICT_JOBS
+    assert data["forest_gate"] == sched_scale.PREDICT_FOREST_GATE
+    assert len(data["oracle_sha256"]) == 64
+    required = {"forest", "zero-cold-start", "rankflip"}
+    assert required <= set(data["ratios"])
+    assert any(r.startswith("lognormal-") for r in data["ratios"])
+    for r, vals in data["ratios"].items():
+        assert vals["flow_vs_oracle"] > 0 and vals["p95_vs_oracle"] > 0
+    assert (
+        data["ratios"]["forest"]["p95_vs_oracle"]
+        <= sched_scale.PREDICT_FOREST_GATE
+    )
+
+
+def test_flow_percentile():
+    jobs, cluster = _small_scenario(n_jobs=40)
+    res = simulate(
+        jobs, cluster,
+        ASRPTPolicy(make_predictor("mean"), tau=2.0, refine_mapping=False),
+        validate=False,
+    )
+    flows = sorted(r.completion - r.arrival for r in res.records.values())
+    assert res.flow_percentile(0.0) == flows[0]
+    assert res.flow_percentile(100.0) == flows[-1]
+    import numpy as np
+
+    assert res.flow_percentile(95.0) == pytest.approx(
+        float(np.percentile(flows, 95.0))
+    )

@@ -86,6 +86,38 @@ class TestIterationPredictors:
         p = PerfectPredictor()
         assert p.predict(make_simple_job(n_iters=123)) == 123
 
+    def test_rf_max_history_bounds_training_window(self):
+        p = RandomForestPredictor(retrain_every=10**9, max_history=100, seed=0)
+        for i in range(1000):
+            job = make_simple_job(job_id=i, group_id=i % 7, n_iters=50 + i)
+            p.observe(job, 50 + i)
+        # amortized trim: the buffer never exceeds twice the window
+        assert len(p._y) <= 2 * p.max_history
+        assert len(p._X) == len(p._y)
+        # the retained suffix is the most recent observations
+        assert p._y[-1] == 1049.0
+
+    def test_rf_prefit_falls_back_to_group_median(self):
+        p = RandomForestPredictor(retrain_every=10**9, seed=0)
+        _observe_group(p, 3, [100, 120, 5000])
+        assert not p._fitted
+        assert p.predict(make_simple_job(group_id=3)) == pytest.approx(120)
+        # other groups still unseen -> 0
+        assert p.predict(make_simple_job(group_id=4)) == 0.0
+
+    def test_rf_warm_start(self):
+        p = RandomForestPredictor(retrain_every=10**9, seed=0)
+        _observe_group(p, 1, [200] * 10)
+        p.warm_start()  # <32 observations: stays a no-op
+        assert not p._fitted
+        for g in range(2, 6):
+            _observe_group(p, g, [100 * g] * 10)
+        p.warm_start()
+        assert p._fitted
+        assert p._since_retrain == 0
+        got = p.predict(make_simple_job(group_id=2, n_iters=200))
+        assert 50 <= got <= 500  # a trained forest, not the 0.0 cold path
+
     def test_rf_predictor_learns_groups(self):
         rng = np.random.default_rng(0)
         p = RandomForestPredictor(retrain_every=64, seed=0)
