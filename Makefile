@@ -8,7 +8,7 @@ export PYTHONPATH
 .PHONY: test test-sched lint smoke bench-sched bench-hetero \
 	bench-straggler bench-elastic bench-stream bench-guard \
 	bench-budget bench-trend bench-fleet bench-fleet-ab \
-	bench-predict ci
+	bench-predict bench-serve ci
 
 test:
 	python -m pytest -x -q
@@ -110,11 +110,24 @@ bench-predict:
 		--json BENCH_predict.json \
 		--check benchmarks/BENCH_predict_baseline.json
 
+# SLO-aware serving co-schedule (what the CI serve-slo job runs, minus
+# --strict): a diurnal ~1M-request stream next to the dense training
+# trace, gated on SLO attainment staying above the absolute floor
+# (always exit 1 below it) and the mixed-run schedule sha256 matching
+# the committed baseline; p99/interference drift is fail-soft locally.
+# Refresh with: make bench-serve && cp BENCH_serve.json
+# benchmarks/BENCH_serve_baseline.json.
+bench-serve:
+	python -m benchmarks.sched_scale --serve \
+		--json BENCH_serve.json \
+		--check benchmarks/BENCH_serve_baseline.json
+
 # Interleaved fleet-vs-sequential A/B on the refined-mapping engine:
 # asserts per-variant bit-identity and prints fleet_speedup (the
 # shared-cache + batched-prewarm amortization, benchmarks/README.md).
 bench-fleet-ab:
 	python -m benchmarks.sched_scale --fleet-ab
 
-# What CI runs: lint + tier-1 + budget benchmark + fleet + predict gates.
-ci: lint test bench-budget bench-fleet bench-predict
+# What CI runs: lint + tier-1 + budget benchmark + fleet + predict +
+# serve gates.
+ci: lint test bench-budget bench-fleet bench-predict bench-serve

@@ -93,6 +93,17 @@ Variants:
   gates the forest's p95 ratio against an *absolute* 1.3x-oracle bound
   (always exit 1 past it) and warns on per-regime drift vs the
   committed ``BENCH_predict_baseline.json``.
+* ``--serve`` / ``sched_scale_serve`` — SLO-aware serving co-schedule
+  (ISSUE 9): a diurnal ~1M-request :class:`RequestStream` (engine-
+  calibrated batch latency curve, repro.serve.latency) rides the event
+  stream next to a moderate-load training trace on the mixed cluster,
+  run twice — train-only and mixed — and reports the three serving
+  metrics: ``slo_attainment``, ``p99_request_latency_s``, and
+  ``train_interference`` (mixed/train-only total flow time).
+  ``--check`` gates slo_attainment against an *absolute* floor (always
+  exit 1 below it), hard-fails on a schedule-sha mismatch at the fixed
+  seed, and warns on p99/interference drift vs the committed
+  ``BENCH_serve_baseline.json``.
 * ``--strict`` — promote ``--check`` warnings to exit 1 (CI gate mode;
   fail-soft stays the local default).
 * ``--profile [N]`` — run the selected variant under cProfile and dump
@@ -109,6 +120,7 @@ from repro.core import (
     BASELINES,
     ClusterSpec,
     ElasticPerturbation,
+    RequestStream,
     Scenario,
     ServerClass,
     StragglerPerturbation,
@@ -1050,6 +1062,243 @@ def check_predict_regression(
 
 
 # ---------------------------------------------------------------------------
+# Serving co-schedule (--serve): SLO attainment + interference vs baseline
+# ---------------------------------------------------------------------------
+
+# CI serve regime: the predict variant's 16-server mixed cluster under
+# a denser training load (2x the throughput regime's per-job horizon:
+# queues form and persist, so lost capacity shows up in flow time),
+# plus one diurnal request stream at production rate — ~1M requests
+# over the 2.7-hour horizon, mean 100 req/s swinging +-50% over one
+# full sinusoid cycle.
+# Replicas run the committed engine-calibrated latency curve
+# (repro.serve.latency.DEFAULT_SERVE_MODEL): one replica sustains ~324
+# req/s at max_batch=8, so the lane autoscales under the diurnal peak
+# and hands capacity back off-peak.  Each replica pins a *full*
+# big-generation server (8 GPUs, the paper-scale tensor-parallel
+# footprint), so training measurably loses capacity while the stream is
+# live — the interference metric carries real signal.  A-SRPT runs
+# matmul-free (refine_mapping=False) so the schedule sha256 is
+# cross-machine stable.
+SERVE_JOBS = 400
+SERVE_NUM_SERVERS = 16
+SERVE_SECONDS_PER_JOB = 2 * SECONDS_PER_JOB
+SERVE_RATE = 100.0  # mean requests/s; the sinusoid averages back to this
+SERVE_SLO = 0.2  # per-request deadline, seconds
+SERVE_GPUS = 8  # GPUs per serving replica: a full big-generation server
+SERVE_MAX_REPLICAS = 4
+SERVE_MAX_BATCH = 8
+SERVE_SLO_GATE = 0.995  # slo_attainment below this floor always fails
+
+
+def _serve_stream(horizon: float) -> RequestStream:
+    return RequestStream(
+        stream_id=0,
+        rate=SERVE_RATE,
+        duration=horizon,
+        slo=SERVE_SLO,
+        diurnal_amplitude=0.5,
+        diurnal_period=horizon,  # one full diurnal cycle inside the run
+        gpus=SERVE_GPUS,
+        max_replicas=SERVE_MAX_REPLICAS,
+        max_batch=SERVE_MAX_BATCH,
+        seed=0,
+    )
+
+
+def sched_scale_serve(n_jobs: Optional[int] = None) -> List[Dict]:
+    """SLO-aware serving co-schedule (--serve).
+
+    Two runs over identical jobs/cluster: train-only (the interference
+    denominator) and mixed (the same trace plus the request stream).
+    Request latency aggregates ride the bounded estimators
+    (SERVE_LAT_QUANTILES), so the p99 row carries the documented <= 10%
+    reservoir bound at this scale; SLO attainment and flow times are
+    exact.
+    """
+    if n_jobs is None:  # read at call time so tests can shrink the regime
+        n_jobs = SERVE_JOBS
+    cluster = mixed_cluster_spec(num_servers=SERVE_NUM_SERVERS, seed=0)
+    horizon = n_jobs * SERVE_SECONDS_PER_JOB
+    jobs = generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs,
+            horizon=horizon,
+            seed=3,
+            single_gpu_frac=0.3,
+            max_gpus_per_job=32,
+            mean_iters=400,
+            sigma_iters=1.6,
+        )
+    )
+
+    def pol():
+        return ASRPTPolicy(
+            make_predictor("mean"), tau=2.0, refine_mapping=False
+        )
+
+    base = simulate(
+        Scenario(jobs=jobs, cluster=cluster), pol(), validate=False
+    )
+    mixed = simulate(
+        Scenario(jobs=jobs, cluster=cluster,
+                 request_streams=(_serve_stream(horizon),)),
+        pol(), validate=False,
+    )
+    return [
+        {
+            "bench": "serve",
+            "metric": "slo_attainment",
+            "value": round(mixed.slo_attainment, 5),
+            "n_requests": mixed.n_requests,
+            "n_slo_met": mixed.n_slo_met,
+            "slo_s": SERVE_SLO,
+        },
+        {
+            "bench": "serve",
+            "metric": "p99_request_latency_s",
+            "value": round(mixed.request_latency_percentile(99.0), 5),
+            "p50_request_latency_s": round(
+                mixed.request_latency_percentile(50.0), 5
+            ),
+            "mean_request_latency_s": round(
+                mixed.mean_request_latency, 5
+            ),
+        },
+        {
+            "bench": "serve",
+            "metric": "train_interference",
+            "value": round(
+                mixed.total_flow_time / base.total_flow_time, 4
+            ),
+            "n_jobs": mixed.n_jobs,
+            "n_preemptions": mixed.n_preemptions,
+            "mixed_flow": f"{mixed.total_flow_time:.4e}",
+            "train_only_flow": f"{base.total_flow_time:.4e}",
+            "sha256": mixed.schedule_digest(),
+            "train_sha256": base.schedule_digest(),
+            "wall_s": round(base.wall_s + mixed.wall_s, 3),
+        },
+    ]
+
+
+def serve_to_bench_json(rows: Sequence[Dict]) -> Dict:
+    """The three gated serving metrics + the row dump."""
+    from datetime import datetime, timezone
+
+    by = {r["metric"]: r for r in rows}
+    tail = by.get("train_interference", {})
+    return {
+        "schema": 1,
+        "bench": "sched_scale_serve",
+        "generated_at": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "n_jobs": tail.get("n_jobs", 0),
+        "n_requests": by.get("slo_attainment", {}).get("n_requests", 0),
+        "slo_gate": SERVE_SLO_GATE,
+        "metrics": {
+            m: by[m]["value"]
+            for m in (
+                "slo_attainment",
+                "p99_request_latency_s",
+                "train_interference",
+            )
+            if m in by
+        },
+        "sha256": tail.get("sha256"),
+        "rows": list(rows),
+    }
+
+
+def check_serve_regression(
+    current: Dict, baseline: Dict, threshold: float = 0.15
+) -> Tuple[List[str], List[str], List[str]]:
+    """Compare a serve run against the committed baseline.
+
+    Returns ``(errors, warnings, notes)``:
+
+    * **errors** — the absolute acceptance gate: ``slo_attainment``
+      below ``SERVE_SLO_GATE`` (a drifted baseline must not launder a
+      broken serving lane), and mixed-run schedule-sha mismatches at
+      the same regime (the co-schedule is a deterministic function of
+      the seed on the matmul-free engine, so a mismatch is a behavior
+      change, never runner noise).  Callers exit nonzero even without
+      ``--strict``.
+    * **warnings** — p99 request latency or training interference more
+      than ``threshold`` above the committed baseline (``--strict``
+      promotes to failure; fail-soft stays the local default to allow
+      intentional re-baselining).
+    * **notes** — informational (improvements, skipped checks).
+    """
+    errors: List[str] = []
+    warnings: List[str] = []
+    notes: List[str] = []
+
+    cur = current.get("metrics", {}) or {}
+    gate = float(current.get("slo_gate", SERVE_SLO_GATE))
+    slo = cur.get("slo_attainment")
+    if slo is None:
+        errors.append("current run has no slo_attainment — gate unchecked")
+    elif float(slo) < gate:
+        errors.append(
+            f"SLO attainment {float(slo):.4f} is below the {gate} "
+            f"acceptance floor — the serving lane is missing deadlines"
+        )
+    else:
+        notes.append(
+            f"SLO attainment {float(slo):.4f} (floor {gate})"
+        )
+
+    same_regime = (
+        baseline.get("n_jobs") == current.get("n_jobs")
+        and baseline.get("n_requests") == current.get("n_requests")
+    )
+    base_sha = baseline.get("sha256")
+    if not base_sha:
+        notes.append("baseline has no schedule sha256; sha check skipped")
+    elif not same_regime:
+        notes.append(
+            "baseline regime (n_jobs/n_requests) differs; sha check "
+            "skipped — refresh BENCH_serve_baseline.json"
+        )
+    elif base_sha != current.get("sha256"):
+        errors.append(
+            f"mixed-run schedule sha256 {current.get('sha256')} differs "
+            f"from baseline {base_sha} at the fixed seed — determinism "
+            f"or co-scheduling behavior change"
+        )
+    else:
+        notes.append("mixed-run schedule digest matches baseline")
+
+    base = baseline.get("metrics")
+    if not isinstance(base, dict) or not base:
+        notes.append("baseline has no metrics; drift check skipped")
+        return errors, warnings, notes
+    if not same_regime:
+        notes.append(
+            "baseline regime differs; drift check skipped — refresh "
+            "BENCH_serve_baseline.json"
+        )
+        return errors, warnings, notes
+    for metric in ("p99_request_latency_s", "train_interference"):
+        try:
+            ref = float(base[metric])
+            now = float(cur[metric])
+        except (KeyError, TypeError, ValueError):
+            notes.append(f"{metric}: missing/malformed entry; skipped")
+            continue
+        if ref > 0 and now > ref * (1.0 + threshold):
+            warnings.append(
+                f"{metric}: {now:.4f} is {now / ref - 1:.0%} above "
+                f"baseline {ref:.4f}"
+            )
+        else:
+            notes.append(f"{metric}: {now:.4f} vs baseline {ref:.4f}")
+    return errors, warnings, notes
+
+
+# ---------------------------------------------------------------------------
 # BENCH_sched.json emission + fail-soft regression check (CI trend tracking)
 # ---------------------------------------------------------------------------
 
@@ -1208,6 +1457,17 @@ def main(argv: Optional[List[str]] = None) -> int:
              "oracle always fails)",
     )
     ap.add_argument(
+        "--serve", action="store_true",
+        help="SLO-aware serving co-schedule: a diurnal ~1M-request "
+             "stream (engine-calibrated batch latency) next to the "
+             "moderate-load training trace, run train-only + mixed; "
+             "reports slo_attainment / p99 request latency / training "
+             "interference; --json writes BENCH_serve.json, --check "
+             "gates slo_attainment against the absolute "
+             f"{SERVE_SLO_GATE} floor (always fails below it) and the "
+             "schedule sha256 vs the committed baseline",
+    )
+    ap.add_argument(
         "--seed", metavar="SEED", default=0, type=int,
         help="fleet RNG seed (--fleet/--fleet-ab; variant i draws from "
              "default_rng([seed, i]))",
@@ -1245,10 +1505,11 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     fleet_mode = args.fleet is not None
     if (args.json or args.check) and not (
-        args.budget or fleet_mode or args.predict
+        args.budget or fleet_mode or args.predict or args.serve
     ):
-        ap.error("--json/--check track the budget-mode, fleet, or predict "
-                 "series; add --budget, --fleet, or --predict")
+        ap.error("--json/--check track the budget-mode, fleet, predict, "
+                 "or serve series; add --budget, --fleet, --predict, or "
+                 "--serve")
     if args.strict and not args.check:
         ap.error("--strict promotes --check warnings to failures; add "
                  "--check")
@@ -1258,16 +1519,23 @@ def main(argv: Optional[List[str]] = None) -> int:
     if (fleet_mode or args.fleet_ab is not None) and (
         args.budget or args.hetero or args.straggler or args.elastic
         or args.guard or args.full or args.scenario or args.predict
+        or args.serve
         or args.stream is not None or args.trace is not None
     ):
         ap.error("--fleet/--fleet-ab are their own variants; drop other "
                  "flags")
     if args.predict and (
         args.budget or args.hetero or args.straggler or args.elastic
-        or args.guard or args.full or args.scenario
+        or args.guard or args.full or args.scenario or args.serve
         or args.stream is not None or args.trace is not None
     ):
         ap.error("--predict is its own variant; drop other flags")
+    if args.serve and (
+        args.budget or args.hetero or args.straggler or args.elastic
+        or args.guard or args.full or args.scenario
+        or args.stream is not None or args.trace is not None
+    ):
+        ap.error("--serve is its own variant; drop other flags")
     if fleet_mode and args.fleet_ab is not None:
         ap.error("--fleet runs the CI sweep; --fleet-ab the speedup A/B — "
                  "pick one")
@@ -1307,6 +1575,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         )
     elif args.predict:
         run = lambda: sched_scale_predict()  # noqa: E731
+    elif args.serve:
+        run = lambda: sched_scale_serve()  # noqa: E731
     elif args.budget:
         if args.full:
             ap.error("--budget is fixed-size; drop --full (or use "
@@ -1363,6 +1633,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             bench = fleet_to_bench_json(fleet_result[0])
         elif args.predict:
             bench = predict_to_bench_json(rows)
+        elif args.serve:
+            bench = serve_to_bench_json(rows)
         else:
             bench = rows_to_bench_json(rows)
     if args.json:
@@ -1405,6 +1677,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print(f"::error::predict gate: {line}")
             if errors:
                 return 1  # the forest gate fails even without --strict
+            if warnings and args.strict:
+                return 1
+        elif args.serve:
+            errors, warnings, notes = check_serve_regression(
+                bench, baseline
+            )
+            for line in notes:
+                print(f"[serve] {line}")
+            for line in warnings:
+                print(f"::warning::serve regression: {line}")
+            for line in errors:
+                print(f"::error::serve gate: {line}")
+            if errors:
+                return 1  # the SLO floor fails even without --strict
             if warnings and args.strict:
                 return 1
         else:

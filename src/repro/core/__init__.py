@@ -28,6 +28,8 @@ from .scenario import (  # noqa: F401
     JsonlJobs,
     Perturbation,
     PredictionNoisePerturbation,
+    REQUEST_STREAM_KIND,
+    RequestStream,
     SCENARIO_SCHEMA_VERSION,
     Scenario,
     ServerJoin,
@@ -35,17 +37,22 @@ from .scenario import (  # noqa: F401
     StragglerPerturbation,
     jobs_to_jsonl,
     perturb_scenario,
+    request_stream_from_dict,
+    request_stream_to_dict,
     scenario_from_legacy,
 )
 from .simulator import (  # noqa: F401
     Allocation,
     Migration,
     Policy,
+    SERVE_LAT_QUANTILES,
+    STREAM_FLOW_QUANTILES,
     SchedulingPolicy,
     SimResult,
     Start,
     simulate,
 )
+from .quantile import StreamingQuantile  # noqa: F401
 from .fleet import (  # noqa: F401
     FleetResult,
     FleetShared,

@@ -46,6 +46,8 @@ import heapq
 from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional
 
+import numpy as np
+
 from .cluster import ClusterState
 from .heavy_edge import (
     ConsolidatingLadder,
@@ -476,6 +478,53 @@ class ASRPTPolicy(MigrationMixin, Policy):
         hook runs before the pass that would release them for real."""
         self._drain_vm(t)
         return self.pending[0] if self.pending else None
+
+    def plan_preemptions(
+        self, t: float, cluster: ClusterState, candidates, gpus_needed: int
+    ):
+        """Serving-lane preemption (ISSUE 9): pick comm-heavy victims.
+
+        Only communication-heavy jobs (``alpha_max / alpha~_min >=
+        comm_heavy`` — the same classification Alg. 1 consolidates and
+        delays by) are evictable: they make the worst use of the GPUs a
+        latency-bound replica needs, and their checkpoint-restart cost
+        amortizes over the longest remaining runtimes.  Victims are
+        ordered longest-predicted-remaining-first (remaining iterations
+        x current alpha; job id breaks ties), and the list is truncated
+        to the prefix whose hypothetically freed capacity first gives
+        *some* active server ``gpus_needed`` free GPUs — if even evicting
+        every comm-heavy job cannot host the replica, nothing is
+        preempted (pointless evictions would only stretch training flow
+        time).  The simulator owns the actual eviction (release +
+        :meth:`on_preemption`); no allocations change here.
+        """
+        heavy = []
+        for r in candidates:
+            a_max, a_min = self.alpha_cache.bounds(r.job)
+            if a_max / a_min >= self.comm_heavy:
+                heavy.append(r)
+        if not heavy:
+            return []
+        heavy.sort(key=lambda r: (-(r.iters_rem * r.alpha), r.job.job_id))
+        inactive = cluster.downed_servers | cluster.draining_servers
+        free = {
+            m: f for m, f in cluster.free.items() if m not in inactive
+        }
+        out = []
+        for r in heavy:
+            out.append(r)
+            for m, x in r.placement.items():
+                if m in free:
+                    free[m] += int(np.asarray(x).sum())
+            if any(f >= gpus_needed for f in free.values()):
+                return out
+        return []
+
+    def on_preemption(self, t: float, job: JobSpec) -> None:
+        """An evicted job re-enters at the *head* of the release queue: it
+        already virtually completed (that is why it was running), so it
+        outranks everything the virtual machine has yet to release."""
+        self.pending.appendleft(job)
 
     def queue_depth(self) -> int:
         return len(self.pending) + len(self.delayed)

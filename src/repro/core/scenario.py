@@ -67,12 +67,20 @@ for any input permutation — schedules no longer depend on how the
 caller happened to interleave event lists (tests/test_scenario.py pins
 this).
 
-JSON schema (version 1)
------------------------
+JSON schema (versions 1 and 2)
+------------------------------
 
 ``Scenario.to_json()`` / ``Scenario.from_json()`` round-trip the whole
 scenario; ``Scenario.from_json(s.to_json()) == s`` and a round-tripped
-scenario replays a byte-identical schedule (property-tested).  Layout::
+scenario replays a byte-identical schedule (property-tested).  Version 2
+(ISSUE 9) adds one optional section, ``"request_streams"`` — serving
+workloads (see :class:`RequestStream`), each tagged ``"kind":
+"request-stream"`` with the same strict unknown-field/unknown-kind
+deserialization as events.  A scenario without request streams still
+serializes as version 1 with no ``"request_streams"`` key, so every
+pre-serving document — the golden fixtures included — round-trips byte
+for byte; ``from_dict`` reads both versions and rejects
+``request_streams`` under a version-1 declaration.  Layout::
 
     {
       "schema": 1,
@@ -136,8 +144,15 @@ from typing import (
 )
 
 from .job import ClusterSpec, JobSpec, ServerClass, StageSpec
+from ..serve.latency import DEFAULT_SERVE_MODEL
 
-SCENARIO_SCHEMA_VERSION = 1
+# Version 2 added the optional "request_streams" section (serving
+# workloads, ISSUE 9).  ``to_dict`` still emits version 1 for scenarios
+# without request streams — version-1 documents (all golden fixtures,
+# every pre-serving scenario file) round-trip byte-identical — and
+# ``from_dict`` reads both.
+SCENARIO_SCHEMA_VERSION = 2
+_READABLE_SCHEMAS = (1, 2)
 
 # Frozen-trace job layout (tests/golden/trace.json is an instance).
 _STAGE_FIELDS = ("p_f", "p_b", "d_in", "d_out", "h", "k")
@@ -309,6 +324,205 @@ def event_from_dict(d: Mapping) -> ClusterEvent:
             drain_timeout=float("inf") if timeout is None else float(timeout),
         )
     return kind(t, server)
+
+
+# ---------------------------------------------------------------------------
+# Request streams (schema v2): recurring serving workloads on the timeline
+# ---------------------------------------------------------------------------
+
+
+REQUEST_STREAM_KIND = "request-stream"
+
+# Required fields have no safe default (a stream without a rate or an SLO
+# is meaningless); the rest default like the dataclass so hand-written
+# scenario files stay terse.  ``to_dict`` always writes every field —
+# the serving defaults (the calibrated latency curve) may be refreshed,
+# and a committed scenario must replay identically across refreshes.
+_STREAM_REQUIRED = ("stream_id", "rate", "duration", "slo")
+_STREAM_OPTIONAL = (
+    "start", "diurnal_amplitude", "diurnal_period", "phase", "gpus",
+    "max_replicas", "max_batch", "svc_base", "svc_per_req", "seed",
+)
+_STREAM_FIELDS = _STREAM_REQUIRED + _STREAM_OPTIONAL
+_ARRIVAL_CHUNK = 4096  # rng draws per block (amortizes Generator overhead)
+
+
+@dataclass(frozen=True)
+class RequestStream:
+    """A recurring serving workload: Poisson request arrivals (optionally
+    diurnally modulated) with a per-request SLO deadline, co-scheduled
+    with training jobs on the same cluster.
+
+    Arrivals are a nonhomogeneous Poisson process at instantaneous rate
+    ``rate_at(t) = rate * (1 + diurnal_amplitude * sin(2*pi*(t - start)
+    / diurnal_period + phase))`` over ``[start, start + duration)`` —
+    ``diurnal_amplitude = 0`` (the default) is plain Poisson at
+    ``rate`` req/s.  :meth:`arrivals` generates the timestamps lazily
+    (thinning against the peak rate, chunked rng draws), so
+    million-request streams never materialize; the draw is a pure
+    function of ``(seed, stream_id)``.
+
+    Requests are served by *replicas* — ``gpus`` GPUs on one server,
+    allocated out of the same :class:`~repro.core.cluster.ClusterState`
+    training jobs use — which batch up to ``max_batch`` queued requests
+    and take ``service_time(b) = svc_base + svc_per_req * b`` seconds
+    per batch.  The service defaults come from the committed
+    engine-calibrated curve
+    (:data:`repro.serve.latency.DEFAULT_SERVE_MODEL`); a request meets
+    its SLO when completion - arrival <= ``slo``.  The simulator scales
+    replicas up to ``max_replicas`` (preempting comm-heavy training
+    jobs via ``Policy.plan_preemptions`` when the cluster is full) and
+    releases idle ones back to training — see simulator.py.
+    """
+
+    stream_id: int
+    rate: float
+    duration: float
+    slo: float
+    start: float = 0.0
+    diurnal_amplitude: float = 0.0
+    diurnal_period: float = 86_400.0
+    phase: float = 0.0
+    gpus: int = 1
+    max_replicas: int = 1
+    max_batch: int = 8
+    svc_base: float = DEFAULT_SERVE_MODEL.batch_base
+    svc_per_req: float = DEFAULT_SERVE_MODEL.batch_per_req
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.stream_id < 0:
+            raise ValueError(f"stream_id must be >= 0, got {self.stream_id}")
+        if not (self.rate > 0.0 and math.isfinite(self.rate)):
+            raise ValueError(f"rate must be finite > 0, got {self.rate}")
+        if not (self.duration > 0.0 and math.isfinite(self.duration)):
+            raise ValueError(
+                f"duration must be finite > 0, got {self.duration}"
+            )
+        if not (self.slo > 0.0 and math.isfinite(self.slo)):
+            raise ValueError(f"slo must be finite > 0, got {self.slo}")
+        if not (self.start >= 0.0 and math.isfinite(self.start)):
+            raise ValueError(
+                f"start must be finite >= 0, got {self.start}"
+            )
+        if not 0.0 <= self.diurnal_amplitude < 1.0:
+            # amplitude 1 would zero the instantaneous rate (and < 0
+            # flips the phase); keep the modulation strictly positive
+            raise ValueError(
+                f"diurnal_amplitude must be in [0, 1), got "
+                f"{self.diurnal_amplitude}"
+            )
+        if not (self.diurnal_period > 0.0 and math.isfinite(self.diurnal_period)):
+            raise ValueError(
+                f"diurnal_period must be finite > 0, got "
+                f"{self.diurnal_period}"
+            )
+        if not math.isfinite(self.phase):
+            raise ValueError(f"phase must be finite, got {self.phase}")
+        if self.gpus < 1:
+            raise ValueError(f"gpus must be >= 1, got {self.gpus}")
+        if self.max_replicas < 1:
+            raise ValueError(
+                f"max_replicas must be >= 1, got {self.max_replicas}"
+            )
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if not (self.svc_base >= 0.0 and math.isfinite(self.svc_base)):
+            raise ValueError(
+                f"svc_base must be finite >= 0, got {self.svc_base}"
+            )
+        if not (self.svc_per_req > 0.0 and math.isfinite(self.svc_per_req)):
+            raise ValueError(
+                f"svc_per_req must be finite > 0, got {self.svc_per_req}"
+            )
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous arrival rate (req/s) at time ``t``."""
+        if self.diurnal_amplitude == 0.0:
+            return self.rate
+        return self.rate * (
+            1.0
+            + self.diurnal_amplitude
+            * math.sin(
+                2.0 * math.pi * (t - self.start) / self.diurnal_period
+                + self.phase
+            )
+        )
+
+    def service_time(self, batch: int) -> float:
+        """Seconds one replica takes to serve a batch of ``batch``."""
+        return self.svc_base + self.svc_per_req * batch
+
+    def arrivals(self) -> Iterator[float]:
+        """Lazy time-ordered arrival timestamps (thinning sampler).
+
+        Candidate gaps are exponential at the peak rate
+        ``rate * (1 + amplitude)``; a candidate at ``t`` is kept when
+        ``u * peak <= rate_at(t)`` — the standard nonhomogeneous-Poisson
+        thinning, exact for the sinusoidal profile.  The acceptance
+        uniform is drawn for every candidate (amplitude 0 accepts all),
+        so enabling modulation never shifts the underlying draw
+        sequence.  Replayable: each call re-seeds from
+        ``(seed, stream_id)``.
+        """
+        import numpy as np
+
+        rng = np.random.default_rng([self.seed, self.stream_id])
+        peak = self.rate * (1.0 + self.diurnal_amplitude)
+        t = self.start
+        end = self.end
+        while True:
+            gaps = rng.exponential(1.0 / peak, _ARRIVAL_CHUNK)
+            us = rng.random(_ARRIVAL_CHUNK)
+            for gap, u in zip(gaps, us):
+                t += gap
+                if t >= end:
+                    return
+                if u * peak <= self.rate_at(t):
+                    yield t
+
+
+def request_stream_to_dict(rs: RequestStream) -> dict:
+    d: dict = {"kind": REQUEST_STREAM_KIND}
+    d.update({f: getattr(rs, f) for f in _STREAM_FIELDS})
+    return d
+
+
+def request_stream_from_dict(d: Mapping) -> RequestStream:
+    tag = d.get("kind")
+    if tag != REQUEST_STREAM_KIND:
+        raise ValueError(
+            f"unknown request-stream kind {tag!r} (schema "
+            f"{SCENARIO_SCHEMA_VERSION} knows [{REQUEST_STREAM_KIND!r}])"
+        )
+    unknown = set(d) - {"kind"} - set(_STREAM_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"request stream has unknown field(s) {sorted(unknown)}: {d!r}"
+        )
+    missing = [f for f in _STREAM_REQUIRED if f not in d]
+    if missing:
+        raise ValueError(
+            f"request stream missing required field(s) {missing}: {d!r}"
+        )
+    kwargs = {
+        "stream_id": int(d["stream_id"]),
+        "rate": float(d["rate"]),
+        "duration": float(d["duration"]),
+        "slo": float(d["slo"]),
+    }
+    for f in _STREAM_OPTIONAL:
+        if f in d:
+            kwargs[f] = (
+                int(d[f])
+                if f in ("gpus", "max_replicas", "max_batch", "seed")
+                else float(d[f])
+            )
+    return RequestStream(**kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -540,12 +754,18 @@ class Scenario:
     resident memory; per-job validation then happens as the simulator
     pulls arrivals.  Stream-backed scenarios do not serialize (see
     :meth:`to_dict` / :meth:`materialize`).
+
+    ``request_streams`` (schema v2, ISSUE 9) holds the serving
+    workloads co-scheduled with the jobs — stored sorted by
+    ``stream_id`` (ids must be unique), each validated against the
+    cluster (a replica must fit on one server).
     """
 
     jobs: Union[Tuple[JobSpec, ...], JobStream]
     cluster: ClusterSpec
     events: Tuple[ClusterEvent, ...] = ()
     name: str = ""
+    request_streams: Tuple[RequestStream, ...] = ()
 
     def __post_init__(self) -> None:
         if not isinstance(self.jobs, JobStream):
@@ -559,6 +779,23 @@ class Scenario:
                     f"{type(ev).__name__} targets server {ev.server}, "
                     f"cluster has {n}"
                 )
+        streams = tuple(
+            sorted(self.request_streams, key=lambda rs: rs.stream_id)
+        )
+        object.__setattr__(self, "request_streams", streams)
+        seen = set()
+        cap = self.cluster.gpus_per_server
+        for rs in streams:
+            if rs.stream_id in seen:
+                raise ValueError(
+                    f"duplicate request stream_id {rs.stream_id}"
+                )
+            seen.add(rs.stream_id)
+            if rs.gpus > cap:
+                raise ValueError(
+                    f"request stream {rs.stream_id} needs {rs.gpus} GPUs "
+                    f"per replica on one server; largest server has {cap}"
+                )
 
     def materialize(self) -> "Scenario":
         """Tuple-backed copy: pulls the whole stream into memory (O(jobs);
@@ -569,6 +806,7 @@ class Scenario:
         return Scenario(
             jobs=tuple(self.jobs), cluster=self.cluster,
             events=self.events, name=self.name,
+            request_streams=self.request_streams,
         )
 
     # -- serialization ------------------------------------------------------
@@ -580,26 +818,41 @@ class Scenario:
                 "are not resident); call .materialize() first, or keep "
                 "the workload as JSONL shards next to the scenario"
             )
-        return {
-            "schema": SCENARIO_SCHEMA_VERSION,
+        # request-stream-free scenarios serialize as version 1 with no
+        # "request_streams" key: every pre-serving document (the golden
+        # fixtures included) round-trips byte-identical
+        d = {
+            "schema": 2 if self.request_streams else 1,
             "name": self.name,
             "cluster": cluster_to_dict(self.cluster),
             "jobs": jobs_to_dicts(self.jobs),
             "events": [event_to_dict(ev) for ev in self.events],
         }
+        if self.request_streams:
+            d["request_streams"] = [
+                request_stream_to_dict(rs) for rs in self.request_streams
+            ]
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Scenario":
         version = d.get("schema")
-        if version != SCENARIO_SCHEMA_VERSION:
+        if version not in _READABLE_SCHEMAS:
             raise ValueError(
                 f"unsupported scenario schema {version!r} "
-                f"(this build reads {SCENARIO_SCHEMA_VERSION})"
+                f"(this build reads {_READABLE_SCHEMAS})"
             )
-        unknown = set(d) - {"schema", "name", "cluster", "jobs", "events"}
+        unknown = set(d) - {
+            "schema", "name", "cluster", "jobs", "events", "request_streams",
+        }
         if unknown:
             raise ValueError(
                 f"scenario has unknown section(s) {sorted(unknown)}"
+            )
+        if version < 2 and "request_streams" in d:
+            raise ValueError(
+                "request_streams requires scenario schema 2, document "
+                f"declares {version}"
             )
         try:
             cluster = d["cluster"]
@@ -613,6 +866,10 @@ class Scenario:
                 event_from_dict(ev) for ev in d.get("events", ())
             ),
             name=d.get("name", ""),
+            request_streams=tuple(
+                request_stream_from_dict(rs)
+                for rs in d.get("request_streams", ())
+            ),
         )
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -893,7 +1150,7 @@ def perturb_scenario(
         events.extend(p.sample_events(base, rng))
     return Scenario(
         jobs=jobs, cluster=base.cluster, events=tuple(events),
-        name=name or base.name,
+        name=name or base.name, request_streams=base.request_streams,
     )
 
 

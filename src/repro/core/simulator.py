@@ -68,6 +68,7 @@ import hashlib
 import heapq
 import itertools
 import math
+from collections import deque
 from dataclasses import dataclass, field
 from typing import (
     Dict,
@@ -219,7 +220,58 @@ class _PredCheck:
     epoch: int
 
 
+@dataclass(slots=True)
+class _ReqArrival:
+    """Internal event: the next request of one serving lane arrives.  One
+    live instance per lane rides the heap (re-pushed at the following
+    arrival time as each pops), so the heap stays bounded by live events
+    even for million-request streams.  Never reaches ``Policy.on_event``.
+    """
+
+    lane: int
+
+
+@dataclass(slots=True)
+class _BatchDone:
+    """Internal event: a serving replica finishes its in-flight batch.
+    The batch's request arrival times live on the lane (bounded by
+    ``max_batch * max_replicas``); latencies fold into the result's
+    bounded estimators at pop.  Never reaches ``Policy.on_event``."""
+
+    lane: int
+    replica: int
+
+
+@dataclass(slots=True)
+class _Resume:
+    """Checkpoint state of a preempted training job awaiting restart:
+    remaining iterations at eviction, the epoch its restarted completion
+    event must carry (old epoch + 1, so the stale pre-preemption
+    completion is dropped on pop), the ``pred_epoch`` to continue from
+    (same staleness argument for in-flight prediction checks), and the
+    original :class:`JobRecord` — a restart updates it in place, so
+    ``arrival`` and first ``start`` survive and the eviction counts as a
+    migration."""
+
+    iters_rem: float
+    epoch: int
+    pred_epoch: int
+    rec: "JobRecord"
+
+
 _DIGEST_MOD = 1 << 256
+
+# Flow-time quantiles the streaming backend tracks with bounded-memory
+# estimators (quantile.py) — the tail metrics the serving/prediction
+# gates read.  Exact (bit-identical to the materialized formula) while
+# the completed-job count fits the estimator buffer (8192), uniform-
+# reservoir approximate beyond.
+STREAM_FLOW_QUANTILES = (50.0, 95.0, 99.0)
+
+# Request-latency quantiles the serving lane tracks.  Request counts are
+# unbounded (million-request streams), so latencies always go through
+# the bounded estimators — even on materialized runs.
+SERVE_LAT_QUANTILES = (50.0, 99.0)
 
 
 def _record_digest(jid: int, r: JobRecord) -> int:
@@ -288,19 +340,79 @@ class SimResult:
     wall_s: float = 0.0
     n_jobs: int = 0
     # streaming aggregates (used when records is None): Shewchuk partial
-    # sums, running max, and the commutative digest accumulator
+    # sums, running max, the commutative digest accumulator, and
+    # bounded-memory flow-time quantile estimators (quantile.py)
     _flow_parts: List[float] = field(default_factory=list)
     _comp_parts: List[float] = field(default_factory=list)
     _max_completion: float = 0.0
     _digest_acc: int = 0
+    _flow_q: Optional[Dict[float, "StreamingQuantile"]] = None
+    # serving-lane aggregates (ISSUE 9): request counts/latencies fold at
+    # each batch completion (requests never materialize), training-job
+    # preemptions for serving replicas count here
+    n_requests: int = 0
+    n_slo_met: int = 0
+    n_preemptions: int = 0
+    _req_lat_parts: List[float] = field(default_factory=list)
+    _req_q: Optional[Dict[float, "StreamingQuantile"]] = None
+
+    def _fold_request(self, latency: float, slo: float) -> None:
+        """Stream one served request into the serving aggregates."""
+        self.n_requests += 1
+        if latency <= slo:
+            self.n_slo_met += 1
+        _msum_add(self._req_lat_parts, latency)
+        if self._req_q is None:
+            from .quantile import StreamingQuantile
+
+            self._req_q = {
+                q: StreamingQuantile(q) for q in SERVE_LAT_QUANTILES
+            }
+        for est in self._req_q.values():
+            est.add(latency)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of requests served within their stream's SLO (1.0 on
+        runs without requests — an empty serving lane violates nothing)."""
+        return self.n_slo_met / self.n_requests if self.n_requests else 1.0
+
+    @property
+    def mean_request_latency(self) -> float:
+        return math.fsum(self._req_lat_parts) / max(self.n_requests, 1)
+
+    def request_latency_percentile(self, q: float) -> float:
+        """Request-latency percentile over the tracked quantiles
+        (``SERVE_LAT_QUANTILES``: p50/p99), answered by the bounded
+        estimators — exact below the 8192-request buffer, uniform-
+        reservoir approximate beyond (quantile.py documents the bound).
+        0.0 on runs without requests; untracked quantiles raise."""
+        est = (self._req_q or {}).get(float(q))
+        if est is not None:
+            return est.value()
+        if self._req_q is None:
+            return 0.0
+        raise RuntimeError(
+            f"serving runs track only the {sorted(self._req_q)} request-"
+            f"latency percentiles; q={q} is not tracked"
+        )
 
     def _fold(self, jid: int, rec: JobRecord) -> None:
         """Stream one completed record into the aggregates (after this
         the record can be forgotten)."""
-        _msum_add(self._flow_parts, rec.completion - rec.arrival)
+        flow = rec.completion - rec.arrival
+        _msum_add(self._flow_parts, flow)
         _msum_add(self._comp_parts, rec.completion)
         if rec.completion > self._max_completion:
             self._max_completion = rec.completion
+        if self._flow_q is None:
+            from .quantile import StreamingQuantile
+
+            self._flow_q = {
+                q: StreamingQuantile(q) for q in STREAM_FLOW_QUANTILES
+            }
+        for est in self._flow_q.values():
+            est.add(flow)
         self._digest_acc = (
             self._digest_acc + _record_digest(jid, rec)
         ) % _DIGEST_MOD
@@ -337,14 +449,28 @@ class SimResult:
 
     def flow_percentile(self, q: float) -> float:
         """Per-job flow-time percentile (linear interpolation, numpy's
-        default definition) over the materialized records — the tail
-        statistic the prediction-robustness gate compares across
-        prediction regimes.  Streaming runs fold records away, so this
-        needs ``records``; use a materialized run for tail metrics."""
+        default definition).
+
+        Materialized runs sort the records exactly.  Streaming runs fold
+        records away, so the tracked quantiles (``STREAM_FLOW_QUANTILES``:
+        p50/p95/p99) are answered by bounded-memory estimators
+        (quantile.py): *exact and bit-identical* to this method's
+        materialized formula while the completed-job count fits the
+        estimator buffer (8192), uniform-reservoir approximate beyond
+        (documented bound: within ~10 % relative on heavy-tailed flows,
+        typically ~1 %).  Untracked quantiles on a streaming run
+        raise."""
         if self.records is None:
+            est = (self._flow_q or {}).get(float(q))
+            if est is not None:
+                return est.value()
+            if self._flow_q is None and self.n_jobs == 0:
+                return 0.0
             raise RuntimeError(
-                "flow_percentile needs materialized records; run with "
-                "stream=False"
+                f"streaming runs track only the "
+                f"{sorted(self._flow_q or STREAM_FLOW_QUANTILES)} flow "
+                f"percentiles; q={q} needs a materialized run "
+                f"(stream=False)"
             )
         if not self.records:
             return 0.0
@@ -547,6 +673,39 @@ class Policy:
         """
         return []
 
+    def plan_preemptions(
+        self,
+        t: float,
+        cluster: ClusterState,
+        candidates: List["_Running"],
+        gpus_needed: int,
+    ) -> List["_Running"]:
+        """Serving-lane preemption hook (ISSUE 9): a request stream needs
+        ``gpus_needed`` GPUs on one server for a replica and no server
+        has them free.  ``candidates`` are the running training jobs
+        (read-only views; dead-straddlers excluded).  Return victims in
+        eviction order — the simulator preempts one at a time (release,
+        ``on_preemption`` re-queue) and stops as soon as some server
+        fits the replica, so order the cheapest evictions first.
+        Unlike ``plan_migrations``, the policy must NOT release or
+        allocate here — the simulator owns the eviction.  The default
+        never preempts (request backlogs then wait for capacity).
+        """
+        return []
+
+    def on_preemption(self, t: float, job: JobSpec) -> None:
+        """A running job was evicted for a serving replica: re-queue it so
+        a later ``plan_pass`` restarts it (the simulator resumes its
+        remaining iterations after a checkpoint-restart penalty and
+        counts the restart as a migration on its record).  Any policy
+        returning victims from ``plan_preemptions`` must implement
+        this — a dropped job fails the end-of-run completeness check.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} returned preemption victims but does "
+            f"not implement on_preemption"
+        )
+
     def migration_queue_head(self, t: float) -> Optional[JobSpec]:
         """Head of the policy's ready queue (the next job a pass would
         start), or None.  Consulted by the queue-aware migration race
@@ -664,6 +823,255 @@ def _arrival_stream(src: JobStream, total_gpus: int):
         yield job
 
 
+class _ServeLane:
+    """Per-stream serving state: the lazy arrival iterator, the FIFO
+    backlog of arrival timestamps (memory ∝ current backlog, never the
+    stream length), and up to ``max_replicas`` replica slots (hosting
+    server, in-flight batch)."""
+
+    __slots__ = ("rs", "it", "queue", "servers", "batch", "idle",
+                 "exhausted")
+
+    def __init__(self, rs):
+        self.rs = rs
+        self.it = rs.arrivals()
+        self.queue: deque = deque()  # arrival times awaiting dispatch
+        self.servers: List[Optional[int]] = [None] * rs.max_replicas
+        self.batch: List[Optional[List[float]]] = [None] * rs.max_replicas
+        self.idle: List[int] = []  # allocated, no in-flight batch (sorted)
+        self.exhausted = False  # arrival iterator consumed
+
+
+class _ServeState:
+    """Runtime for the serving lanes of one simulation (ISSUE 9).
+
+    Requests and training jobs share the one :class:`ClusterState`:
+    replicas allocate real GPUs under reserved negative allocation ids
+    (job ids are >= 0), so every replica up scales training capacity
+    down and vice versa.  Per lane the driver batches the backlog onto
+    idle replicas (batch = min(backlog, max_batch); service time from
+    the stream's engine-calibrated curve), scales up — preempting
+    comm-heavy training jobs through ``Policy.plan_preemptions`` when no
+    server has room — while the projected queue-head latency exceeds
+    half the SLO, and releases idle replicas beyond the first back to
+    training (the last one once the lane drains).  Serve events trigger
+    a policy scheduling pass only when cluster capacity actually changed
+    — a million-request stream must not run a million passes.
+    """
+
+    def __init__(self, streams, cluster, policy, result, events, seq):
+        self.lanes = [_ServeLane(rs) for rs in streams]
+        self.cluster: ClusterState = cluster
+        self.policy = policy
+        self.result: SimResult = result
+        self.events = events  # the driver's heap (shared identity)
+        self.seq = seq
+        self.starved: set = set()  # lanes with a backlog and no replica
+        self.resume: Dict[int, _Resume] = {}  # preempted jobs awaiting restart
+        self.restart_penalty = float(
+            getattr(policy, "migration_penalty", 0.0)
+        )
+        self._preempt = getattr(policy, "plan_preemptions", None)
+        # bound by the driver once its registries exist (bind_runtime)
+        self.running: Dict[int, _Running] = {}
+        self.records: Dict[int, JobRecord] = {}
+        self.migration_watch: set = set()
+
+    def bind_runtime(self, running, records, migration_watch) -> None:
+        self.running = running
+        self.records = records
+        self.migration_watch = migration_watch
+
+    def prime(self) -> None:
+        """Arm one arrival event per lane (each re-arms the next on pop)."""
+        for li, lane in enumerate(self.lanes):
+            nxt = next(lane.it, None)
+            if nxt is None:
+                lane.exhausted = True
+            else:
+                heapq.heappush(
+                    self.events,
+                    (nxt, _CLUSTER, next(self.seq), _ReqArrival(li)),
+                )
+
+    def on_arrival(self, payload: _ReqArrival, t: float) -> bool:
+        lane = self.lanes[payload.lane]
+        lane.queue.append(t)
+        nxt = next(lane.it, None)
+        if nxt is None:
+            lane.exhausted = True
+        else:  # re-arm with the same payload object — one live per lane
+            heapq.heappush(
+                self.events, (nxt, _CLUSTER, next(self.seq), payload)
+            )
+        return self.dispatch(payload.lane, t)
+
+    def on_batch_done(self, payload: _BatchDone, t: float) -> bool:
+        lane = self.lanes[payload.lane]
+        fold = self.result._fold_request
+        slo = lane.rs.slo
+        for arr in lane.batch[payload.replica]:
+            fold(t - arr, slo)
+        lane.batch[payload.replica] = None
+        lane.idle.append(payload.replica)
+        lane.idle.sort()
+        changed = self.dispatch(payload.lane, t)
+        return self._scale_down(payload.lane, t) or changed
+
+    # -- dispatch -----------------------------------------------------------
+
+    def dispatch(self, li: int, t: float) -> bool:
+        """Feed idle replicas from the backlog; scale up when the backlog
+        threatens the SLO.  Returns True when cluster capacity changed
+        (the driver then runs a scheduling pass)."""
+        lane = self.lanes[li]
+        rs = lane.rs
+        changed = False
+        while True:
+            while lane.queue and lane.idle:
+                ridx = lane.idle.pop(0)
+                b = min(len(lane.queue), rs.max_batch)
+                batch = [lane.queue.popleft() for _ in range(b)]
+                lane.batch[ridx] = batch
+                heapq.heappush(
+                    self.events,
+                    (
+                        t + rs.service_time(b),
+                        _CLUSTER,
+                        next(self.seq),
+                        _BatchDone(li, ridx),
+                    ),
+                )
+            if not lane.queue:
+                self.starved.discard(li)
+                return changed
+            n_rep = sum(1 for s in lane.servers if s is not None)
+            if n_rep >= rs.max_replicas or not self._want_scale(
+                lane, t, n_rep
+            ):
+                self.starved.discard(li)
+                return changed
+            server = self._find_server(rs.gpus)
+            if server is None and self._preempt is not None:
+                server = self._preempt_for(t, rs.gpus)
+                if server is not None:
+                    changed = True
+            if server is None:
+                # no capacity even after preemption: the backlog waits;
+                # re-tried while starved at every live timestamp (training
+                # completions free capacity without a serve event)
+                if n_rep == 0:
+                    self.starved.add(li)
+                return changed
+            ridx = lane.servers.index(None)
+            self.cluster.allocate(
+                self._aid(li, ridx), {}, counts={server: rs.gpus}
+            )
+            lane.servers[ridx] = server
+            lane.idle.append(ridx)
+            lane.idle.sort()
+            changed = True
+            # loop: the fresh replica takes a batch immediately
+
+    def _aid(self, li: int, ridx: int) -> int:
+        """Reserved allocation id for replica ``ridx`` of lane ``li`` —
+        negative, so it can never collide with a job id (>= 0)."""
+        return -1 - (li * self.lanes[li].rs.max_replicas + ridx)
+
+    def _want_scale(self, lane: _ServeLane, t: float, n_rep: int) -> bool:
+        """Scale-up trigger: projected queue-head latency (elapsed wait +
+        full-batch rounds to drain the backlog at current width) beyond
+        half the SLO — the half leaves the service time itself headroom."""
+        if n_rep == 0:
+            return True
+        rs = lane.rs
+        batches = -(-len(lane.queue) // rs.max_batch)  # ceil
+        rounds = -(-batches // n_rep)  # ceil
+        est = (t - lane.queue[0]) + rounds * rs.service_time(rs.max_batch)
+        return est > 0.5 * rs.slo
+
+    def _find_server(self, gpus: int) -> Optional[int]:
+        """Most-free active server with >= ``gpus`` free (lowest id on
+        ties) — consolidation would fragment training's multi-server
+        placements for no serving benefit."""
+        fb = self.cluster.free_buckets
+        for c in range(len(fb) - 1, gpus - 1, -1):
+            if fb[c]:
+                return fb[c][0]
+        return None
+
+    def _preempt_for(self, t: float, gpus: int) -> Optional[int]:
+        """Ask the policy for training victims and evict until a server
+        fits a replica.  Victims are brought to ``t``, released, and
+        re-queued via ``on_preemption``; their checkpoint
+        (:class:`_Resume`) restarts them through a later ``plan_pass``.
+        Returns the server that now fits, or None."""
+        running = self.running
+        if not running:
+            return None
+        down = self.cluster.downed_servers
+        candidates = [
+            r for r in running.values() if down.isdisjoint(r.placement)
+        ]
+        if not candidates:
+            return None
+        victims = self._preempt(t, self.cluster, candidates, gpus)
+        server = None
+        for r in victims:
+            jid = r.job.job_id
+            if jid not in running:
+                continue
+            if t > r.since:
+                el = (t - r.since) / r.alpha
+                r.iters_rem -= el
+                if r.iters_rem < 0.0:
+                    r.iters_rem = 0.0
+                if r.pred_rem is not None:
+                    r.pred_rem -= el
+                    if r.pred_rem < 0.0:
+                        r.pred_rem = 0.0
+                r.since = t
+            # epoch + 1 turns the in-heap completion stale; pred_epoch
+            # carries over so stale prediction checks stay stale too
+            self.resume[jid] = _Resume(
+                r.iters_rem, r.epoch + 1, r.pred_epoch, self.records[jid]
+            )
+            self.cluster.release(jid)
+            del running[jid]
+            self.migration_watch.discard(jid)
+            self.result.n_preemptions += 1
+            self.policy.on_preemption(t, r.job)
+            server = self._find_server(gpus)
+            if server is not None:
+                break
+        return server
+
+    def _scale_down(self, li: int, t: float) -> bool:
+        """Release idle replicas beyond the first immediately; keep the
+        last while the lane can still produce work (no alloc/release per
+        lull), release it too once the lane drains."""
+        lane = self.lanes[li]
+        changed = False
+        drained = (
+            lane.exhausted
+            and not lane.queue
+            and all(b is None for b in lane.batch)
+        )
+        while lane.idle:
+            n_rep = sum(1 for s in lane.servers if s is not None)
+            if n_rep > 1 or drained:
+                ridx = lane.idle.pop()
+                self.cluster.release(self._aid(li, ridx))
+                lane.servers[ridx] = None
+                changed = True
+            else:
+                break
+        return changed
+
+    def unserved(self) -> int:
+        return sum(len(lane.queue) for lane in self.lanes)
+
+
 def _simulate_scenario(
     scenario: Scenario,
     policy: Policy,
@@ -731,6 +1139,11 @@ def _simulate_scenario(
     # completion checks live on _Running.pred_rem.
     track_overruns = bool(getattr(policy, "track_overruns", False))
     track_running = track_overruns
+    # Serving lanes (ISSUE 9): request streams need the running-job
+    # registry — preemption victims come from it.
+    streams = scenario.request_streams
+    if streams:
+        track_running = True
     offer_migrations = False
     for ev in scenario.events:
         events.append((ev.t, _CLUSTER, next(seq), ev))
@@ -770,6 +1183,12 @@ def _simulate_scenario(
     wake_time: Optional[float] = None
     # Per-server drain generation (see _DrainDeadline).
     drain_gen: Dict[int, int] = {}
+
+    serve: Optional[_ServeState] = None
+    if streams:
+        serve = _ServeState(streams, cluster, policy, result, events, seq)
+        serve.bind_runtime(running, records, migration_watch)
+        serve.prime()
 
     heappop, heappush = heapq.heappop, heapq.heappush
     # Canonical pass entry is ``plan_pass``; a pre-protocol subclass that
@@ -855,6 +1274,17 @@ def _simulate_scenario(
                 live = True
             elif kind == _CLUSTER:
                 ev_kind = type(payload)
+                if ev_kind is _ReqArrival:
+                    # internal serve event: live only when cluster capacity
+                    # changed (a million-request stream must not force a
+                    # million scheduling passes)
+                    if serve.on_arrival(payload, t):
+                        live = True
+                    continue
+                if ev_kind is _BatchDone:
+                    if serve.on_batch_done(payload, t):
+                        live = True
+                    continue
                 if ev_kind is _PredCheck:
                     # A watched job reached its predicted completion while
                     # still running: bring the bookkeeping to t, ask the
@@ -981,6 +1411,14 @@ def _simulate_scenario(
                 # else: superseded wake — ignore.
         if not live:
             continue
+
+        if serve is not None and serve.starved:
+            # replica-less backlogs retry on any live timestamp: training
+            # completions free capacity without raising a serve event, and
+            # the replica must claim GPUs before the scheduling pass below
+            # hands them to queued training jobs
+            for li in sorted(serve.starved):
+                serve.dispatch(li, t)
 
         if downed and migration_watch:
             # A job whose placement touches a *dead* server can never
@@ -1118,25 +1556,52 @@ def _simulate_scenario(
             job = start.job
             if validate:
                 timing.validate_placement(job, start.placement)
-            completion = t + job.n_iters * start.alpha
-            records[job.job_id] = JobRecord(
-                arrival=job.arrival,
-                start=t,
-                completion=completion,
-                alpha=start.alpha,
-                # placements never carry empty per-server vectors, so the
-                # touched servers are exactly the placement keys
-                servers=tuple(sorted(start.placement)),
+            res = (
+                serve.resume.pop(job.job_id, None)
+                if serve is not None and serve.resume
+                else None
             )
+            if res is None:
+                ep = 0
+                iters = float(job.n_iters)
+                since = t
+                completion = t + job.n_iters * start.alpha
+                records[job.job_id] = JobRecord(
+                    arrival=job.arrival,
+                    start=t,
+                    completion=completion,
+                    alpha=start.alpha,
+                    # placements never carry empty per-server vectors, so
+                    # the touched servers are exactly the placement keys
+                    servers=tuple(sorted(start.placement)),
+                )
+            else:
+                # preemption restart: remaining iterations resume after
+                # the checkpoint-restart downtime; the original record
+                # keeps its first start and counts the restart as a
+                # migration.  The carried epoch outdates the stale
+                # pre-preemption completion still in the heap.
+                ep = res.epoch
+                iters = res.iters_rem
+                since = t + serve.restart_penalty
+                completion = since + iters * start.alpha
+                rec = res.rec
+                rec.alpha = start.alpha
+                rec.completion = completion
+                rec.servers = tuple(sorted(start.placement))
+                rec.migrations += 1
+                records[job.job_id] = rec
             if track_running:
                 n_pred = start.n_pred
                 running[job.job_id] = r = _Running(
                     job=job,
                     placement=start.placement,
                     alpha=start.alpha,
-                    iters_rem=float(job.n_iters),
-                    since=t,
+                    iters_rem=iters,
+                    since=since,
+                    epoch=ep,
                     pred_rem=(None if n_pred is None else float(n_pred)),
+                    pred_epoch=(0 if res is None else res.pred_epoch),
                 )
                 if r.pred_rem is not None:
                     # arm the predicted-completion watch; a 0-predicted
@@ -1154,7 +1619,7 @@ def _simulate_scenario(
                     sp = cluster.speed_factors
                     if sp and not sp.keys().isdisjoint(start.placement):
                         migration_watch.add(job.job_id)
-            heappush(events, (completion, _COMPLETION, next(seq), (job, 0)))
+            heappush(events, (completion, _COMPLETION, next(seq), (job, ep)))
         n_passes += 1
         depth = queue_depth()
         if depth > peak_depth:
@@ -1169,6 +1634,12 @@ def _simulate_scenario(
     if n_completed != n_arrived:
         missing = n_arrived - n_completed
         raise RuntimeError(f"simulation ended with {missing} unfinished jobs")
+    if serve is not None and serve.unserved():
+        raise RuntimeError(
+            f"simulation ended with {serve.unserved()} unserved requests "
+            f"(no replica could ever be placed — check stream gpus vs "
+            f"cluster capacity)"
+        )
     result.n_jobs = n_completed
     result.n_events = n_events
     result.n_sched_passes = n_passes

@@ -91,17 +91,21 @@ def init_attention(key: jax.Array, cfg: ArchConfig) -> Params:
 
 
 def _mask_bias(
-    q_pos: jnp.ndarray,  # [Sq]
+    q_pos: jnp.ndarray,  # [Sq] shared, or [B,Sq] per-row
     kv_pos: jnp.ndarray,  # [T]
     causal: bool,
     window: Optional[int],
 ) -> jnp.ndarray:
-    """Additive mask [Sq, T] (0 = attend, -inf = blocked)."""
-    ok = kv_pos[None, :] >= 0  # ring-buffer slots not yet written carry -1
+    """Additive mask (0 = attend, -inf = blocked): [Sq, T] for shared
+    positions, [B, Sq, T] when each batch row queries its own position
+    (batched serving decode)."""
+    qp = q_pos[..., :, None]  # [Sq,1] or [B,Sq,1]
+    # ring-buffer slots not yet written carry -1
+    ok = jnp.broadcast_to(kv_pos >= 0, qp.shape[:-1] + kv_pos.shape)
     if causal:
-        ok &= kv_pos[None, :] <= q_pos[:, None]
+        ok = ok & (kv_pos <= qp)
     if window is not None:
-        ok &= kv_pos[None, :] > q_pos[:, None] - window
+        ok = ok & (kv_pos > qp - window)
     return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
 
 
@@ -109,13 +113,15 @@ def _attend_dense(
     q: jnp.ndarray,  # [B,Sq,G,Hg,K]
     k: jnp.ndarray,  # [B,T,G,K]
     v: jnp.ndarray,
-    bias: jnp.ndarray,  # [Sq,T]
+    bias: jnp.ndarray,  # [Sq,T] or [B,Sq,T]
 ) -> jnp.ndarray:
     scale = q.shape[-1] ** -0.5
+    if bias.ndim == 2:
+        bias = bias[None]
     scores = jnp.einsum(
         "bsghk,btgk->bghst", q, k, preferred_element_type=jnp.float32
     )
-    scores = scores * scale + bias[None, None, None, :, :]
+    scores = scores * scale + bias[:, None, None, :, :]
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(
         "bghst,btgk->bsghk",
@@ -130,7 +136,7 @@ def multi_head_attention(
     q: jnp.ndarray,  # [B,Sq,H,K]
     k: jnp.ndarray,  # [B,T,G,K]
     v: jnp.ndarray,  # [B,T,G,K]
-    q_pos: jnp.ndarray,  # [Sq] absolute positions of the queries
+    q_pos: jnp.ndarray,  # [Sq] (or [B,Sq] per-row) query positions
     kv_pos: jnp.ndarray,  # [T]  absolute positions of the keys (-1 = empty)
     causal: bool,
     window: Optional[int],
@@ -150,6 +156,7 @@ def multi_head_attention(
         out = _attend_dense(qg, k, v, bias)
         return out.reshape(B, Sq, H, K)
 
+    assert q_pos.ndim == 1, "streaming path is prefill-only (shared q_pos)"
     n_chunks = Sq // STREAM_CHUNK
     assert Sq % STREAM_CHUNK == 0, "query length must divide STREAM_CHUNK"
     qg_c = qg.reshape(B, n_chunks, STREAM_CHUNK, G, H // G, K)
@@ -198,7 +205,29 @@ def apply_attention(
     if cache is not None:
         W = cache["k"].shape[1]  # buffer length (ring if SWA)
         S = k.shape[1]
-        if S >= W:
+        if cache_index is not None and cache_index.ndim == 1:
+            # Per-row decode (batched serving: rows at different depths in
+            # one batch).  Each row writes its single new k/v at its own
+            # slot; the shared ``pos`` leaf stays consistent because with
+            # no sliding window slot == absolute position for every row,
+            # and different rows writing the same slot write the same
+            # position value.  Ring wrap breaks that invariant, so the
+            # serving engine rejects SWA configs up front.
+            assert window is None, (
+                "per-row cache positions require sliding_window=None"
+            )
+            slots = cache_index.astype(jnp.int32)  # [B]
+            bidx = jnp.arange(k.shape[0])
+            ck = cache["k"].at[bidx, slots].set(
+                k[:, 0].astype(cache["k"].dtype)
+            )
+            cv = cache["v"].at[bidx, slots].set(
+                v[:, 0].astype(cache["v"].dtype)
+            )
+            cpos = cache["pos"].at[0, slots].set(
+                q_pos[:, 0].astype(jnp.int32)
+            )
+        elif S >= W:
             # Prefill overflowing a ring buffer: keep the last W entries.
             # Ring-slot invariant (slot == pos % W) needs S % W == 0.
             assert S % W == 0, "SWA prefill length must be a multiple of W"

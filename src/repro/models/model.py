@@ -287,14 +287,19 @@ class Model:
         params: Params,
         cache: Params,
         tokens: jnp.ndarray,  # [B,1]
-        pos: jnp.ndarray,  # scalar i32: absolute position of this token
+        pos: jnp.ndarray,  # scalar i32 (shared) or [B] i32 (per-row)
     ) -> Tuple[jnp.ndarray, Params]:
+        """One decode step.  ``pos`` is the absolute position of this
+        token: a scalar when the whole batch decodes in lockstep, or a
+        per-row ``[B]`` vector when rows sit at different depths (the
+        batched serving engine's continuous-refill loop)."""
         cfg = self.cfg
         h = L.embed_tokens(params["embed"], tokens)
-        q_pos = pos[None].astype(jnp.int32)
+        pos = pos.astype(jnp.int32)
+        q_pos = pos[None] if pos.ndim == 0 else pos[:, None]
         h, new_cache, _ = self._backbone(
             params, h, q_pos,
-            cache=cache, cache_index=pos.astype(jnp.int32),
+            cache=cache, cache_index=pos,
             self_attend=False, decode=True,
         )
         h = L.rms_norm(h, params["final_norm"])

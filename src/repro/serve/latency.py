@@ -1,0 +1,143 @@
+"""Batched-serving latency curve: the timing bridge engine -> simulator.
+
+The scheduling stack prices a serving replica's work with an affine
+per-decode-step cost ``base + per_req * batch`` — the shape a batched
+transformer decode actually has (a fixed per-step launch/readback floor
+plus a per-row cost while the batch stays under the arithmetic-intensity
+knee).  :func:`calibrate` measures that curve from a live
+:class:`~repro.serve.engine.ServeEngine` (timed decode steps at several
+batch sizes, least-squares fit), so the simulator's request lane runs on
+an engine-derived curve, not an invented constant.
+
+``DEFAULT_SERVE_MODEL`` is the committed calibration artifact (see the
+constants' comment for provenance) — the default service-time curve a
+:class:`~repro.core.scenario.RequestStream` carries when the scenario
+author doesn't override it.  Like the benchmark baselines it is refreshed
+by re-running the calibration, not edited by hand.
+
+This module is importable without jax (the scheduling stack and the
+numpy-only CI serve gate read the committed curve); only
+:func:`calibrate` touches the engine.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BatchLatencyModel:
+    """Affine decode-step latency: ``step_time(b) = base + per_req * b``.
+
+    ``base``/``per_req`` are seconds per decode *step*; a request costs
+    ``tokens_per_request`` steps, so a batch of ``b`` requests occupies
+    its replica for ``service_time(b) = tokens_per_request * step_time(b)``
+    seconds and sustains ``throughput(b) = b / service_time(b)``
+    requests/s.
+    """
+
+    base: float
+    per_req: float
+    tokens_per_request: int = 32
+
+    def __post_init__(self) -> None:
+        if not (self.base >= 0.0 and math.isfinite(self.base)):
+            raise ValueError(f"base must be finite >= 0, got {self.base}")
+        if not (self.per_req > 0.0 and math.isfinite(self.per_req)):
+            raise ValueError(
+                f"per_req must be finite > 0, got {self.per_req}"
+            )
+        if self.tokens_per_request < 1:
+            raise ValueError(
+                f"tokens_per_request must be >= 1, got "
+                f"{self.tokens_per_request}"
+            )
+
+    def step_time(self, batch: int) -> float:
+        """Seconds for one decode step over a batch of ``batch`` rows."""
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        return self.base + self.per_req * batch
+
+    def service_time(self, batch: int) -> float:
+        """Seconds to serve a batch of ``batch`` requests to completion."""
+        return self.tokens_per_request * self.step_time(batch)
+
+    def throughput(self, batch: int) -> float:
+        """Sustained requests/s of one replica at batch size ``batch``."""
+        return batch / self.service_time(batch)
+
+    @property
+    def batch_base(self) -> float:
+        """Per-batch fixed cost in seconds (the RequestStream ``svc_base``
+        default): the step floor over a full request's decode."""
+        return self.tokens_per_request * self.base
+
+    @property
+    def batch_per_req(self) -> float:
+        """Per-request marginal cost in seconds (``svc_per_req``)."""
+        return self.tokens_per_request * self.per_req
+
+
+def calibrate(
+    engine,
+    batch_sizes: Sequence[int] = (1, 8, 32, 128),
+    steps: int = 24,
+    tokens_per_request: int = 32,
+) -> BatchLatencyModel:
+    """Fit the affine decode-step curve from a live ``ServeEngine``.
+
+    For each batch size: build a fresh cache, run one untimed decode step
+    (jit compile for that batch shape), then time ``steps`` further steps
+    and take the mean.  The (batch, latency) samples are least-squares
+    fit to ``base + per_req * batch``; a fit driven under the noise floor
+    is clamped so the curve stays increasing.  ``engine.max_len`` must
+    exceed ``steps`` (every step writes the next cache slot).
+    """
+    import jax.numpy as jnp  # deferred: only calibration needs the engine
+
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if engine.max_len <= steps:
+        raise ValueError(
+            f"max_len={engine.max_len} must exceed steps={steps}"
+        )
+    lat = []
+    dt = engine._cache_dtype()
+    for b in batch_sizes:
+        cache = engine.model.init_cache(b, engine.max_len, dtype=dt)
+        tok = jnp.zeros((b, 1), jnp.int32)
+        logits, cache = engine._decode(
+            engine.params, cache, tok, jnp.zeros(b, jnp.int32)
+        )
+        logits.block_until_ready()  # compile outside the timed window
+        t0 = time.perf_counter()
+        for i in range(1, steps + 1):
+            logits, cache = engine._decode(
+                engine.params, cache, tok, jnp.full((b,), i, jnp.int32)
+            )
+        logits.block_until_ready()
+        lat.append((time.perf_counter() - t0) / steps)
+    bs = np.asarray(batch_sizes, dtype=np.float64)
+    ys = np.asarray(lat, dtype=np.float64)
+    design = np.stack([np.ones_like(bs), bs], axis=1)
+    (base, per_req), *_ = np.linalg.lstsq(design, ys, rcond=None)
+    return BatchLatencyModel(
+        base=max(float(base), 0.0),
+        per_req=max(float(per_req), 1e-9),
+        tokens_per_request=tokens_per_request,
+    )
+
+
+# Committed calibration artifact: `calibrate(ServeEngine(reduced_config(
+# "deepseek-7b"), params, max_len=64))` on the reference container (CPU
+# jax, reduced config) — measured base=4.21e-4, per_req=4.43e-5.
+# Refresh by re-running the calibration (see benchmarks/README.md,
+# "--serve"), not by hand-editing.
+DEFAULT_SERVE_MODEL = BatchLatencyModel(
+    base=4.2e-4, per_req=4.4e-5, tokens_per_request=32
+)

@@ -1,0 +1,102 @@
+"""Streaming quantiles (ISSUE 9 satellite): exact-below-cap bit-identity
+with the materialized percentile, P² accuracy within the documented
+bound, and the streaming SimResult's tracked p50/p95/p99."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.sched
+
+from repro.core import (  # noqa: E402
+    ASRPTPolicy,
+    ClusterSpec,
+    STREAM_FLOW_QUANTILES,
+    StreamingQuantile,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    simulate,
+)
+
+
+def _exact_percentile(values, q):
+    """flow_percentile's linear-interpolation formula."""
+    flows = sorted(values)
+    if not flows:
+        return 0.0
+    if len(flows) == 1:
+        return flows[0]
+    pos = (q / 100.0) * (len(flows) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(flows) - 1)
+    return flows[lo] + (pos - lo) * (flows[hi] - flows[lo])
+
+
+@pytest.mark.parametrize("q", [0.0, 50.0, 95.0, 99.0, 100.0])
+def test_exact_mode_bit_identical(q):
+    rng = np.random.default_rng(7)
+    data = [float(x) for x in rng.lognormal(2.0, 1.3, 300)]
+    est = StreamingQuantile(q)
+    for x in data:
+        est.add(x)
+    assert est.exact
+    assert est.value() == _exact_percentile(data, q)
+
+
+@pytest.mark.parametrize("sigma", [0.8, 1.6])
+@pytest.mark.parametrize("q", [50.0, 95.0, 99.0])
+def test_reservoir_within_documented_bound(sigma, q):
+    """Heavy-tailed lognormal at 50k observations: <= 10 % relative error
+    (the documented bound; typically well under 5 %)."""
+    rng = np.random.default_rng(11)
+    data = rng.lognormal(4.0, sigma, 50_000)
+    est = StreamingQuantile(q)
+    for x in data:
+        est.add(float(x))
+    assert not est.exact
+    exact = _exact_percentile([float(x) for x in data], q)
+    assert abs(est.value() - exact) / exact <= 0.10
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="quantile"):
+        StreamingQuantile(101.0)
+    with pytest.raises(ValueError, match="exact_cap"):
+        StreamingQuantile(99.0, exact_cap=0)
+    assert StreamingQuantile(99.0).value() == 0.0  # empty stream
+
+
+def _run(n_jobs, stream):
+    jobs = generate_trace(
+        TraceConfig(n_jobs=n_jobs, horizon=n_jobs * 12.0, seed=5)
+    )
+    pol = ASRPTPolicy(make_predictor("mean"), tau=2.0)
+    cluster = ClusterSpec(
+        num_servers=8, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+    return simulate(jobs, cluster, pol, validate=False, stream=stream)
+
+
+def test_streaming_simresult_small_run_exact():
+    """Runs that fit the estimator buffer: streaming flow_percentile ==
+    materialized, bit for bit."""
+    mat = _run(200, stream=False)
+    stm = _run(200, stream=True)
+    for q in STREAM_FLOW_QUANTILES:
+        assert stm.flow_percentile(q) == mat.flow_percentile(q)
+
+
+def test_streaming_simresult_large_run_within_bound():
+    """Past the buffer (8192 jobs) the reservoir estimate must stay
+    within the documented 10 % bound of the exact percentile — on the
+    simulator's own trending (queue ramp-up) flow distribution."""
+    mat = _run(12_000, stream=False)
+    stm = _run(12_000, stream=True)
+    for q in STREAM_FLOW_QUANTILES:
+        exact = mat.flow_percentile(q)
+        assert abs(stm.flow_percentile(q) - exact) / exact <= 0.10
+
+
+def test_streaming_untracked_quantile_raises():
+    stm = _run(50, stream=True)
+    with pytest.raises(RuntimeError, match="track only"):
+        stm.flow_percentile(12.5)

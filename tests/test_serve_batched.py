@@ -1,0 +1,95 @@
+"""Batched-serving correctness: batch isolation, budgets, EOS, refill.
+
+The headline property (ISSUE 9 satellite): a request's greedy output is
+bit-identical whether it is served alone or batched with arbitrary
+batch-mates of different prompt lengths — the old left-pad prefill leaked
+pad positions across rows, so outputs depended on batch composition.
+"""
+import jax
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(arch="deepseek-7b", **kw):
+    cfg = reduced_config(arch)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params, ServeEngine(cfg, params, max_len=64, **kw)
+
+
+PROMPTS = [[5, 6, 7], [9, 10, 11, 2, 5, 3, 8], [7], [1, 2, 3, 4]]
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mamba2-370m"])
+def test_solo_vs_batched_bit_identical(arch):
+    cfg, params, eng = _engine(arch)
+    solo = {}
+    for i, p in enumerate(PROMPTS):
+        out = ServeEngine(cfg, params, max_len=64).generate(
+            [Request(i, list(p), max_new_tokens=6)]
+        )
+        solo.update(out)
+    batched = eng.generate(
+        [Request(i, list(p), max_new_tokens=6) for i, p in enumerate(PROMPTS)]
+    )
+    assert batched == solo
+
+
+def test_continuous_refill_matches_solo():
+    """batch_size < n_requests: retired rows are refilled from the pending
+    queue (the docstring's promise), and refill leaves outputs solo-exact."""
+    cfg, params, eng = _engine(batch_size=2)
+    reqs = [
+        Request(i, list(p), max_new_tokens=4 + i)
+        for i, p in enumerate(PROMPTS)
+    ]
+    batched = eng.generate(reqs)
+    assert all(r.done for r in reqs)
+    for i, p in enumerate(PROMPTS):
+        out = ServeEngine(cfg, params, max_len=64).generate(
+            [Request(i, list(p), max_new_tokens=4 + i)]
+        )
+        assert batched[i] == out[i]
+
+
+def test_over_budget_raises_by_default():
+    _, _, eng = _engine()
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.generate([Request(0, [1] * 60, max_new_tokens=10)])
+    with pytest.raises(ValueError, match="no room to generate"):
+        eng.generate([Request(0, [1] * 64, max_new_tokens=1)])
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate([Request(0, [], max_new_tokens=1)])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate([Request(0, [1], max_new_tokens=0)])
+
+
+def test_overflow_truncate_marks_request():
+    _, _, eng = _engine(overflow="truncate")
+    r = Request(0, [1] * 60, max_new_tokens=10)
+    out = eng.generate([r])
+    assert r.truncated and r.done
+    assert len(out[0]) == 4  # 64 - 60: capped, not silently short
+
+
+def test_eos_terminates_and_is_excluded():
+    cfg, params, _ = _engine()
+    base = ServeEngine(cfg, params, max_len=64).generate(
+        [Request(0, [5, 6, 7], max_new_tokens=8)]
+    )[0]
+    assert len(base) == 8
+    eos = base[3]
+    cut = base.index(eos)  # first greedy occurrence
+    r = Request(0, [5, 6, 7], max_new_tokens=8)
+    out = ServeEngine(cfg, params, max_len=64, eos_id=eos).generate([r])
+    assert out[0] == base[:cut]  # EOS consumed, never returned
+    assert r.done
+
+
+def test_sliding_window_config_rejected():
+    cfg = reduced_config("h2o-danube-3-4b", sliding_window=16)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="sliding_window"):
+        ServeEngine(cfg, params, max_len=64)

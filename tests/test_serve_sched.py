@@ -1,0 +1,415 @@
+"""Serving workloads on the event stream (ISSUE 9).
+
+Covers the scheduling half of the serving stack: the schema-v2
+``RequestStream`` (strict round-trip serialization), the serving
+metrics (``slo_attainment``, request-latency percentiles on the
+bounded estimators, training interference), SLO-bound scale-ups
+preempting comm-heavy training jobs end to end, and — the safety rail
+for everything that already works — byte-identity of all ten golden
+schedules, which carry no request streams and therefore must not see
+the serve lane at all.  The batched-serving *engine* correctness sweep
+lives in tests/test_serve_batched.py; the CI gate regime in
+benchmarks/sched_scale.py (``--serve``).
+"""
+import json
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.sched
+
+from repro.core import (  # noqa: E402
+    ASRPTPolicy,
+    ClusterSpec,
+    RequestStream,
+    Scenario,
+    TraceConfig,
+    generate_trace,
+    make_predictor,
+    request_stream_from_dict,
+    request_stream_to_dict,
+    simulate,
+)
+from repro.core.simulator import SERVE_LAT_QUANTILES, SimResult  # noqa: E402
+from repro.serve.latency import (  # noqa: E402
+    BatchLatencyModel,
+    DEFAULT_SERVE_MODEL,
+)
+
+# pytest inserts the tests dir on sys.path (no tests/__init__.py)
+from test_golden import SCENARIOS, load_jobs, run_scenario  # noqa: E402
+
+sched_scale = pytest.importorskip(
+    "benchmarks.sched_scale",
+    reason="benchmarks namespace package needs the repo root on sys.path",
+)
+
+
+def _stream(**kw):
+    base = dict(stream_id=0, rate=100.0, duration=60.0, slo=0.5)
+    base.update(kw)
+    return RequestStream(**base)
+
+
+def _cluster():
+    return ClusterSpec(
+        num_servers=3, gpus_per_server=8, b_inter=1.25e9, b_intra=300e9
+    )
+
+
+def _pol():
+    return ASRPTPolicy(make_predictor("mean"), tau=2.0, refine_mapping=False)
+
+
+# ---------------------------------------------------------------------------
+# schema: round-trip + strict deserialization
+# ---------------------------------------------------------------------------
+
+
+def test_request_stream_roundtrip():
+    rs = _stream(
+        start=12.5, diurnal_amplitude=0.4, diurnal_period=3600.0,
+        phase=0.3, gpus=4, max_replicas=3, max_batch=16,
+        svc_base=0.02, svc_per_req=0.002, seed=7,
+    )
+    assert request_stream_from_dict(request_stream_to_dict(rs)) == rs
+
+
+def test_request_stream_dict_is_json_stable():
+    d = request_stream_to_dict(_stream())
+    assert request_stream_from_dict(json.loads(json.dumps(d))) == _stream()
+
+
+def test_request_stream_rejects_unknown_kind():
+    d = request_stream_to_dict(_stream())
+    d["kind"] = "mystery-stream"
+    with pytest.raises(ValueError, match="unknown request-stream kind"):
+        request_stream_from_dict(d)
+
+
+def test_request_stream_rejects_unknown_field():
+    d = request_stream_to_dict(_stream())
+    d["qps_target"] = 10.0
+    with pytest.raises(ValueError, match="qps_target"):
+        request_stream_from_dict(d)
+
+
+def test_request_stream_rejects_missing_required():
+    d = request_stream_to_dict(_stream())
+    del d["slo"]
+    with pytest.raises(ValueError, match="slo"):
+        request_stream_from_dict(d)
+
+
+def test_scenario_with_streams_serializes_as_schema_2():
+    sc = Scenario(jobs=(), cluster=_cluster(), request_streams=(_stream(),))
+    d = sc.to_dict()
+    assert d["schema"] == 2
+    assert len(d["request_streams"]) == 1
+    assert Scenario.from_dict(d) == sc
+
+
+def test_request_free_scenario_stays_schema_1():
+    """No streams -> the document is byte-compatible with every schema-1
+    reader: version 1, no request_streams key at all."""
+    d = Scenario(jobs=(), cluster=_cluster()).to_dict()
+    assert d["schema"] == 1
+    assert "request_streams" not in d
+
+
+def test_streams_under_schema_1_rejected():
+    d = Scenario(
+        jobs=(), cluster=_cluster(), request_streams=(_stream(),)
+    ).to_dict()
+    d["schema"] = 1
+    with pytest.raises(ValueError, match="schema 2"):
+        Scenario.from_dict(d)
+
+
+def test_duplicate_stream_ids_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        Scenario(
+            jobs=(), cluster=_cluster(),
+            request_streams=(_stream(), _stream(rate=5.0)),
+        )
+
+
+def test_replica_must_fit_one_server():
+    with pytest.raises(ValueError, match="largest server"):
+        Scenario(
+            jobs=(), cluster=_cluster(),
+            request_streams=(_stream(gpus=9),),
+        )
+
+
+def test_default_service_curve_is_the_committed_calibration():
+    rs = _stream()
+    assert rs.svc_base == DEFAULT_SERVE_MODEL.batch_base
+    assert rs.svc_per_req == DEFAULT_SERVE_MODEL.batch_per_req
+    b = rs.max_batch
+    assert rs.service_time(b) == pytest.approx(
+        DEFAULT_SERVE_MODEL.service_time(b)
+    )
+
+
+def test_latency_model_validation():
+    with pytest.raises(ValueError, match="per_req"):
+        BatchLatencyModel(base=0.1, per_req=0.0)
+    with pytest.raises(ValueError, match="base"):
+        BatchLatencyModel(base=-1.0, per_req=0.1)
+    with pytest.raises(ValueError, match="batch"):
+        DEFAULT_SERVE_MODEL.step_time(0)
+
+
+def test_arrivals_replayable_and_bounded():
+    rs = _stream(
+        start=10.0, duration=50.0, diurnal_amplitude=0.8,
+        diurnal_period=50.0, seed=3,
+    )
+    a1 = list(rs.arrivals())
+    a2 = list(rs.arrivals())
+    assert a1 == a2, "arrival draws must replay bit-identically"
+    assert all(rs.start <= t < rs.end for t in a1)
+    assert a1 == sorted(a1)
+
+
+def test_arrival_rate_matches_mean():
+    """Thinning must deliver the configured mean rate (the sinusoid
+    averages out over whole periods)."""
+    rs = _stream(rate=100.0, duration=500.0, diurnal_amplitude=0.5,
+                 diurnal_period=100.0, seed=0)
+    n = sum(1 for _ in rs.arrivals())
+    assert 0.9 * 100.0 * 500.0 <= n <= 1.1 * 100.0 * 500.0
+
+
+# ---------------------------------------------------------------------------
+# serving metrics: unit tests on the SimResult aggregates
+# ---------------------------------------------------------------------------
+
+
+def test_slo_and_latency_metrics_fold_exactly():
+    res = SimResult()
+    lats = [0.01 * (i % 7) + 0.001 * i for i in range(200)]
+    for lat in lats:
+        res._fold_request(lat, slo=0.1)
+    assert res.n_requests == 200
+    assert res.slo_attainment == sum(1 for x in lats if x <= 0.1) / 200
+    assert res.mean_request_latency == pytest.approx(
+        sum(lats) / len(lats)
+    )
+    # below the 8192-sample buffer the estimators are exact: identical
+    # to numpy's linear-interpolation percentile over the latencies
+    np = pytest.importorskip("numpy")
+    for q in SERVE_LAT_QUANTILES:
+        assert res.request_latency_percentile(q) == pytest.approx(
+            float(np.percentile(np.asarray(lats), q))
+        )
+
+
+def test_empty_serving_lane_violates_nothing():
+    res = SimResult()
+    assert res.slo_attainment == 1.0
+    assert res.request_latency_percentile(99.0) == 0.0
+    assert res.mean_request_latency == 0.0
+
+
+def test_untracked_request_quantile_raises():
+    res = SimResult()
+    res._fold_request(0.05, slo=0.1)
+    with pytest.raises(RuntimeError, match="not tracked"):
+        res.request_latency_percentile(42.0)
+
+
+# ---------------------------------------------------------------------------
+# co-scheduling end to end
+# ---------------------------------------------------------------------------
+
+
+def _trace(n_jobs, horizon, seed=5):
+    return generate_trace(
+        TraceConfig(
+            n_jobs=n_jobs, horizon=horizon, seed=seed,
+            single_gpu_frac=0.1, max_gpus_per_job=16,
+        )
+    )
+
+
+def test_requests_served_alongside_training():
+    """A lightly-loaded co-schedule: every request meets its SLO, every
+    training job completes, and the training schedule is *unchanged* by
+    a stream that fits in slack capacity."""
+    jobs = _trace(12, 300.0)
+    rs = _stream(rate=50.0, duration=100.0, start=5.0, gpus=2,
+                 max_replicas=1, seed=1)
+    base = simulate(
+        Scenario(jobs=jobs, cluster=_cluster()), _pol(), validate=False
+    )
+    mixed = simulate(
+        Scenario(jobs=jobs, cluster=_cluster(), request_streams=(rs,)),
+        _pol(), validate=False,
+    )
+    assert mixed.n_requests > 4000
+    assert mixed.slo_attainment == 1.0
+    assert mixed.n_jobs == base.n_jobs == 12
+    assert 0 < mixed.request_latency_percentile(99.0) < rs.slo
+    assert (
+        mixed.request_latency_percentile(50.0)
+        <= mixed.request_latency_percentile(99.0)
+    )
+
+
+def test_slo_bound_requests_preempt_training():
+    """The tentpole e2e: on a saturated 3-server cluster a near-capacity
+    stream (full-server replicas) must preempt comm-heavy training
+    allocations to scale up — and every preempted job checkpoint-restarts
+    and still completes."""
+    jobs = _trace(50, 400.0)
+    rs = RequestStream(
+        stream_id=0, rate=320.0, duration=150.0, slo=0.2,
+        start=5.0, gpus=8, max_replicas=2, max_batch=8, seed=1,
+    )
+    res = simulate(
+        Scenario(jobs=jobs, cluster=_cluster(), request_streams=(rs,)),
+        _pol(), validate=False,
+    )
+    assert res.n_preemptions > 0
+    # each preemption checkpoint-restarts exactly one training job
+    assert (
+        sum(r.migrations for r in res.records.values()) == res.n_preemptions
+    )
+    # every training job still completed (simulate would raise otherwise;
+    # assert anyway — the records are the contract)
+    assert res.n_jobs == 50
+    assert all(r.completion > r.arrival for r in res.records.values())
+    # and the serving lane held its SLO while preempting
+    assert res.n_requests > 40_000
+    assert res.slo_attainment >= 0.99
+
+
+def test_streaming_serve_metrics_match_materialized():
+    """stream=True folds records away; every serving aggregate and the
+    schedule digest must come out bit-identical to the materialized
+    run."""
+    jobs = _trace(25, 200.0)
+    rs = _stream(rate=100.0, duration=80.0, start=5.0, gpus=4,
+                 max_replicas=2, seed=2)
+
+    def sc():
+        return Scenario(
+            jobs=jobs, cluster=_cluster(), request_streams=(rs,)
+        )
+
+    mat = simulate(sc(), _pol(), validate=False)
+    stm = simulate(sc(), _pol(), validate=False, stream=True)
+    assert stm.records is None
+    assert stm.schedule_digest() == mat.schedule_digest()
+    assert stm.n_requests == mat.n_requests
+    assert stm.n_slo_met == mat.n_slo_met
+    assert stm.n_preemptions == mat.n_preemptions
+    assert stm.mean_request_latency == mat.mean_request_latency
+    for q in SERVE_LAT_QUANTILES:
+        assert stm.request_latency_percentile(q) == (
+            mat.request_latency_percentile(q)
+        )
+
+
+# ---------------------------------------------------------------------------
+# the safety rail: request-free scenarios replay byte-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden_jobs():
+    return load_jobs()
+
+
+@pytest.fixture(scope="module")
+def golden_expected():
+    p = pathlib.Path(__file__).resolve().parent / "golden" / "expected.json"
+    return json.loads(p.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_request_free_goldens_byte_identical(
+    name, golden_jobs, golden_expected
+):
+    """All ten golden schedules carry no request streams: the serve lane
+    must never arm, and every digest/flow/depth/migration count must
+    stay byte-for-byte at its committed fixture."""
+    got = run_scenario(name, golden_jobs)
+    want = golden_expected[name]
+    assert got["sha256"] == want["sha256"], (
+        f"serve-lane integration drifted the request-free schedule "
+        f"{name!r}"
+    )
+    assert got["total_flow"] == want["total_flow"], name
+    assert got["peak_depth"] == want["peak_depth"], name
+    assert got["n_migrations"] == want["n_migrations"], name
+
+
+# ---------------------------------------------------------------------------
+# the CI gate: committed baseline + regression checker
+# ---------------------------------------------------------------------------
+
+
+def _baseline():
+    p = (
+        pathlib.Path(__file__).resolve().parents[1]
+        / "benchmarks" / "BENCH_serve_baseline.json"
+    )
+    return json.loads(p.read_text())
+
+
+def test_committed_serve_baseline_matches_ci_regime():
+    """The committed baseline must be regenerable by the CI command
+    (`--serve`): same regime constants, all three gated metrics
+    present, and the SLO floor actually met."""
+    data = _baseline()
+    assert data["bench"] == "sched_scale_serve"
+    assert data["n_jobs"] == sched_scale.SERVE_JOBS
+    assert data["slo_gate"] == sched_scale.SERVE_SLO_GATE
+    assert len(data["sha256"]) == 64
+    m = data["metrics"]
+    assert set(m) == {
+        "slo_attainment", "p99_request_latency_s", "train_interference"
+    }
+    assert m["slo_attainment"] >= sched_scale.SERVE_SLO_GATE
+    assert 0 < m["p99_request_latency_s"] <= sched_scale.SERVE_SLO
+    assert m["train_interference"] >= 1.0
+    assert data["n_requests"] > 500_000
+
+
+def test_check_serve_regression_clean_pass():
+    data = _baseline()
+    errors, warnings, notes = sched_scale.check_serve_regression(data, data)
+    assert errors == [] and warnings == []
+    assert notes
+
+
+def test_check_serve_regression_slo_floor_is_absolute():
+    data = _baseline()
+    bad = json.loads(json.dumps(data))
+    bad["metrics"]["slo_attainment"] = 0.9
+    errors, _, _ = sched_scale.check_serve_regression(bad, data)
+    assert any("floor" in e for e in errors)
+    # ... even when the baseline itself already drifted low
+    errors, _, _ = sched_scale.check_serve_regression(bad, bad)
+    assert any("floor" in e for e in errors)
+
+
+def test_check_serve_regression_sha_mismatch_errors():
+    data = _baseline()
+    cur = json.loads(json.dumps(data))
+    cur["sha256"] = "0" * 64
+    errors, _, _ = sched_scale.check_serve_regression(cur, data)
+    assert any("sha256" in e for e in errors)
+
+
+def test_check_serve_regression_drift_warns():
+    data = _baseline()
+    cur = json.loads(json.dumps(data))
+    cur["metrics"]["p99_request_latency_s"] *= 1.5
+    cur["sha256"] = data["sha256"]
+    errors, warnings, _ = sched_scale.check_serve_regression(cur, data)
+    assert errors == []
+    assert any("p99_request_latency_s" in w for w in warnings)
