@@ -5,7 +5,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-sched lint smoke bench-sched bench-hetero \
+.PHONY: test test-sched lint detlint smoke bench-sched bench-hetero \
 	bench-straggler bench-elastic bench-stream bench-guard \
 	bench-budget bench-trend bench-fleet bench-fleet-ab \
 	bench-predict bench-serve ci
@@ -27,6 +27,13 @@ lint:
 	else \
 		echo "ruff not installed; skipping lint (CI runs it)"; \
 	fi
+
+# Determinism & invariant linter over the scheduling core (stdlib-only;
+# what the CI detlint job runs).  Exit 1 on any unsuppressed finding or
+# reason-less suppression; docs/DETERMINISM.md maps rule ids to the
+# invariants they enforce.
+detlint:
+	python -m repro.analysis.detlint
 
 # Tier-1 + the headline scheduling figure: catches both correctness and
 # perf regressions in the scheduling engine.  Each step runs a bare
@@ -128,6 +135,6 @@ bench-serve:
 bench-fleet-ab:
 	python -m benchmarks.sched_scale --fleet-ab
 
-# What CI runs: lint + tier-1 + budget benchmark + fleet + predict +
-# serve gates.
-ci: lint test bench-budget bench-fleet bench-predict bench-serve
+# What CI runs: lint + detlint + tier-1 + budget benchmark + fleet +
+# predict + serve gates.
+ci: lint detlint test bench-budget bench-fleet bench-predict bench-serve

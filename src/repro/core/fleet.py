@@ -227,6 +227,12 @@ def run_fleet(
     queue/predictor state is never shared; only caches are).
     """
     base = base.materialize()
+    # DET003-allowlisted ([tool.detlint] run_fleet): every perf_counter
+    # in this function (fleet total, prewarm, per-variant) feeds a
+    # wall_s field on FleetResult/VariantResult/prewarm_stats — timing
+    # telemetry for the --fleet-ab speedup table.  Variant schedules and
+    # digests are produced by simulate() before the subtraction, so
+    # wall-clock jitter can never reach them.
     t_fleet = time.perf_counter()
     shared = FleetShared(base.cluster) if share else None
     prewarm_stats: Dict[str, float] = {}

@@ -1115,6 +1115,11 @@ def _simulate_scenario(
         result.records = None
         records = {}
 
+    # DET003-allowlisted ([tool.detlint] _simulate_scenario): this
+    # perf_counter
+    # pair brackets the run for SimResult.wall_s / events_per_sec —
+    # reported only, never folded into schedule decisions, completions,
+    # or the schedule digest.
     wall0 = _time.perf_counter()
     seq = itertools.count()
     # (time, kind, seq-or-epoch, payload); kind breaks time ties
@@ -1391,7 +1396,10 @@ def _simulate_scenario(
                             # touch degraded or draining capacity
                             sp = cluster.speed_factors
                             dr = cluster.draining_servers
-                            for jid in list(migration_watch):
+                            # sorted() by job id (DET001): discard-only
+                            # loop, but set order must never become an
+                            # observable sequence
+                            for jid in sorted(migration_watch):
                                 p = running[jid].placement
                                 if (
                                     not sp or sp.keys().isdisjoint(p)
@@ -1425,8 +1433,10 @@ def _simulate_scenario(
             # checkpoint-restart (its checkpoint state lived there): drop
             # it from the watch — it finishes in place, PR-2 style.
             dead = set(downed)
+            # sorted() by job id (DET001): discard-only loop, but set
+            # order must never become an observable sequence
             for jid in [
-                j for j in migration_watch
+                j for j in sorted(migration_watch)
                 if not dead.isdisjoint(running[j].placement)
             ]:
                 migration_watch.discard(jid)
@@ -1646,6 +1656,8 @@ def _simulate_scenario(
     result.peak_queue_depth = peak_depth
     result.n_migrations = n_migrations
     result.n_reestimates = n_reestimates
+    # DET003-allowlisted: wall_s lands after every record/digest above
+    # is final (see the matching comment at wall0)
     result.wall_s = _time.perf_counter() - wall0
     return result
 

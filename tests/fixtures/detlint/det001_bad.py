@@ -1,0 +1,13 @@
+"""DET001 positive fixture: set iteration feeding ordering-sensitive sinks."""
+import heapq
+
+
+def drain(pending: set, heap: list) -> None:
+    for job in pending:  # hash-order iteration pushed onto a heap
+        heapq.heappush(heap, job)
+
+
+def snapshot(watch):
+    watch = set(watch)
+    order = [jid for jid in watch]  # materializes hash order
+    return order, list(watch)

@@ -1,0 +1,14 @@
+"""DET001 negative fixture: sorted iteration + order-insensitive uses."""
+import heapq
+
+
+def drain(pending: set, heap: list) -> None:
+    for job in sorted(pending):
+        heapq.heappush(heap, job)
+
+
+def snapshot(watch):
+    watch = set(watch)
+    n = len(watch)  # order-insensitive consumers are fine
+    total = sum(1 for _ in watch)
+    return sorted(watch), n, total

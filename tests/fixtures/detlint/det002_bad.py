@@ -1,0 +1,11 @@
+"""DET002 positive fixture: global-state and unseeded RNG."""
+import random
+
+import numpy as np
+
+
+def sample() -> float:
+    jitter = random.random()  # stdlib global RNG state
+    noise = np.random.normal()  # numpy hidden global RandomState
+    rng = np.random.default_rng()  # bare: OS-entropy seeded
+    return jitter + noise + rng.random()

@@ -1,0 +1,7 @@
+"""DET002 negative fixture: explicit seeded substreams only."""
+import numpy as np
+
+
+def sample(seed: int, variant: int) -> float:
+    rng = np.random.default_rng([seed, variant])
+    return rng.random() + rng.normal()

@@ -1,0 +1,11 @@
+"""DET003 positive fixture: wall-clock reads in core logic."""
+import time as _time
+from datetime import datetime
+
+
+def stamp() -> float:
+    return _time.perf_counter()  # aliased import still resolves
+
+
+def label() -> str:
+    return datetime.now().isoformat()

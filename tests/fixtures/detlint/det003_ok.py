@@ -1,0 +1,9 @@
+"""DET003 negative fixture: virtual time threaded through."""
+
+
+def stamp(t_virtual: float) -> float:
+    return t_virtual
+
+
+def elapsed(t0: float, t1: float) -> float:
+    return t1 - t0

@@ -1,0 +1,11 @@
+"""DET004 positive fixture: unordered filesystem enumeration."""
+import glob
+import os
+from pathlib import Path
+
+
+def shards(root: str) -> list:
+    names = os.listdir(root)  # filesystem order
+    names += glob.glob(root + "/*.jsonl")
+    names += [str(p) for p in Path(root).iterdir()]
+    return names

@@ -1,0 +1,11 @@
+"""DET004 negative fixture: enumeration wrapped in sorted()."""
+import glob
+import os
+from pathlib import Path
+
+
+def shards(root: str) -> list:
+    names = sorted(os.listdir(root))
+    names += sorted(glob.glob(root + "/*.jsonl"))
+    names += sorted(str(p) for p in Path(root).iterdir())
+    return names

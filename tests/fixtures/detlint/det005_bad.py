@@ -1,0 +1,15 @@
+"""DET005 positive fixture: naive float accumulation in a digest scope."""
+
+
+# detlint: digest-path
+class FlowAggregate:
+    def __init__(self) -> None:
+        self.total_flow = 0.0
+        self.n_jobs = 0
+
+    def add(self, flow: float) -> None:
+        self.total_flow += flow  # per-add rounding: order-dependent
+        self.n_jobs += 1  # int counter: fine
+
+    def refold(self, flows) -> float:
+        return sum(flows)  # left-to-right rounding

@@ -1,0 +1,21 @@
+"""DET005 negative fixture: Shewchuk/fsum accumulation in a digest scope."""
+import math
+
+
+# detlint: digest-path
+class FlowAggregate:
+    def __init__(self) -> None:
+        self._parts = []
+        self.n_jobs = 0
+
+    def add(self, flow: float) -> None:
+        self._parts.append(flow)  # folded via fsum: order-independent
+        self.n_jobs += 1
+
+    @property
+    def total_flow(self) -> float:
+        return math.fsum(self._parts)
+
+
+def unmarked_total(flows) -> float:
+    return sum(flows)  # outside any digest scope: not DET005's business

@@ -1,0 +1,12 @@
+"""DET006 positive fixture: object identity as sort/grouping key."""
+
+
+def order(jobs: list) -> list:
+    return sorted(jobs, key=id)  # allocation-order dependent
+
+
+def group(jobs: list) -> dict:
+    by_identity: dict = {}
+    for job in jobs:
+        by_identity[id(job)] = job
+    return by_identity

@@ -1,0 +1,9 @@
+"""DET006 negative fixture: stable value-based keys."""
+
+
+def order(jobs: list) -> list:
+    return sorted(jobs, key=lambda j: j.job_id)
+
+
+def group(jobs: list) -> dict:
+    return {job.job_id: job for job in jobs}

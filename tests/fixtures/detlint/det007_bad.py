@@ -1,0 +1,13 @@
+"""DET007 positive fixture: undocumented bounded-cache eviction."""
+from collections import OrderedDict
+
+
+class Cache:
+    def __init__(self, maxsize: int) -> None:
+        self.maxsize = maxsize
+        self._lru: OrderedDict = OrderedDict()
+
+    def put(self, key, value) -> None:
+        self._lru[key] = value
+        if len(self._lru) > self.maxsize:
+            self._lru.popitem(last=False)

@@ -1,0 +1,14 @@
+"""DET007 negative fixture: eviction documented with a skip reason."""
+from collections import OrderedDict
+
+
+class Cache:
+    def __init__(self, maxsize: int) -> None:
+        self.maxsize = maxsize
+        self._lru: OrderedDict = OrderedDict()
+
+    def put(self, key, value) -> None:
+        self._lru[key] = value
+        if len(self._lru) > self.maxsize:
+            # detlint: skip=DET007(entries are pure functions of the key; recomputation is bit-identical)
+            self._lru.popitem(last=False)

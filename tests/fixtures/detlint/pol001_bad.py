@@ -1,0 +1,26 @@
+"""POL001 positive fixture: schedule() overrides outside the dispatch contract."""
+
+
+class Policy:
+    def plan_pass(self, t, cluster):
+        raise NotImplementedError
+
+    def schedule(self, t, cluster):
+        return self.plan_pass(t, cluster)  # the sanctioned delegation alias
+
+
+class ShadowedPolicy(Policy):
+    """Overrides both; schedule() never delegates -> plan_pass is dead."""
+
+    def plan_pass(self, t, cluster):
+        return ["real allocation"]
+
+    def schedule(self, t, cluster):
+        return []
+
+
+class LegacyPolicy(Policy):
+    """Pre-protocol (PR 1-4) shape: only schedule() overridden."""
+
+    def schedule(self, t, cluster):
+        return []

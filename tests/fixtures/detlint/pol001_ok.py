@@ -1,0 +1,27 @@
+"""POL001 negative fixture: the PR-5 dispatch contract, followed."""
+
+
+class Policy:
+    def plan_pass(self, t, cluster):
+        raise NotImplementedError
+
+    def schedule(self, t, cluster):
+        return self.plan_pass(t, cluster)  # delegation alias: fine
+
+
+class ProtocolPolicy(Policy):
+    """New-style: only plan_pass overridden; schedule stays the alias."""
+
+    def plan_pass(self, t, cluster):
+        return ["allocation"]
+
+
+class DelegatingPolicy(Policy):
+    """Dual override is fine when schedule() delegates."""
+
+    def plan_pass(self, t, cluster):
+        return ["allocation"]
+
+    def schedule(self, t, cluster):
+        self.last_pass_at = t
+        return self.plan_pass(t, cluster)

@@ -1,0 +1,11 @@
+"""POL002 positive fixture: frozen-dataclass mutation after construction."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Spec:
+    name: str
+    gpus: int
+
+    def rename(self, new_name: str) -> None:
+        object.__setattr__(self, "name", new_name)  # mutates a frozen value

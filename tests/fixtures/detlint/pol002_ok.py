@@ -1,0 +1,16 @@
+"""POL002 negative fixture: __post_init__ canonicalization + replace()."""
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Spec:
+    name: str
+    gpus: int
+    events: tuple = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def renamed(self, new_name: str) -> "Spec":
+        return dataclasses.replace(self, name=new_name)

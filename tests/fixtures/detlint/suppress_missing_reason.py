@@ -1,0 +1,12 @@
+"""Suppression fixture: reason-less skips must fail, not silently suppress."""
+import time
+
+
+def stamp() -> float:
+    # detlint: skip=DET003
+    return time.perf_counter()
+
+
+def stamp_empty() -> float:
+    # detlint: skip=DET003()
+    return time.time()

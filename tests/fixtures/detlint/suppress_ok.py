@@ -1,0 +1,11 @@
+"""Suppression fixture: a real finding silenced with a mandatory reason."""
+import time
+
+
+def stamp() -> float:
+    # detlint: skip=DET003(reporting-only timer in a demo; never feeds a schedule)
+    return time.perf_counter()
+
+
+def stamp_inline() -> float:
+    return time.time()  # detlint: skip=DET003(same-line suppression form)
