@@ -413,7 +413,9 @@ def all_rules() -> Dict[str, type]:
 # DET001 — unordered-container iteration
 # ---------------------------------------------------------------------------
 
-# Consumers whose result cannot observe iteration order.
+# Consumers whose result cannot observe iteration order.  ``sum`` is
+# order-insensitive only for exact (int-like) elements — float addition
+# rounds per add, so Det001SetIteration gates it on _int_like.
 _ORDER_INSENSITIVE_CONSUMERS = frozenset(
     {"set", "frozenset", "len", "any", "all", "min", "max", "sum", "sorted"}
 )
@@ -539,7 +541,9 @@ class Det001SetIteration(Rule):
                 )
         elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
             consumer = ctx.consumer_call(node)
-            if consumer in _ORDER_INSENSITIVE_CONSUMERS:
+            if consumer in _ORDER_INSENSITIVE_CONSUMERS and (
+                consumer != "sum" or _int_like(node.elt)
+            ):
                 return
             kind = (
                 "list comprehension"
@@ -949,11 +953,56 @@ def _toml_unescape(s: str) -> str:
     )
 
 
+def _split_toml_array(inner: str) -> List[str]:
+    """Split array body on top-level commas, respecting quoted strings."""
+    parts: List[str] = []
+    buf: List[str] = []
+    quote = ""
+    escaped = False
+    for ch in inner:
+        if escaped:
+            buf.append(ch)
+            escaped = False
+            continue
+        if quote == '"' and ch == "\\":
+            buf.append(ch)
+            escaped = True
+            continue
+        if quote:
+            buf.append(ch)
+            if ch == quote:
+                quote = ""
+        elif ch in ('"', "'"):
+            quote = ch
+            buf.append(ch)
+        elif ch == ",":
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    parts.append("".join(buf))
+    return parts
+
+
 def _parse_toml_value(text: str) -> object:
     text = text.strip()
     if text.startswith("["):
+        if not text.endswith("]"):
+            raise UsageError(
+                f"unterminated array in [tool.detlint] config: {text!r}"
+            )
         vals: List[str] = []
-        for m in _TOML_STRING.finditer(text):
+        for part in _split_toml_array(text[1:-1]):
+            part = part.strip()
+            if not part:  # trailing comma
+                continue
+            m = _TOML_STRING.fullmatch(part)
+            if m is None:
+                raise UsageError(
+                    f"unsupported TOML array element in [tool.detlint] "
+                    f"config: {part!r} (the 3.10 mini-parser supports "
+                    "string arrays only)"
+                )
             vals.append(
                 _toml_unescape(m.group(1)) if m.group(1) is not None
                 else m.group(2)
@@ -1373,8 +1422,10 @@ def _emit_github(report: Report, out) -> None:
     for f in report.unsuppressed:
         msg = f.message + (f" — {f.hint}" if f.hint else "")
         msg = msg.replace("%", "%25").replace("\n", "%0A")
+        # Annotation columns are 1-based; Finding.col is an ast
+        # col_offset (0-based).
         print(
-            f"::error file={f.path},line={f.line},col={f.col},"
+            f"::error file={f.path},line={f.line},col={f.col + 1},"
             f"title=detlint {f.rule}::{msg}",
             file=out,
         )
@@ -1462,4 +1513,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    # Under ``python -m repro.analysis.detlint`` this module object is
+    # registered only as ``__main__``; ``all_rules()``'s
+    # ``from . import policy_rules`` would then re-import detlint under
+    # its canonical name, and the POL rules would register into that
+    # second copy's registry instead of this one.  Alias the canonical
+    # name to this module (or, if a canonical copy somehow already
+    # exists, delegate to it) so there is exactly one registry.
+    _canonical = sys.modules.setdefault(
+        "repro.analysis.detlint", sys.modules[__name__]
+    )
+    sys.exit(_canonical.main())

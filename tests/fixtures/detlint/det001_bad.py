@@ -11,3 +11,9 @@ def snapshot(watch):
     watch = set(watch)
     order = [jid for jid in watch]  # materializes hash order
     return order, list(watch)
+
+
+def total_weight(pending: set) -> float:
+    # sum() over floats is order-dependent (per-add rounding), so set
+    # iteration order leaks into the result
+    return sum(j.w for j in pending)

@@ -12,3 +12,8 @@ def snapshot(watch):
     n = len(watch)  # order-insensitive consumers are fine
     total = sum(1 for _ in watch)
     return sorted(watch), n, total
+
+
+def count_shards(watch):
+    watch = set(watch)
+    return sum(len(w) for w in watch)  # int-like sum: exact, order-free

@@ -52,7 +52,7 @@ def rules_hit(report, unsuppressed_only=True):
 
 MATRIX = [
     # (bad fixture, rule, expected finding count)
-    ("det001_bad.py", "DET001", 3),  # for-loop, listcomp, list()
+    ("det001_bad.py", "DET001", 4),  # for-loop, listcomp, list(), float sum
     ("det002_bad.py", "DET002", 3),  # random.*, np.random.<fn>, bare rng
     ("det003_bad.py", "DET003", 2),  # aliased perf_counter, datetime.now
     ("det004_bad.py", "DET004", 3),  # listdir, glob, iterdir
@@ -228,6 +228,23 @@ def test_mini_parser_rejects_unsupported_values():
         _parse_detlint_toml("[tool.detlint]\npaths = { a = 1 }\n")
 
 
+def test_mini_parser_rejects_non_string_array_elements():
+    # a malformed array must fail loudly, not silently parse to []
+    with pytest.raises(UsageError, match="array element"):
+        _parse_detlint_toml("[tool.detlint]\npaths = [1, 2]\n")
+    with pytest.raises(UsageError, match="array element"):
+        _parse_detlint_toml('[tool.detlint]\npaths = ["a", true]\n')
+
+
+def test_mini_parser_array_commas_and_trailing_comma():
+    data = _parse_detlint_toml(
+        '[tool.detlint]\npaths = ["a,b", "c", ]\nempty = []\n'
+    )
+    det = data["tool"]["detlint"]
+    assert det["paths"] == ["a,b", "c"]
+    assert det["empty"] == []
+
+
 # ---------------------------------------------------------------------------
 # Rule registry / engine plumbing
 # ---------------------------------------------------------------------------
@@ -252,6 +269,23 @@ def test_per_rule_exclude_skips_files():
     cfg = Config(root=FIXTURES, per_rule_exclude={"DET003": ["det003_*"]})
     report = run_fixture("det003_bad.py", config=cfg)
     assert "DET003" not in rules_hit(report)
+
+
+def test_det001_sum_over_set_cleared_only_for_int_like(tmp_path):
+    # sum() is order-insensitive only for exact (int-like) elements:
+    # float summation rounds per add, so set order leaks into it
+    p = tmp_path / "m.py"
+    p.write_text(
+        "s = {1.5, 2.5}\n"
+        "total = sum(x for x in s)\n"       # flagged: float-valued
+        "n = sum(1 for _ in s)\n"           # cleared: counter
+        "k = sum(len(str(x)) for x in s)\n"  # cleared: len() is exact
+    )
+    report = lint_paths([str(p)], config=Config(root=tmp_path))
+    hits = [f for f in report.unsuppressed if f.rule == "DET001"]
+    assert [f.line for f in hits] == [2], [
+        (f.line, f.message) for f in hits
+    ]
 
 
 def test_det005_config_scope_without_marker(tmp_path):
@@ -311,6 +345,21 @@ def test_cli_github_format(capsys):
     )
 
 
+def test_cli_github_columns_are_one_based(capsys):
+    # GitHub annotations are 1-based; Finding.col is a 0-based ast
+    # col_offset, so every annotation must shift by one
+    bad = str(FIXTURES / "det001_bad.py")
+    report = lint_paths([bad], config=Config(root=FIXTURES))
+    cols0 = [f.col for f in report.unsuppressed]
+    assert cols0, "fixture produced no findings"
+    rc = cli(bad, "--no-config", "--format=github")
+    out = capsys.readouterr().out
+    ann = [int(m.group(1)) for m in re.finditer(r",col=(\d+),", out)]
+    assert rc == 1
+    assert sorted(ann) == sorted(c + 1 for c in cols0)
+    assert min(ann) >= 1
+
+
 def test_cli_list_rules(capsys):
     assert cli("--list-rules") == 0
     out = capsys.readouterr().out
@@ -331,6 +380,32 @@ def test_cli_module_entry_point_fails_on_seeded_violation():
     )
     assert proc.returncode == 1, proc.stderr
     assert "::error " in proc.stdout and "DET002" in proc.stdout
+
+
+def _run_module_cli(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.detlint", *argv],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+
+
+def test_cli_module_entry_point_enforces_policy_rules():
+    # regression: under `python -m` the module runs as __main__;
+    # all_rules()'s `from . import policy_rules` must register the POL
+    # rules into *this* registry, not a second canonical-name copy —
+    # otherwise the exact command CI runs silently skips POL001/POL002
+    listing = _run_module_cli("--list-rules")
+    assert listing.returncode == 0, listing.stderr
+    assert "POL001" in listing.stdout and "POL002" in listing.stdout
+
+    proc = _run_module_cli(
+        str(FIXTURES / "pol001_bad.py"),
+        str(FIXTURES / "pol002_bad.py"),
+        "--no-config",
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "POL001" in proc.stdout and "POL002" in proc.stdout
 
 
 # ---------------------------------------------------------------------------
